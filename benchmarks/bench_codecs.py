@@ -1,0 +1,35 @@
+"""§2 'compressed sharing' + §4 wire budget: codec ratio/error/throughput
+
+table over a 4M-element weight vector (the scale of one small layer)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_call
+from repro.core import compression
+
+
+def run() -> None:
+    n = 1 << 22
+    v = jnp.asarray(np.random.RandomState(0).randn(n) * 0.02, jnp.float32)
+    for codec in compression.CODECS:
+        payload = compression.encode(v, codec)
+        ratio = compression.compression_ratio(payload, n)
+        r = compression.decode(payload, n)
+        err = float(jnp.max(jnp.abs(r - v)))
+        us = time_call(lambda: compression.encode(v, codec), iters=3)
+        emit(f"codec/{codec}", us,
+             f"ratio={ratio:.1f}x;max_abs_err={err:.5f};"
+             f"MBps={n*4/us:.0f}")
+    # the internet-vs-datacenter motivation (paper §4): time to ship one
+    # 100 MiB layer at 100 Mbps, per codec
+    for codec in compression.CODECS:
+        payload = compression.encode(v, codec)
+        nbytes = compression.payload_bytes(payload) * (100 * 2**20) / (n * 4)
+        secs = nbytes * 8 / 100e6
+        emit(f"codec_wire_100Mbps/{codec}", 0.0, f"seconds={secs:.1f}")
+
+
+if __name__ == "__main__":
+    run()

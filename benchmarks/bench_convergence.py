@@ -1,0 +1,77 @@
+"""Paper Fig 5: convergence of the bottleneck-Llama vs the uncompressed
+
+baseline at 32x / 64x / 128x compression (fp32 basis).
+
+CPU-scale reproduction: a reduced-width Llama3 family model trained on the
+structured synthetic corpus for a few hundred steps; reported: the final
+train loss per variant and the gap to baseline.  The paper's claim under
+test: 'increasing the compression ratio from 32x to 128x resulted in only a
+slight degradation in convergence' and near-baseline convergence overall.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_call
+from repro import configs
+from repro.configs.base import BottleneckConfig
+from repro.data.pipeline import DataConfig, SyntheticCorpus
+from repro.models import build_model
+
+STEPS = 150
+SEQ = 128
+BATCH = 16
+
+
+def train_variant(n_bottlenecks: int, bottleneck_dim: int, steps=STEPS):
+    cfg = configs.smoke_variant(configs.get("iota-bottleneck-1.5b"))
+    mcfg = dataclasses.replace(
+        cfg.model,
+        d_model=128, n_layers=8, n_heads=8, n_kv_heads=4, d_head=16,
+        d_ff=512, vocab_size=2048,
+        bottleneck=BottleneckConfig(n_bottlenecks=n_bottlenecks,
+                                    bottleneck_dim=bottleneck_dim))
+    cfg = dataclasses.replace(cfg, model=mcfg)
+    model = build_model(cfg)
+    corpus = SyntheticCorpus(DataConfig(vocab_size=2048, seq_len=SEQ,
+                                        batch_size=BATCH, seed=0))
+    state = model.init_train_state(jax.random.key(0))
+    step = jax.jit(lambda s, b: model.train_step(s, b))
+    losses = []
+    for t in range(steps):
+        batch = {k: jnp.asarray(v) for k, v in corpus.batch(t).items()}
+        state, m = step(state, batch)
+        losses.append(float(m["loss"]))
+    tail = sum(losses[-10:]) / 10
+    return losses, tail
+
+
+def run() -> None:
+    # ratios are vs fp32 at this reduced width (d_model=128): dim 8 -> 32x,
+    # dim 4 -> 64x, dim 2 -> 128x — same geometry as the paper's 2048/32
+    variants = [
+        ("baseline", 0, 0),
+        ("bottleneck_32x", 3, 8),
+        ("bottleneck_64x", 3, 4),
+        ("bottleneck_128x", 3, 2),
+    ]
+    results = {}
+    for name, n_b, dim in variants:
+        losses, tail = train_variant(n_b, dim)
+        results[name] = (losses[0], tail)
+        emit(f"fig5_convergence/{name}", 0.0,
+             f"first={losses[0]:.3f};final={tail:.3f}")
+    base = results["baseline"][1]
+    for name in ("bottleneck_32x", "bottleneck_64x", "bottleneck_128x"):
+        gap = results[name][1] - base
+        emit(f"fig5_gap/{name}", 0.0, f"gap_to_baseline={gap:+.3f}")
+    # the paper's 32x->128x claim: degradation between ratios is slight
+    slight = results["bottleneck_128x"][1] - results["bottleneck_32x"][1]
+    emit("fig5_claim/32x_to_128x_degradation", 0.0, f"delta={slight:+.3f}")
+
+
+if __name__ == "__main__":
+    run()

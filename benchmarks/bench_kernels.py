@@ -1,0 +1,58 @@
+"""Kernel-level benchmark: VMEM working sets per BlockSpec tiling + CPU
+
+oracle throughput (the TPU numbers come from the §Roofline dry-run; this
+table documents that every kernel's working set fits the ~16 MiB VMEM/core
+budget at its production tiling)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_call
+from repro.common import human_bytes
+from repro.kernels import ops
+
+
+def vmem_working_sets() -> None:
+    cases = [
+        # kernel, tiling description, bytes resident per grid step
+        ("flash_attention", "bq=bkv=512,D=128,bf16",
+         (512 * 128 * 2) * 3 + 512 * 128 * 4 + 512 * 2 * 4),
+        ("bottleneck_encode", "rows=256,d=7168,db=128",
+         256 * 7168 * 2 + 7168 * 128 * 4 + 256 * 128 * 2 + 7168 * 4),
+        ("bottleneck_decode", "rows=256,d=7168,db=128",
+         256 * 128 * 2 + 128 * 7168 * 4 + 2 * 256 * 7168 * 2),
+        ("quant_stream", "rows=512,block=256",
+         512 * 256 * 4 + 512 * 256 + 512 * 4),
+        ("shard_merge", "miners=16,cols=16384",
+         16 * 16384 * 4 + 16384 * 4 + 16 * 4),
+    ]
+    budget = 16 * 2**20
+    for name, tiling, nbytes in cases:
+        emit(f"kernel_vmem/{name}", 0.0,
+             f"{tiling};working_set={human_bytes(nbytes)};"
+             f"fits_16MiB={nbytes < budget}")
+
+
+def oracle_throughput() -> None:
+    rng = np.random.RandomState(0)
+    x = jnp.asarray(rng.randn(8, 512, 2048), jnp.bfloat16)
+    gamma = jnp.ones(2048, jnp.float32)
+    wd = jnp.asarray(rng.randn(2048, 32) * 0.02, jnp.float32)
+    us = time_call(lambda: ops.bottleneck_encode(x, gamma, wd))
+    emit("bottleneck_encode_8x512x2048", us,
+         f"{8*512*2048*2/us:.0f}MBps_in")
+
+    q = jnp.asarray(rng.randn(1, 1024, 8, 64), jnp.bfloat16)
+    k = jnp.asarray(rng.randn(1, 1024, 2, 64), jnp.bfloat16)
+    us = time_call(lambda: ops.flash_attention(q, k, k))
+    emit("attention_1x1024_gqa", us, f"seq=1024;gqa=4:1")
+
+
+def run() -> None:
+    vmem_working_sets()
+    oracle_throughput()
+
+
+if __name__ == "__main__":
+    run()

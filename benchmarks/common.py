@@ -1,0 +1,27 @@
+"""Benchmark harness utilities: timing + the CSV contract of run.py."""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+
+
+def time_call(fn: Callable, *args, warmup: int = 1, iters: int = 5) -> float:
+    """Median wall-time per call in microseconds (results block_until_ready)."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    """The run.py output contract: ``name,us_per_call,derived`` CSV rows."""
+    print(f"{name},{us_per_call:.1f},{derived}")

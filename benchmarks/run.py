@@ -1,0 +1,52 @@
+"""Benchmark harness entry point: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit).
+
+  fig5   bench_convergence        — bottleneck compression vs baseline
+  fig7   bench_butterfly          — agreement matrix, resilience, §5.3 bytes
+  fig8   bench_clasp              — CLASP attribution + detection rates
+  fig9   bench_incentive_stability— stability vs (T_s, gamma)
+  §2     bench_codecs             — compressed-sharing codec table
+  §2.1   bench_swarm              — B_eff / straggler / store traffic
+  kernels bench_kernels           — VMEM working sets + oracle throughput
+  §Roofline bench_roofline        — dry-run roofline table
+"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+MODULES = [
+    "benchmarks.bench_convergence",
+    "benchmarks.bench_butterfly",
+    "benchmarks.bench_clasp",
+    "benchmarks.bench_incentive_stability",
+    "benchmarks.bench_codecs",
+    "benchmarks.bench_swarm",
+    "benchmarks.bench_kernels",
+    "benchmarks.bench_roofline",
+]
+
+
+def main() -> None:
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    failures = 0
+    for mod_name in MODULES:
+        if only and only not in mod_name:
+            continue
+        t0 = time.time()
+        print(f"# === {mod_name} ===", flush=True)
+        try:
+            mod = __import__(mod_name, fromlist=["run"])
+            mod.run()
+        except Exception:  # noqa: BLE001 — keep the harness going
+            traceback.print_exc()
+            failures += 1
+        print(f"# {mod_name} done in {time.time()-t0:.1f}s", flush=True)
+    if failures:
+        raise SystemExit(f"{failures} benchmark modules failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""Quickstart: train the paper's bottleneck-Llama (reduced config) end to end.
+
+Trains a ~100M-scale-pattern model (smoke width) for a few hundred steps on
+the synthetic corpus with checkpointing, then samples a continuation —
+the end-to-end driver deliverable.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.checkpoint import CheckpointManager
+from repro.core.bottleneck import compression_report
+from repro.data.pipeline import DataConfig, SyntheticCorpus
+from repro.launch.serve import generate
+from repro.models import build_model
+
+STEPS = 300
+BATCH, SEQ = 16, 128
+
+
+def main():
+    cfg = configs.smoke_variant(configs.get("iota-bottleneck-1.5b"))
+    print("arch:", cfg.model.arch_id, "| params:",
+          f"{cfg.model.param_count()/1e6:.1f}M (reduced config)")
+    print("compression:", compression_report(cfg.model))
+
+    model = build_model(cfg)
+    corpus = SyntheticCorpus(DataConfig(vocab_size=cfg.model.vocab_size,
+                                        seq_len=SEQ, batch_size=BATCH, seed=0))
+    ckpt = CheckpointManager("/tmp/iota_quickstart_ckpt", keep=2)
+    state = model.init_train_state(jax.random.key(0))
+
+    step_fn = jax.jit(lambda s, b: model.train_step(s, b))
+    losses = []
+    for t in range(STEPS):
+        batch = {k: jnp.asarray(v) for k, v in corpus.batch(t).items()}
+        state, metrics = step_fn(state, batch)
+        losses.append(float(metrics["loss"]))
+        if (t + 1) % 50 == 0:
+            ckpt.save(t + 1, state)
+            print(f"step {t+1:4d} | loss {losses[-1]:.4f} "
+                  f"| grad_norm {float(metrics['grad_norm']):.3f}")
+    ckpt.wait()
+    print(f"\nloss: {losses[0]:.3f} -> {sum(losses[-10:])/10:.3f} "
+          f"over {STEPS} steps")
+
+    prompt = jnp.asarray(corpus.batch(10_000)["tokens"][:2, :32])
+    out = generate(model, state.params, prompt, max_new=16)
+    print("sample continuation ids:", out[0, -16:].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,14 @@
+"""Batched serving demo: prefill + decode with KV cache over the public API.
+
+    PYTHONPATH=src python examples/serve_demo.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    main(["--arch", "llama3.2-1b", "--smoke", "--requests", "4",
+          "--prompt-len", "32", "--max-new", "24", "--temperature", "0.8"])

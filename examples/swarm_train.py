@@ -1,0 +1,57 @@
+"""Decentralized swarm training demo — the paper's full Fig 1/Fig 2 loop.
+
+An orchestrator drives miners (layer-slice workers) and validators through
+training / compressed-sharing / butterfly full-sync / validation epochs,
+with a straggler, a dropper and a free-riding adversary injected.  Watch:
+loss falls, the validator catches the cheat, CLASP ranks it worst, and
+emissions follow validated work.
+
+    PYTHONPATH=src python examples/swarm_train.py
+"""
+import dataclasses
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from repro import configs
+from repro.runtime import FaultModel, MinerBehavior, Orchestrator, SwarmConfig
+
+
+def main():
+    mcfg = dataclasses.replace(
+        configs.smoke_variant(configs.get("llama3.2-1b")).model, n_layers=6)
+    swarm = SwarmConfig(n_stages=3, miners_per_stage=3, inner_steps=24,
+                        b_min=3, batch_size=4, seq_len=64, compress=True,
+                        bottleneck_dim=16, validators=4, seed=0)
+    faults = FaultModel({
+        2: MinerBehavior(free_ride=True),          # adversary (stage 0)
+        4: MinerBehavior(straggle_factor=3.0),     # slow hardware (stage 1)
+        7: MinerBehavior(drop_prob=0.4),           # flaky node (stage 2)
+    }, seed=0)
+    orch = Orchestrator(mcfg, swarm, faults=faults)
+
+    print(f"swarm: {swarm.n_stages} stages x {swarm.miners_per_stage} miners, "
+          f"wire={swarm.bottleneck_dim}-d bottleneck codes "
+          f"(vs {mcfg.d_model}-d residuals)")
+    for epoch in range(5):
+        s = orch.run_epoch()
+        flagged = (np.where(s.clasp.flagged)[0].tolist()
+                   if s.clasp is not None else [])
+        cheats = [r.miner_uid for r in s.validation if not r.honest]
+        print(f"epoch {s.epoch}: loss {s.mean_loss:.3f} | B_eff {s.b_eff} "
+              f"| merged {s.merged_stages}/{swarm.n_stages} stages "
+              f"| validator-caught {sorted(set(cheats))} "
+              f"| clasp-flagged {flagged}")
+    last = orch.history[-1]
+    print("\nfinal emissions (miner: share):")
+    for uid, share in sorted(last.emissions.items()):
+        tag = " <- free-rider" if uid == 2 else ""
+        print(f"  miner {uid}: {share:.3f}{tag}")
+    print("\nstore traffic:", orch.store.traffic_report()["uploaded"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Generate the §Dry-run / §Roofline markdown tables from dryrun_all.json."""
+import json
+import sys
+
+HW = "v5e: 197 TFLOP/s bf16, 819 GB/s HBM, 50 GB/s/link ICI"
+PEAK = 197e12
+
+
+def fmt(records, mesh):
+    rows = []
+    for r in records:
+        if r.get("mesh") != mesh or r.get("status") != "ok":
+            continue
+        mem = (r.get("memory_per_device") or {}).get("total_bytes", 0) / 2**30
+        t_dom = max(r["t_compute"], r["t_memory"], r["t_collective"])
+        ideal = r["model_flops"] / (r["chips"] * PEAK)
+        frac = ideal / t_dom if t_dom > 0 else 0.0
+        rows.append((r["arch"], r["shape"], r["t_compute"], r["t_memory"],
+                     r["t_collective"], r["bottleneck"],
+                     r["useful_fraction"], frac, mem,
+                     r["compile_seconds"], r.get("t_memory_kernelized", 0.0)))
+    return rows
+
+
+def main():
+    with open(sys.argv[1] if len(sys.argv) > 1 else "dryrun_all.json") as f:
+        records = json.load(f)
+    for mesh, chips in (("single_pod", 256), ("multi_pod", 512)):
+        print(f"\n### {mesh} ({chips} chips) — {HW}\n")
+        print("| arch | shape | t_comp (s) | t_mem (s) | t_mem_kern (s) |"
+              " t_coll (s) | bound | useful | roofline frac | GiB/dev |")
+        print("|---|---|---|---|---|---|---|---|---|---|")
+        for row in fmt(records, mesh):
+            a, s, tc, tm, tl, b, u, f, mem, cs, tmk = row
+            print(f"| {a} | {s} | {tc:.4f} | {tm:.4f} | {tmk:.4f} |"
+                  f" {tl:.4f} | {b} | {u:.2f} | {f:.3f} | {mem:.1f} |")
+    # hillclimb candidate ranking
+    print("\n### candidates\n")
+    sp = fmt(records, "single_pod")
+    worst = sorted(sp, key=lambda r: r[7])[:6]
+    print("worst roofline fraction:")
+    for r in worst:
+        print(f"  {r[0]} x {r[1]}: frac={r[7]:.4f} bound={r[5]}")
+    coll = sorted(sp, key=lambda r: -(r[4] / max(max(r[2], r[3], r[4]), 1e-12)
+                                      if r[5] == 'collective' else
+                                      r[4] / max(r[2], r[3], r[4], 1e-12)))[:6]
+    print("most collective-bound (t_coll share):")
+    for r in coll:
+        share = r[4] / max(r[2], r[3], r[4])
+        print(f"  {r[0]} x {r[1]}: t_coll={r[4]:.4f}s share={share:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""llava-next-34b [vlm] — anyres tiling — [hf:llava-hf/llava-v1.6-mistral-7b-hf;
+
+unverified].  Backbone only per the assignment; the ViT frontend is a stub
+(``input_specs`` feeds 2880 = 5 tiles x 576 precomputed patch embeddings).
+"""
+from repro.configs.base import ArchConfig, ModelConfig, ParallelConfig
+from repro.models.frontends import LLAVA_FRONTEND_TOKENS
+
+CONFIG = ArchConfig(
+    model=ModelConfig(
+        arch_id="llava-next-34b",
+        family="vlm",
+        n_layers=60,
+        d_model=7168,
+        n_heads=56,          # 56 % 16 != 0 -> attention uses batch-reshard
+        n_kv_heads=8,
+        d_ff=20480,
+        vocab_size=64000,
+        frontend_tokens=LLAVA_FRONTEND_TOKENS,
+        rope_theta=5_000_000.0,
+    ),
+    parallel=ParallelConfig(grad_accum=16, fsdp=True),
+    source="hf:llava-hf/llava-v1.6-mistral-7b-hf; unverified",
+)

@@ -1,0 +1,17 @@
+"""IOTA core: the paper's five contributions as composable JAX modules.
+
+C1 pipeline.py + diloco.py   — SWARM data+pipeline parallelism, B_min/B_eff
+C2 incentives.py             — granular continuous incentives + stability
+C3 bottleneck.py             — 128x activation compression, residual-preserving
+C4 butterfly.py              — O(1) redundant all-reduce + agreement matrix
+C5 clasp.py                  — pathway-sampling contribution attribution
+"""
+from repro.core import (  # noqa: F401
+    bottleneck,
+    butterfly,
+    clasp,
+    compression,
+    diloco,
+    incentives,
+    pipeline,
+)

@@ -1,0 +1,115 @@
+"""Paper §4: bottleneck transformer blocks with uninterrupted residual flow.
+
+Fig 4 defines three block types.  Our faithful formulation (the paper gives
+the figure, not equations — the interpretation below preserves every stated
+property: residual pathway crosses the boundary *only* through the
+compressed code, partial residuals are mixed into attention-layer outputs on
+both sides, activations AND their gradients are compressed symmetrically):
+
+  vanilla block        a = x + attn(norm(x));  y = a + mlp(norm(a))
+  bottleneck block     a = α_enc·x + attn(norm(x));  h = a + mlp(norm(a))
+                       z = cast_bf16( norm(h) @ W_down )          # wire code
+  post-bottleneck blk  r = z @ W_up                                # carrier
+                       a = α_dec·r + attn(norm(r));  y = a + mlp(norm(a))
+
+z has width ``bottleneck_dim`` (32 on a 2048-d model ⇒ 64× dim reduction;
+bf16-on-wire ⇒ the paper's 128× vs fp32).  Because z is produced by a *block
+output* (post-attention/post-MLP hidden with the partial residual already
+folded in), gradient flow back through the boundary passes through W_down/W_up
+but never through a zero-residual gap — the property the paper credits for
+preserved convergence.
+
+The encode/decode matmuls are the compression hot-spot; on TPU they run as
+the fused Pallas kernel (``kernels/bottleneck_fused.py``): RMSNorm + matmul +
+cast in one VMEM pass instead of three HBM round-trips of the full-width
+activation.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import BottleneckConfig, ModelConfig
+from repro.kernels import ops
+from repro.models.layers import dense_init, norm_init
+
+
+def init_boundary(key, cfg: ModelConfig) -> dict:
+    """Params for one bottleneck boundary (encoder + decoder sides)."""
+    d, db = cfg.d_model, cfg.bottleneck.bottleneck_dim
+    ks = jax.random.split(key, 2)
+    return {
+        "enc_norm": norm_init(d),
+        "w_down": dense_init(ks[0], d, db),
+        "w_up": dense_init(ks[1], db, d, scale=1.0 / np.sqrt(db)),
+        "alpha_enc": jnp.asarray(1.0, jnp.float32),
+        "alpha_dec": jnp.asarray(cfg.bottleneck.residual_alpha, jnp.float32),
+    }
+
+
+def encode(params: dict, h: jax.Array, cfg: ModelConfig,
+           wire_dtype=jnp.bfloat16) -> jax.Array:
+    """Block-output hidden (…, d_model) -> wire code (…, bottleneck_dim)."""
+    return ops.bottleneck_encode(h, params["enc_norm"], params["w_down"],
+                                 eps=cfg.norm_eps, wire_dtype=wire_dtype)
+
+
+def decode(params: dict, z: jax.Array, cfg: ModelConfig,
+           out_dtype=jnp.bfloat16) -> jax.Array:
+    """Wire code -> full-width residual carrier r = z @ W_up."""
+    zero_res = jnp.zeros(z.shape[:-1] + (cfg.d_model,), out_dtype)
+    return ops.bottleneck_decode(z, params["w_up"], zero_res,
+                                 jnp.asarray(0.0, jnp.float32),
+                                 out_dtype=out_dtype)
+
+
+def boundary_positions(n_layers: int, n_bottlenecks: int) -> list[int]:
+    """Equally spaced boundary positions (index of the *bottleneck* block).
+
+    A boundary at position p means: block p is a bottleneck block, block p+1
+    is the post-bottleneck block.  With n_b boundaries the stack is split
+    into n_b+1 pipeline stages.
+    """
+    if n_bottlenecks == 0:
+        return []
+    assert n_layers >= 2 * n_bottlenecks, (
+        f"{n_layers} layers cannot host {n_bottlenecks} bottleneck/post pairs")
+    # n_layers = regular blocks + 2 per boundary; spread the regular blocks
+    # across the n_b+1 segments as evenly as possible (same scheme as
+    # models.transformer.plan_layout, so docs/tests/layout agree)
+    scanned = n_layers - 2 * n_bottlenecks
+    base, extra = divmod(scanned, n_bottlenecks + 1)
+    segs = [base + (1 if i < extra else 0) for i in range(n_bottlenecks + 1)]
+    pos, cursor = [], 0
+    for i in range(n_bottlenecks):
+        cursor += segs[i]
+        pos.append(cursor)          # the bottleneck block itself
+        cursor += 2                 # bn + post-bn pair
+    assert pos[-1] <= n_layers - 2
+    return pos
+
+
+def wire_bytes_per_token(cfg: ModelConfig, wire_dtype=jnp.bfloat16) -> int:
+    """Bytes per token per boundary hop — the number the paper's 128x targets."""
+    itemsize = jnp.dtype(wire_dtype).itemsize
+    if cfg.bottleneck.enabled:
+        return cfg.bottleneck.bottleneck_dim * itemsize
+    return cfg.d_model * itemsize
+
+
+def compression_report(cfg: ModelConfig) -> dict:
+    """Ratios against the paper's fp32 full-width basis and the bf16 basis."""
+    b = cfg.bottleneck
+    full_fp32 = cfg.d_model * 4
+    full_bf16 = cfg.d_model * 2
+    wire = wire_bytes_per_token(cfg)
+    return {
+        "bottlenecks": b.n_bottlenecks,
+        "bottleneck_dim": b.bottleneck_dim,
+        "wire_bytes_per_token": wire,
+        "ratio_vs_fp32": full_fp32 / wire,     # paper's headline number
+        "ratio_vs_bf16": full_bf16 / wire,     # on-wire vs native bf16
+    }

@@ -1,0 +1,368 @@
+"""Pipeline-parallel engine (paper C1 + C3 on-mesh): GPipe-style schedule in
+
+``shard_map`` with the ``model`` mesh axis as the stage axis, streaming
+microbatch activations stage-to-stage via ``ppermute`` — and, when
+``compress=True``, streaming the paper's *bottleneck codes* (width d_b)
+instead of full-width activations, cutting inter-stage bytes by
+d_model/d_b (64x for the paper's 2048->32).
+
+Faithfulness map:
+  miners on one layer-slice   -> devices in one model-axis row
+  S3 activation hand-off      -> ppermute along ``model``
+  bottleneck block at miner Tx-> encode at stage exit (stage owns W_down)
+  post-bottleneck at miner Rx -> decode at stage entry (stage owns W_up of
+                                 the previous boundary)
+  DP across pipeline replicas -> ``data`` (x ``pod``) axes
+
+The schedule is plain GPipe: T = n_micro + n_stages - 1 ticks; autodiff
+through the tick scan gives the backward pipeline automatically (transpose
+of ppermute = reverse-direction ppermute), so gradients of the wire codes
+are compressed exactly like activations — the paper's symmetrical 128x.
+
+Used by ``--strategy pipeline`` for dense-family archs and by the §Perf
+paper-representative hillclimb cell.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ModelConfig
+from repro.models import blocks as blk
+from repro.models.layers import (
+    dense_init,
+    init_embeddings,
+    next_token_loss,
+    norm_init,
+    rmsnorm,
+)
+from repro.models.layers import embed as embed_fn
+from repro.models.layers import logits as logits_fn
+
+try:
+    shard_map = jax.shard_map
+except AttributeError:  # pragma: no cover
+    from jax.experimental.shard_map import shard_map  # type: ignore
+
+
+@dataclasses.dataclass(frozen=True)
+class PipelineSpec:
+    n_stages: int
+    n_microbatches: int
+    compress: bool = True            # stream bottleneck codes, not residuals
+    bottleneck_dim: int = 32
+    wire_dtype: Any = jnp.bfloat16
+
+    def wire_width(self, cfg: ModelConfig) -> int:
+        return self.bottleneck_dim if self.compress else cfg.d_model
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+
+def init_pipeline_params(key, cfg: ModelConfig, spec: PipelineSpec) -> dict:
+    """Stage-stacked layout: every leading axis ``n_stages`` shards over
+
+    ``model``.  Stage s owns: its block slice, W_down of boundary s (encode
+    at exit; unused on the last stage) and W_up of boundary s-1 (decode at
+    entry; unused on stage 0)."""
+    kinds = blk.period_kinds(cfg)
+    assert kinds in (["attn_dense"], ["attn_moe"]), (
+        "pipeline strategy supports uniform decoder stacks; "
+        f"{cfg.arch_id} period={kinds}")
+    kind = kinds[0]
+    assert cfg.n_layers % spec.n_stages == 0, (cfg.n_layers, spec.n_stages)
+    l_per = cfg.n_layers // spec.n_stages
+
+    ks = jax.random.split(key, 4)
+    stages = []
+    for s in range(spec.n_stages):
+        layers = [blk.init_block(jax.random.fold_in(ks[0], s * 1000 + l),
+                                 kind, cfg) for l in range(l_per)]
+        stages.append(jax.tree.map(lambda *xs: jnp.stack(xs), *layers))
+    stage_blocks = jax.tree.map(lambda *xs: jnp.stack(xs), *stages)
+
+    d, db = cfg.d_model, spec.bottleneck_dim
+    params = {
+        "embeds": init_embeddings(ks[1], cfg),
+        "final_norm": norm_init(cfg.d_model),
+        "stages": {"blocks": stage_blocks},
+    }
+    if spec.compress:
+        params["stages"]["enc_norm"] = jnp.ones((spec.n_stages, d), jnp.float32)
+        params["stages"]["w_down"] = jnp.stack([
+            dense_init(jax.random.fold_in(ks[2], s), d, db)
+            for s in range(spec.n_stages)])
+        params["stages"]["w_up_prev"] = jnp.stack([
+            dense_init(jax.random.fold_in(ks[3], s), db, d,
+                       scale=1.0 / np.sqrt(db))
+            for s in range(spec.n_stages)])
+        params["stages"]["alpha_dec"] = jnp.full((spec.n_stages,),
+                                                 0.5, jnp.float32)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# The pipelined forward
+# ---------------------------------------------------------------------------
+
+
+def _stage_forward(stage_params, x, cfg: ModelConfig, kind: str,
+                   positions, remat: bool):
+    """Apply this stage's block slice (inner scan over layers)."""
+    ctx = blk.BlockCtx(cfg=cfg, ma=None, positions=positions)
+
+    def body(h, layer_params):
+        h, _, _ = blk.apply_block(kind, layer_params, h, ctx, None)
+        return h, None
+
+    if remat:
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(body, x, stage_params)
+    return x
+
+
+def pipeline_apply(params, x_micro, cfg: ModelConfig, spec: PipelineSpec,
+                   mesh, batch_axes: tuple[str, ...] = ("data",),
+                   remat: bool = True):
+    """x_micro: (n_micro, B, S, d_model) embedded microbatches (B = global
+
+    batch / n_micro).  Returns (n_micro, B, S, d_model) block-stack outputs.
+    """
+    kind = blk.period_kinds(cfg)[0]
+    n_stages, n_micro = spec.n_stages, spec.n_microbatches
+    d_wire = spec.wire_width(cfg)
+    S = x_micro.shape[2]
+    positions = jnp.arange(S, dtype=jnp.int32)[None]
+
+    def body(x_all, stages):
+        # local views: x_all (n_micro, B_loc, S, D); stages leading dim == 1
+        stages = jax.tree.map(lambda a: a[0], stages)
+        B_loc = x_all.shape[1]
+        stage = jax.lax.axis_index("model")
+        pos = jnp.broadcast_to(positions, (B_loc, S))
+        compute_dtype = x_all.dtype
+
+        z0 = jnp.zeros((B_loc, S, d_wire), spec.wire_dtype)
+        out0 = jnp.zeros_like(x_all)
+
+        def tick(carry, t):
+            z, outputs = carry
+            # ---- stage entry: ingest (stage 0) or decode the wire code ----
+            x_in = jax.lax.dynamic_index_in_dim(
+                x_all, jnp.clip(t, 0, n_micro - 1), 0, keepdims=False)
+            if spec.compress:
+                r = (z.astype(jnp.float32) @ stages["w_up_prev"].astype(jnp.float32)
+                     ).astype(compute_dtype)
+                r = stages["alpha_dec"].astype(compute_dtype) * r
+            else:
+                r = z.astype(compute_dtype)
+            x = jnp.where(stage == 0, x_in, r)
+            # ---- stage compute ----
+            x = _stage_forward(stages["blocks"], x, cfg, kind, pos, remat)
+            # ---- stage exit: encode the wire code ----
+            if spec.compress:
+                xn = rmsnorm(x, stages["enc_norm"], cfg.norm_eps)
+                z_out = (xn.astype(jnp.float32) @ stages["w_down"].astype(jnp.float32)
+                         ).astype(spec.wire_dtype)
+            else:
+                z_out = x.astype(spec.wire_dtype)
+            # ---- collect finished microbatches on the last stage ----
+            out_idx = jnp.clip(t - (n_stages - 1), 0, n_micro - 1)
+            is_out = ((stage == n_stages - 1) & (t >= n_stages - 1)
+                      & (t - (n_stages - 1) < n_micro))
+            cur = jax.lax.dynamic_index_in_dim(outputs, out_idx, 0,
+                                               keepdims=False)
+            outputs = jax.lax.dynamic_update_index_in_dim(
+                outputs, jnp.where(is_out, x, cur), out_idx, 0)
+            # ---- stream to the next stage (no wraparound: stage0 gets 0) ----
+            z_next = jax.lax.ppermute(
+                z_out, "model", [(i, i + 1) for i in range(n_stages - 1)])
+            return (z_next, outputs), None
+
+        T = n_micro + n_stages - 1
+        (z, outputs), _ = jax.lax.scan(tick, (z0, out0),
+                                       jnp.arange(T, dtype=jnp.int32))
+        # only the last stage holds real outputs; psum replicates them
+        outputs = jax.lax.psum(
+            jnp.where(stage == n_stages - 1, outputs, jnp.zeros_like(outputs)),
+            "model")
+        return outputs
+
+    stage_specs = jax.tree.map(lambda _: P("model"), params["stages"])
+    return shard_map(
+        body, mesh=mesh,
+        in_specs=(P(None, batch_axes, None, None), stage_specs),
+        out_specs=P(None, batch_axes, None, None),
+        check_vma=False,
+    )(x_micro, params["stages"])
+
+
+# ---------------------------------------------------------------------------
+# End-to-end pipelined train/loss step
+# ---------------------------------------------------------------------------
+
+
+def pipeline_loss(params, batch, cfg: ModelConfig, spec: PipelineSpec, mesh,
+                  batch_axes: tuple[str, ...] = ("data",), z_loss: float = 1e-4,
+                  compute_dtype=jnp.bfloat16):
+    tokens, labels = batch["tokens"], batch["labels"]
+    B, S = tokens.shape
+    n_micro = spec.n_microbatches
+    assert B % n_micro == 0, (B, n_micro)
+    x = embed_fn(params["embeds"], tokens, cfg, None, compute_dtype)
+    x = x.reshape(n_micro, B // n_micro, S, -1)
+    y = pipeline_apply(params, x, cfg, spec, mesh, batch_axes)
+    # loss head is MICROBATCHED (scan + remat): a full-batch fp32 logits
+    # tensor would be (B, S, V/16) ≈ 34 GB/device (§Perf cell C iteration 4:
+    # 145 GiB/device -> fits, and the logits all-gather drops with it)
+    labels_m = labels.reshape(n_micro, B // n_micro, S)
+
+    def head(y_mb, lab_mb):
+        h = rmsnorm(y_mb, params["final_norm"], cfg.norm_eps)
+        lgts = logits_fn(params["embeds"], h, cfg, None)
+        return next_token_loss(lgts, lab_mb, z_loss)
+
+    head = jax.checkpoint(head, policy=jax.checkpoint_policies.nothing_saveable)
+
+    def body(acc, xs):
+        y_mb, lab_mb = xs
+        return acc + head(y_mb, lab_mb), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (y, labels_m))
+    return total / n_micro
+
+
+def wire_bytes_per_hop(cfg: ModelConfig, spec: PipelineSpec,
+                       global_batch: int, seq: int) -> int:
+    """On-wire bytes for one full microbatch sweep across one boundary."""
+    width = spec.wire_width(cfg)
+    return global_batch * seq * width * jnp.dtype(spec.wire_dtype).itemsize
+
+
+# ---------------------------------------------------------------------------
+# Fused pipeline: embed on stage 0, loss on the last stage (paper §2.2:
+# 'Miners in the first layer also handle data ingestion and tokenization,
+# while those in the final layer compute the training loss.')
+# ---------------------------------------------------------------------------
+
+
+def pipeline_loss_fused(params, batch, cfg: ModelConfig, spec: PipelineSpec,
+                        mesh, batch_axes: tuple[str, ...] = ("data",),
+                        z_loss: float = 1e-4, compute_dtype=jnp.bfloat16):
+    """One shard_map for the whole step: tokens (tiny) replicate to stages
+
+    instead of embedded activations; the loss is computed on the last stage
+    and psum'd as a scalar.  §Perf cell C iteration 5: removes the
+    537 MB x 2 x ticks GSPMD resharding permutes and the 4.5 GB output
+    all-reduce of the v1 layout — inter-stage traffic is then just the
+    (compressed) wire codes, i.e. the paper's §4 claim made visible on-mesh.
+    """
+    kind = blk.period_kinds(cfg)[0]
+    tokens, labels = batch["tokens"], batch["labels"]
+    B, S = tokens.shape
+    n_stages, n_micro = spec.n_stages, spec.n_microbatches
+    assert B % n_micro == 0
+    d_wire = spec.wire_width(cfg)
+    Bm = B // n_micro
+    tokens_m = tokens.reshape(n_micro, Bm, S)
+    labels_m = labels.reshape(n_micro, Bm, S)
+    positions = jnp.arange(S, dtype=jnp.int32)[None]
+
+    def body(toks, labs, embed_tbl, unembed_tbl, final_gamma, stages):
+        stages = jax.tree.map(lambda a: a[0], stages)
+        B_loc = toks.shape[1]
+        stage = jax.lax.axis_index("model")
+        pos = jnp.broadcast_to(positions, (B_loc, S))
+        last = n_stages - 1
+
+        z0 = jnp.zeros((B_loc, S, d_wire), spec.wire_dtype)
+        out0 = jnp.zeros((n_micro, B_loc, S, cfg.d_model), compute_dtype)
+
+        # §Perf cell C iteration 7 (winner of 6/7/8 — see EXPERIMENTS.md):
+        # the tick body is checkpointed, so the backward pipeline re-derives
+        # each tick from its carry, whose activation part is the COMPRESSED
+        # wire code z — the paper's 64x compression also shrinks the GPipe
+        # activation stash.  The in-carry output collector is donated/
+        # aliased in place by XLA (the ys-collection variants measured
+        # strictly worse).
+        def tick(carry, t):
+            z, outputs = carry
+            t_in = jax.lax.dynamic_index_in_dim(
+                toks, jnp.clip(t, 0, n_micro - 1), 0, keepdims=False)
+            # stage 0 ingests tokens (paper: first-layer miners tokenize);
+            # the embedding gather is tiny next to a full-width activation
+            x_in = jnp.take(embed_tbl, t_in, axis=0).astype(compute_dtype)
+            if spec.compress:
+                r = (z.astype(jnp.float32)
+                     @ stages["w_up_prev"].astype(jnp.float32)
+                     ).astype(compute_dtype)
+                r = stages["alpha_dec"].astype(compute_dtype) * r
+            else:
+                r = z.astype(compute_dtype)
+            x = jnp.where(stage == 0, x_in, r)
+            x = _stage_forward(stages["blocks"], x, cfg, kind, pos, True)
+            if spec.compress:
+                xn = rmsnorm(x, stages["enc_norm"], cfg.norm_eps)
+                z_out = (xn.astype(jnp.float32)
+                         @ stages["w_down"].astype(jnp.float32)
+                         ).astype(spec.wire_dtype)
+            else:
+                z_out = x.astype(spec.wire_dtype)
+            out_idx = jnp.clip(t - last, 0, n_micro - 1)
+            is_out = (stage == last) & (t >= last) & (t - last < n_micro)
+            cur = jax.lax.dynamic_index_in_dim(outputs, out_idx, 0,
+                                               keepdims=False)
+            outputs = jax.lax.dynamic_update_index_in_dim(
+                outputs, jnp.where(is_out, x, cur), out_idx, 0)
+            z_next = jax.lax.ppermute(
+                z_out, "model", [(i, i + 1) for i in range(n_stages - 1)])
+            return (z_next, outputs), None
+
+        tick = jax.checkpoint(tick,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+        T = n_micro + n_stages - 1
+        (_, outputs), _ = jax.lax.scan(tick, (z0, out0),
+                                       jnp.arange(T, dtype=jnp.int32))
+
+        # ---- loss head on the last stage, microbatched + remat ----
+        pad_mask = (jnp.arange(unembed_tbl.shape[0]) >= cfg.vocab_size
+                    ) * (-1e9)
+
+        def head(y_mb, lab_mb):
+            h = rmsnorm(y_mb, final_gamma, cfg.norm_eps)
+            lgts = jnp.einsum("bsd,vd->bsv", h.astype(jnp.float32),
+                              unembed_tbl.astype(jnp.float32)) + pad_mask
+            return next_token_loss(lgts, lab_mb, z_loss)
+
+        head = jax.checkpoint(head,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+
+        def loss_body(acc, xs):
+            y_mb, lab_mb = xs
+            return acc + head(y_mb, lab_mb), None
+
+        local_loss, _ = jax.lax.scan(loss_body, jnp.zeros((), jnp.float32),
+                                     (outputs, labs))
+        loss = jax.lax.psum(
+            jnp.where(stage == last, local_loss, 0.0), "model") / n_micro
+        return jax.lax.pmean(loss, batch_axes)
+
+    stage_specs = jax.tree.map(lambda _: P("model"), params["stages"])
+    unembed = params["embeds"].get("unembed", params["embeds"]["embed"])
+    return shard_map(
+        body, mesh=mesh,
+        in_specs=(P(None, batch_axes, None), P(None, batch_axes, None),
+                  P(None, None), P(None, None), P(None), stage_specs),
+        out_specs=P(),
+        check_vma=False,
+    )(tokens_m, labels_m, params["embeds"]["embed"], unembed,
+      params["final_norm"], params["stages"])

@@ -1,0 +1,2 @@
+from repro.data.pipeline import DataConfig, SyntheticCorpus, make_host_iterator  # noqa: F401
+from repro.data.tokenizer import ByteTokenizer  # noqa: F401

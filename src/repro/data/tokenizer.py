@@ -1,0 +1,55 @@
+"""Byte-level tokenizer with hash-folding into arbitrary vocab sizes.
+
+The paper trains on FineWeb; offline we need a *real* text path for the
+examples (quickstart trains on actual text), so: UTF-8 bytes + a small
+learned-free bigram merge table hashed into [n_special, vocab).  Not BPE-
+quality, but deterministic, reversible enough for demos, and vocab-size
+agnostic (every assigned arch has a different vocab).
+"""
+from __future__ import annotations
+
+import hashlib
+
+import numpy as np
+
+PAD, BOS, EOS = 0, 1, 2
+N_SPECIAL = 3
+
+
+class ByteTokenizer:
+    def __init__(self, vocab_size: int, merge_bigrams: bool = True):
+        assert vocab_size > 256 + N_SPECIAL, vocab_size
+        self.vocab_size = vocab_size
+        self.merge_bigrams = merge_bigrams and vocab_size > 1024
+
+    def _fold(self, a: int, b: int) -> int:
+        h = hashlib.blake2b(bytes([a, b]), digest_size=4)
+        span = self.vocab_size - (256 + N_SPECIAL)
+        return 256 + N_SPECIAL + int.from_bytes(h.digest(), "little") % span
+
+    def encode(self, text: str, add_special: bool = True) -> np.ndarray:
+        bs = list(text.encode("utf-8"))
+        ids = []
+        i = 0
+        while i < len(bs):
+            if (self.merge_bigrams and i + 1 < len(bs)
+                    and bs[i] < 128 and bs[i + 1] < 128 and (i % 2 == 0)):
+                ids.append(self._fold(bs[i], bs[i + 1]))
+                i += 2
+            else:
+                ids.append(N_SPECIAL + bs[i])
+                i += 1
+        if add_special:
+            ids = [BOS] + ids + [EOS]
+        return np.asarray(ids, np.int32)
+
+    def decode(self, ids) -> str:
+        out = bytearray()
+        for t in np.asarray(ids).tolist():
+            if t < N_SPECIAL:
+                continue
+            if t < N_SPECIAL + 256:
+                out.append(t - N_SPECIAL)
+            else:
+                out.extend(b"?")          # merged tokens are not invertible
+        return out.decode("utf-8", errors="replace")

@@ -1,0 +1,159 @@
+"""Fused bottleneck encode/decode Pallas TPU kernels (paper §4 hot-spot).
+
+Why fuse: at every pipeline-stage boundary the full-width residual-stream
+activation (rows x d_model, d_model up to 7168) must be RMSNorm-ed,
+projected to the bottleneck width and cast to the wire dtype.  Unfused that
+is three HBM round-trips of the full-width tensor; fused it is exactly one
+read of x and one write of the (64-128x smaller) code.  The matmul inner
+dims are MXU-aligned (d_model multiples of 128 for every assigned arch;
+the bottleneck dim pads to the 128 lane width inside the MXU).
+
+Tiling: rows are processed in ``block_rows`` chunks held in VMEM together
+with the full (d_model x d_b) projection — d_b <= 128 keeps the weight
+resident (7168x128 fp32 = 3.5 MiB), so the only streaming traffic is x.
+
+Backward: ``jax.custom_vjp`` re-differentiates the pure-jnp oracle — the
+kernels are forward-path; autodiff correctness is anchored to ref.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.common import cdiv
+from repro.kernels import ref
+
+DEFAULT_BLOCK_ROWS = 256
+
+
+# ---------------------------------------------------------------------------
+# encode: rows x d_model --RMSNorm @ W_down, cast--> rows x d_b
+# ---------------------------------------------------------------------------
+
+
+def _encode_kernel(x_ref, gamma_ref, w_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)                    # (br, d)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    xn = x * jax.lax.rsqrt(var + eps) * gamma_ref[...].astype(jnp.float32)
+    z = xn @ w_ref[...].astype(jnp.float32)               # (br, db)
+    o_ref[...] = z.astype(o_ref.dtype)
+
+
+def _encode_call(x2d, gamma, w_down, eps, wire_dtype, interpret,
+                 block_rows=DEFAULT_BLOCK_ROWS):
+    R, d = x2d.shape
+    db = w_down.shape[1]
+    br = min(block_rows, R)
+    grid = (cdiv(R, br),)
+    return pl.pallas_call(
+        functools.partial(_encode_kernel, eps=eps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((br, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((d, db), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, db), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((R, db), wire_dtype),
+        interpret=interpret,
+    )(x2d, gamma, w_down)
+
+
+@functools.lru_cache(maxsize=None)
+def _encode_fn(eps: float, wire_dtype_name: str, interpret: bool):
+    wire_dtype = jnp.dtype(wire_dtype_name)
+
+    @jax.custom_vjp
+    def f(x2d, gamma, w_down):
+        return _encode_call(x2d, gamma, w_down, eps, wire_dtype, interpret)
+
+    def fwd(x2d, gamma, w_down):
+        return f(x2d, gamma, w_down), (x2d, gamma, w_down)
+
+    def bwd(res, g):
+        _, vjp = jax.vjp(
+            lambda x, ga, w: ref.bottleneck_encode(
+                x, ga, w, eps=eps, wire_dtype=wire_dtype), *res)
+        return vjp(g)
+
+    f.defvjp(fwd, bwd)
+    return f
+
+
+def bottleneck_encode(x, gamma, w_down, *, eps=1e-5, wire_dtype=jnp.bfloat16,
+                      interpret=False):
+    lead = x.shape[:-1]
+    d = x.shape[-1]
+    x2d = x.reshape(-1, d)
+    z = _encode_fn(float(eps), jnp.dtype(wire_dtype).name, bool(interpret))(
+        x2d, gamma, w_down)
+    return z.reshape(*lead, w_down.shape[1])
+
+
+# ---------------------------------------------------------------------------
+# decode: rows x d_b --@ W_up + alpha * residual--> rows x d_model
+# ---------------------------------------------------------------------------
+
+
+def _decode_kernel(z_ref, w_ref, r_ref, alpha_ref, o_ref):
+    z = z_ref[...].astype(jnp.float32)
+    y = z @ w_ref[...].astype(jnp.float32)
+    y = y + alpha_ref[0].astype(jnp.float32) * r_ref[...].astype(jnp.float32)
+    o_ref[...] = y.astype(o_ref.dtype)
+
+
+def _decode_call(z2d, w_up, r2d, alpha, out_dtype, interpret,
+                 block_rows=DEFAULT_BLOCK_ROWS):
+    R, db = z2d.shape
+    d = w_up.shape[1]
+    br = min(block_rows, R)
+    grid = (cdiv(R, br),)
+    return pl.pallas_call(
+        _decode_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((br, db), lambda i: (i, 0)),
+            pl.BlockSpec((db, d), lambda i: (0, 0)),
+            pl.BlockSpec((br, d), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((br, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((R, d), out_dtype),
+        interpret=interpret,
+    )(z2d, w_up, r2d, alpha)
+
+
+@functools.lru_cache(maxsize=None)
+def _decode_fn(out_dtype_name: str, interpret: bool):
+    out_dtype = jnp.dtype(out_dtype_name)
+
+    @jax.custom_vjp
+    def f(z2d, w_up, r2d, alpha):
+        return _decode_call(z2d, w_up, r2d, alpha.reshape(1), out_dtype,
+                            interpret)
+
+    def fwd(z2d, w_up, r2d, alpha):
+        return f(z2d, w_up, r2d, alpha), (z2d, w_up, r2d, alpha)
+
+    def bwd(res, g):
+        _, vjp = jax.vjp(
+            lambda z, w, r, a: ref.bottleneck_decode(
+                z, w, r, a, out_dtype=out_dtype), *res)
+        return vjp(g)
+
+    f.defvjp(fwd, bwd)
+    return f
+
+
+def bottleneck_decode(z, w_up, residual, alpha, *, out_dtype=jnp.bfloat16,
+                      interpret=False):
+    lead = z.shape[:-1]
+    db = z.shape[-1]
+    d = w_up.shape[1]
+    y = _decode_fn(jnp.dtype(out_dtype).name, bool(interpret))(
+        z.reshape(-1, db), w_up, residual.reshape(-1, d),
+        jnp.asarray(alpha, jnp.float32))
+    return y.reshape(*lead, d)

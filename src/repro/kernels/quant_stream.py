@@ -1,0 +1,69 @@
+"""int8 blockwise stream codec Pallas kernels (compressed-sharing stage).
+
+Weights/optimizer deltas are quantized on the way into the StateStore
+(paper §2 stage 2).  Symmetric per-block int8: each 256-element block gets
+one fp32 scale (amax/127).  The kernels tile the flat vector into
+(rows x 256) panels so quantize+scale extraction happen in one VMEM pass.
+Not differentiated (codec runs outside the autodiff graph).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.common import cdiv
+
+BLOCK = 256
+ROWS_PER_STEP = 512          # 512 x 256 fp32 = 512 KiB per VMEM panel
+
+
+def _quant_kernel(x_ref, q_ref, s_ref):
+    x = x_ref[...].astype(jnp.float32)                   # (rows, BLOCK)
+    amax = jnp.max(jnp.abs(x), axis=1, keepdims=True)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(x / scale), -127, 127)
+    q_ref[...] = q.astype(jnp.int8)
+    s_ref[...] = scale[:, 0]
+
+
+def quantize_int8(x, block: int = BLOCK, interpret: bool = False):
+    (n,) = x.shape
+    assert n % block == 0, (n, block)
+    rows = n // block
+    rp = min(ROWS_PER_STEP, rows)
+    x2d = x.reshape(rows, block)
+    q, s = pl.pallas_call(
+        _quant_kernel,
+        grid=(cdiv(rows, rp),),
+        in_specs=[pl.BlockSpec((rp, block), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((rp, block), lambda i: (i, 0)),
+                   pl.BlockSpec((rp,), lambda i: (i,))],
+        out_shape=[jax.ShapeDtypeStruct((rows, block), jnp.int8),
+                   jax.ShapeDtypeStruct((rows,), jnp.float32)],
+        interpret=interpret,
+    )(x2d)
+    return q.reshape(n), s
+
+
+def _dequant_kernel(q_ref, s_ref, o_ref):
+    q = q_ref[...].astype(jnp.float32)
+    o_ref[...] = q * s_ref[...][:, None]
+
+
+def dequantize_int8(q, scales, block: int = BLOCK, interpret: bool = False):
+    (n,) = q.shape
+    rows = n // block
+    rp = min(ROWS_PER_STEP, rows)
+    out = pl.pallas_call(
+        _dequant_kernel,
+        grid=(cdiv(rows, rp),),
+        in_specs=[pl.BlockSpec((rp, block), lambda i: (i, 0)),
+                  pl.BlockSpec((rp,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((rp, block), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, block), jnp.float32),
+        interpret=interpret,
+    )(q.reshape(rows, block), scales)
+    return out.reshape(n)

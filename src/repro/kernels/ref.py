@@ -1,0 +1,236 @@
+"""Pure-jnp reference oracles for every Pallas kernel in this package.
+
+These are the ground truth: kernel tests sweep shapes/dtypes and
+``assert_allclose`` the Pallas output (interpret=True on CPU) against these.
+They are also the default execution path on non-TPU backends, so the whole
+framework runs end-to-end on CPU.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Attention (flash_attention kernel oracle)
+# ---------------------------------------------------------------------------
+
+
+def attention(
+    q: jax.Array,            # (B, Sq, H, D)
+    k: jax.Array,            # (B, Skv, KH, D)
+    v: jax.Array,            # (B, Skv, KH, D)
+    *,
+    causal: bool = True,
+    q_offset: int | jax.Array = 0,
+    softmax_scale: float | None = None,
+    kv_len: jax.Array | None = None,   # (B,) valid kv length (decode w/ cache)
+) -> jax.Array:
+    """Grouped-query attention with optional causal mask & KV-length mask.
+
+    ``q_offset`` is the absolute position of q[:, 0] (decode: cache length).
+    Returns (B, Sq, H, D) in q.dtype.
+    """
+    B, Sq, H, D = q.shape
+    _, Skv, KH, _ = k.shape
+    assert H % KH == 0, (H, KH)
+    G = H // KH
+    scale = softmax_scale if softmax_scale is not None else 1.0 / np.sqrt(D)
+
+    qf = q.astype(jnp.float32) * scale
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    # (B, KH, G, Sq, D) x (B, KH, Skv, D) -> (B, KH, G, Sq, Skv)
+    qf = qf.reshape(B, Sq, KH, G, D).transpose(0, 2, 3, 1, 4)
+    kf = kf.transpose(0, 2, 1, 3)
+    vf = vf.transpose(0, 2, 1, 3)
+    logits = jnp.einsum("bkgqd,bksd->bkgqs", qf, kf)
+
+    mask = jnp.zeros((B, 1, 1, Sq, Skv), jnp.float32)
+    if causal:
+        qpos = jnp.arange(Sq)[:, None] + q_offset
+        kpos = jnp.arange(Skv)[None, :]
+        mask = mask + jnp.where(kpos <= qpos, 0.0, -jnp.inf)[None, None, None]
+    if kv_len is not None:
+        valid = jnp.arange(Skv)[None, :] < kv_len[:, None]       # (B, Skv)
+        mask = mask + jnp.where(valid, 0.0, -jnp.inf)[:, None, None, None, :]
+    logits = logits + mask
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgqs,bksd->bkgqd", probs, vf)
+    out = out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, D)
+    return out.astype(q.dtype)
+
+
+def attention_chunked(
+    q: jax.Array,            # (B, Sq, H, D)
+    k: jax.Array,            # (B, Skv, KH, D)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    q_offset: int | jax.Array = 0,
+    softmax_scale: float | None = None,
+    q_chunk: int = 512,
+    kv_chunk: int = 512,
+) -> jax.Array:
+    """Streaming (flash-algorithm) attention in pure jnp: online softmax over
+
+    kv chunks inside a scan over q chunks.  Numerically identical to
+    ``attention`` but the compiled graph never materializes the (Sq, Skv)
+    probability matrix — per-step traffic is one (q_chunk, kv_chunk) block.
+    This is the §Perf memory-term optimization for train/prefill shapes (the
+    Pallas flash kernel implements the same schedule on TPU; expressing it
+    in jnp makes the saving visible to the CPU dry-run's compiled HLO).
+    """
+    B, Sq, H, D = q.shape
+    _, Skv, KH, _ = k.shape
+    G = H // KH
+    scale = softmax_scale if softmax_scale is not None else 1.0 / np.sqrt(D)
+    if Sq % q_chunk != 0 or Skv % kv_chunk != 0 or Sq < 2 * q_chunk:
+        return attention(q, k, v, causal=causal, q_offset=q_offset,
+                         softmax_scale=softmax_scale)
+
+    nq, nkv = Sq // q_chunk, Skv // kv_chunk
+    # (B, KH, G, Sq, D) layout, q pre-scaled
+    qf = (q.astype(jnp.float32) * scale).reshape(B, Sq, KH, G, D)
+    qf = qf.transpose(0, 2, 3, 1, 4).reshape(B, KH, G, nq, q_chunk, D)
+    kf = k.astype(jnp.float32).transpose(0, 2, 1, 3).reshape(
+        B, KH, nkv, kv_chunk, D)
+    vf = v.astype(jnp.float32).transpose(0, 2, 1, 3).reshape(
+        B, KH, nkv, kv_chunk, D)
+
+    def q_block(iq):
+        qb = qf[:, :, :, iq]                          # (B,KH,G,cq,D)
+        qpos = q_offset + iq * q_chunk + jnp.arange(q_chunk)
+
+        def kv_step(carry, ikv):
+            m, l, acc = carry
+            kb = jax.lax.dynamic_index_in_dim(kf, ikv, 2, keepdims=False)
+            vb = jax.lax.dynamic_index_in_dim(vf, ikv, 2, keepdims=False)
+            s = jnp.einsum("bkgqd,bksd->bkgqs", qb, kb)
+            if causal:
+                kpos = ikv * kv_chunk + jnp.arange(kv_chunk)
+                mask = kpos[None, :] <= qpos[:, None]
+                s = jnp.where(mask[None, None, None], s, -jnp.inf)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            # fully-masked rows keep m = -inf; guard the exp
+            m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+            p = jnp.exp(s - m_safe[..., None])
+            p = jnp.where(jnp.isfinite(s), p, 0.0)
+            alpha = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+            l_new = alpha * l + jnp.sum(p, axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bkgqs,bksd->bkgqd", p, vb)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, KH, G, q_chunk), -jnp.inf)
+        l0 = jnp.zeros((B, KH, G, q_chunk))
+        a0 = jnp.zeros((B, KH, G, q_chunk, D))
+        # causal: kv blocks strictly above the diagonal contribute nothing —
+        # bound the scan length when q_offset is static
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0), jnp.arange(nkv))
+        return acc / jnp.maximum(l, 1e-30)[..., None]
+
+    _, out = jax.lax.scan(lambda _, iq: (None, q_block(iq)), None,
+                          jnp.arange(nq))
+    # (nq, B, KH, G, cq, D) -> (B, Sq, H, D)
+    out = out.transpose(1, 2, 3, 0, 4, 5).reshape(B, KH, G, Sq, D)
+    out = out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, D)
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Bottleneck fused encode/decode (paper §4) oracles
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x: jax.Array, gamma: jax.Array, eps: float = 1e-5) -> jax.Array:
+    """RMSNorm: fp32 variance reduction, compute-dtype application.
+
+    §Perf change (EXPERIMENTS.md, cell C iteration 2): the variance reduces
+    in fp32, but the rsqrt scale — a (rows, 1) tensor — applies in x.dtype,
+    so no full-width fp32 product is written back.  (Iteration 3 tried a
+    bf16 self-contraction with fp32 accumulation instead of the square/mean
+    reduce; REFUTED on the CPU backend, which wraps bf16 dots in fp32
+    converts — reverted to this formulation.)"""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    scale = jax.lax.rsqrt(var + eps).astype(x.dtype)
+    return x * scale * gamma.astype(x.dtype)
+
+
+def bottleneck_encode(
+    x: jax.Array,            # (..., d_model) residual-stream activation
+    gamma: jax.Array,        # (d_model,) RMSNorm gain
+    w_down: jax.Array,       # (d_model, d_bottleneck)
+    *,
+    eps: float = 1e-5,
+    wire_dtype=jnp.bfloat16,
+) -> jax.Array:
+    """Fused RMSNorm -> down-projection -> wire-dtype cast.
+
+    This is the compression hot-spot: the full-width activation is read from
+    HBM exactly once and the (64-128x smaller) bottleneck code is written out.
+    """
+    h = rmsnorm(x, gamma, eps).astype(jnp.float32)
+    z = h @ w_down.astype(jnp.float32)
+    return z.astype(wire_dtype)
+
+
+def bottleneck_decode(
+    z: jax.Array,            # (..., d_bottleneck) wire code
+    w_up: jax.Array,         # (d_bottleneck, d_model)
+    residual: jax.Array,     # (..., d_model) partial residual (Fig 4)
+    alpha: jax.Array,        # scalar: learned partial-residual mix-in weight
+    *,
+    out_dtype=jnp.bfloat16,
+) -> jax.Array:
+    """Fused up-projection + partial-residual mix: y = z @ w_up + alpha * r."""
+    y = z.astype(jnp.float32) @ w_up.astype(jnp.float32)
+    return (y + alpha.astype(jnp.float32) * residual.astype(jnp.float32)).astype(out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# int8 blockwise stream codec (compressed sharing, paper §2 stage 2) oracles
+# ---------------------------------------------------------------------------
+
+
+def quantize_int8(x: jax.Array, block: int = 256) -> tuple[jax.Array, jax.Array]:
+    """Symmetric per-block int8 quantization of a flat fp vector.
+
+    Returns (q: int8 (n,), scales: f32 (n//block,)).  n must divide by block.
+    """
+    (n,) = x.shape
+    assert n % block == 0, (n, block)
+    xb = x.astype(jnp.float32).reshape(n // block, block)
+    amax = jnp.max(jnp.abs(xb), axis=1, keepdims=True)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(xb / scale), -127, 127).astype(jnp.int8)
+    return q.reshape(n), scale[:, 0]
+
+
+def dequantize_int8(q: jax.Array, scales: jax.Array, block: int = 256) -> jax.Array:
+    (n,) = q.shape
+    qb = q.astype(jnp.float32).reshape(n // block, block)
+    return (qb * scales[:, None]).reshape(n)
+
+
+# ---------------------------------------------------------------------------
+# Butterfly shard-merge (paper §5.2) oracle
+# ---------------------------------------------------------------------------
+
+
+def shard_merge(
+    shards: jax.Array,       # (n_miners, shard_len) same shard from every miner
+    valid: jax.Array,        # (n_miners,) bool — miner uploaded successfully
+) -> jax.Array:
+    """Masked mean over miner copies of one shard (element-wise arithmetic
+
+    mean; paper says 'geometric mean' but its formulas and the redundancy
+    math all treat the reduction as a plain average — we use the arithmetic
+    mean and note the discrepancy in DESIGN.md)."""
+    vf = valid.astype(jnp.float32)
+    num = jnp.einsum("ms,m->s", shards.astype(jnp.float32), vf)
+    den = jnp.maximum(jnp.sum(vf), 1.0)
+    return num / den

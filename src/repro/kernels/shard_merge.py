@@ -1,0 +1,39 @@
+"""Masked shard-mean Pallas kernel — the butterfly reduce inner loop.
+
+A reducer averages one weight shard across all N miners' uploads, skipping
+miners whose upload is missing/invalid (paper §5.2 failure handling).  The
+kernel tiles the shard into VMEM panels and computes the masked mean in one
+pass: sum over the miner axis with a fp32 validity mask, divided by the
+valid count.  Not differentiated (merge runs outside the autodiff graph).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.common import cdiv
+
+COLS_PER_STEP = 16384        # 16 miners x 16k fp32 = 1 MiB per panel
+
+
+def _merge_kernel(shards_ref, valid_ref, o_ref):
+    shards = shards_ref[...].astype(jnp.float32)         # (M, cols)
+    valid = valid_ref[...].astype(jnp.float32)           # (M,)
+    num = jnp.einsum("mc,m->c", shards, valid)
+    den = jnp.maximum(jnp.sum(valid), 1.0)
+    o_ref[...] = num / den
+
+
+def shard_merge(shards, valid, interpret: bool = False):
+    M, L = shards.shape
+    cols = min(COLS_PER_STEP, L)
+    return pl.pallas_call(
+        _merge_kernel,
+        grid=(cdiv(L, cols),),
+        in_specs=[pl.BlockSpec((M, cols), lambda i: (0, i)),
+                  pl.BlockSpec((M,), lambda i: (0,))],
+        out_specs=pl.BlockSpec((cols,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((L,), jnp.float32),
+        interpret=interpret,
+    )(shards, valid.astype(jnp.float32))

@@ -1,0 +1,337 @@
+"""Trip-count-aware HLO cost analysis.
+
+``compiled.cost_analysis()`` counts each while-loop body ONCE, so any module
+with scan-over-layers / grad-accumulation under-reports FLOPs, bytes and
+collective traffic by the trip count (verified empirically: a 2-layer and a
+4-layer scanned model report the same flops).  This module re-derives the
+three roofline inputs from ``compiled.as_text()`` (post-SPMD, per-device):
+
+  * computations are parsed into op lists with output/operand types,
+  * a call graph (while body/cond x known_trip_count, fusion `calls=`,
+    conditional branches) propagates multipliers down from ENTRY,
+  * per-op costs:  dot -> 2 * |out| * k_contracted flops;
+                   elementwise/reduce/fusion-root -> |out| flops;
+                   every op -> operand+output bytes (fusion counted at the
+                   fusion boundary, matching XLA's bytes-accessed);
+                   collectives -> output bytes, bucketed by kind.
+
+Numbers are per-device (the SPMD module is per-device); callers multiply by
+chip count for global figures.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from collections import defaultdict
+from typing import Optional
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "token": 0,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1,
+}
+
+_TENSOR_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_HEADER_RE = re.compile(r"^\s*(ENTRY\s+)?%?([\w.\-]+)\s*\((.*)\)\s*->.*\{\s*$")
+# out type is either a (tuple, ...) — no nested parens in HLO types — or a
+# single whitespace-free literal; /*index=N*/ comments are stripped upstream
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\(.*?\)|\S+)\s+([\w\-]+)\((.*)$")
+_PARAM_RE = re.compile(r"([\w.\-]+):\s*((?:\([^)]*\)|[a-z0-9]+\[[0-9,]*\]))")
+_COMMENT_RE = re.compile(r"/\*.*?\*/")
+
+COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter",
+                    "all-to-all", "collective-permute")
+
+ELEMENTWISE_FLOP_OPS = {
+    "add", "subtract", "multiply", "divide", "power", "maximum", "minimum",
+    "exponential", "log", "rsqrt", "sqrt", "tanh", "negate", "abs", "floor",
+    "compare", "select", "convert", "reduce", "reduce-window", "clamp",
+    "cosine", "sine", "logistic", "and", "or", "xor", "not", "remainder",
+    "exponential-minus-one", "log-plus-one", "atan2", "round-nearest-even",
+    "erf", "cbrt", "sign", "shift-left", "shift-right-logical",
+    "shift-right-arithmetic",
+}
+
+ZERO_COST_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota", "broadcast",
+    "reshape", "transpose", "slice", "reverse", "concatenate", "pad",
+    "dynamic-slice", "dynamic-update-slice", "copy", "copy-start",
+    "copy-done", "gather", "scatter", "rng", "rng-bit-generator", "domain",
+    "optimization-barrier", "custom-call", "infeed", "outfeed",
+    "while", "conditional", "call", "fusion", "sort", "convolution", "dot",
+    "get-dimension-size", "bitcast-convert", "all-reduce-done",
+    "all-gather-done", "collective-permute-done", "async-done", "send",
+    "recv", "send-done", "recv-done",
+}
+
+
+def _shape_numel_bytes(sig: str) -> tuple[int, int]:
+    numel = 0
+    nbytes = 0
+    for dtype, dims in _TENSOR_RE.findall(sig):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        numel += n
+        nbytes += n * _DTYPE_BYTES[dtype]
+    return numel, nbytes
+
+
+@dataclasses.dataclass
+class OpInfo:
+    name: str
+    opcode: str
+    out_sig: str
+    rest: str               # everything after the '(' of operands
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    types: dict             # value name -> type signature
+    ops: list               # list[OpInfo]
+
+
+def parse_module(text: str) -> tuple[dict, Optional[str]]:
+    comps: dict[str, Computation] = {}
+    entry: Optional[str] = None
+    cur: Optional[Computation] = None
+    for raw in text.splitlines():
+        line = _COMMENT_RE.sub("", raw).rstrip()
+        h = _HEADER_RE.match(line)
+        if h and ("->" in line):
+            is_entry, name, params = h.groups()
+            cur = Computation(name, {}, [])
+            comps[name] = cur
+            if is_entry:
+                entry = name
+            for pname, ptype in _PARAM_RE.findall(params):
+                cur.types[pname] = ptype
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        name, out_sig, opcode, rest = m.groups()
+        cur.types[name] = out_sig
+        cur.ops.append(OpInfo(name, opcode, out_sig, rest))
+    return comps, entry
+
+
+def _operand_names(rest: str) -> list[str]:
+    """Operand value names from the text following the opening paren."""
+    # cut at the matching close paren of the operand list
+    depth = 1
+    for i, ch in enumerate(rest):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                rest = rest[:i]
+                break
+    return re.findall(r"%([\w.\-]+)", rest)
+
+
+def _dot_flops(op: OpInfo, types: dict) -> float:
+    out_numel, _ = _shape_numel_bytes(op.out_sig)
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.rest)
+    operands = _operand_names(op.rest)
+    if not operands or m is None:
+        return 2.0 * out_numel
+    lhs_sig = types.get(operands[0], "")
+    tensors = _TENSOR_RE.findall(lhs_sig)
+    if not tensors:
+        return 2.0 * out_numel
+    dims = [int(d) for d in tensors[0][1].split(",")] if tensors[0][1] else []
+    k = 1
+    for ci in m.group(1).split(","):
+        if ci != "" and int(ci) < len(dims):
+            k *= dims[int(ci)]
+    return 2.0 * out_numel * k
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collective_bytes: float = 0.0
+    # HBM traffic of "attention-interior" tensors: ops whose outputs carry a
+    # (Sq, Skv) score/probability geometry.  On the TPU target these tensors
+    # live inside the Pallas flash kernel's VMEM and never reach HBM, so
+    # kernel-substituted memory = bytes - attn_interior_bytes.
+    attn_interior_bytes: float = 0.0
+    coll_by_kind: dict = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+    coll_count: dict = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+
+    def add(self, other: "Cost", mult: float = 1.0) -> None:
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        self.collective_bytes += other.collective_bytes * mult
+        self.attn_interior_bytes += other.attn_interior_bytes * mult
+        for k, v in other.coll_by_kind.items():
+            self.coll_by_kind[k] += v * mult
+        for k, v in other.coll_count.items():
+            self.coll_count[k] += v * mult
+
+
+def _collective_kind(opcode: str) -> Optional[str]:
+    base = opcode[:-6] if opcode.endswith("-start") else opcode
+    for k in COLLECTIVE_KINDS:
+        if base == k:
+            return k
+    return None
+
+
+def _is_attn_interior(sig: str, score_dims) -> bool:
+    """True if every tensor in the signature ends with the (Sq, Skv) score
+
+    geometry (with Sq possibly microbatched/sharded: we match the LAST dim
+    == Skv and the 2nd-to-last >= 128 with Skv/last-dim score shape)."""
+    if score_dims is None:
+        return False
+    sq, skv = score_dims
+    tensors = _TENSOR_RE.findall(sig)
+    if not tensors:
+        return False
+    for _dtype, dims in tensors:
+        d = [int(x) for x in dims.split(",")] if dims else []
+        # scores are (B, [KH, G|H], Sq, Skv) — rank >= 4 excludes (B, S,
+        # d_model) activations for archs where d_model == seq_len (glm4)
+        if len(d) < 4 or d[-1] != skv or d[-2] not in (sq, skv):
+            return False
+    return True
+
+
+def analyze_module(text: str, score_dims=None) -> Cost:
+    comps, entry = parse_module(text)
+    if entry is None:
+        # fall back: treat the largest computation as entry
+        entry = max(comps, key=lambda c: len(comps[c].ops)) if comps else None
+        if entry is None:
+            return Cost()
+    memo: dict[str, Cost] = {}
+
+    def comp_cost(name: str) -> Cost:
+        if name in memo:
+            return memo[name]
+        memo[name] = Cost()          # break cycles defensively
+        comp = comps.get(name)
+        if comp is None:
+            return memo[name]
+        total = Cost()
+        for op in comp.ops:
+            out_numel, out_bytes = _shape_numel_bytes(op.out_sig)
+            opcode = op.opcode
+            # ---- called computations ----
+            if opcode == "while":
+                m = re.search(r'known_trip_count[^0-9]*(\d+)', op.rest)
+                trips = float(m.group(1)) if m else 1.0
+                for attr in ("body", "condition"):
+                    cm = re.search(attr + r"=%?([\w.\-]+)", op.rest)
+                    if cm:
+                        total.add(comp_cost(cm.group(1)), trips)
+                continue
+            if opcode == "fusion":
+                cm = re.search(r"calls=%?([\w.\-]+)", op.rest)
+                inner = comp_cost(cm.group(1)) if cm else Cost()
+                # flops from the fused body; bytes at the fusion boundary
+                op_bytes = out_bytes
+                interior = (out_bytes
+                            if _is_attn_interior(op.out_sig, score_dims)
+                            else 0.0)
+                for o in _operand_names(op.rest):
+                    sig_o = comp.types.get(o, "")
+                    _, b = _shape_numel_bytes(sig_o)
+                    op_bytes += b
+                    if _is_attn_interior(sig_o, score_dims):
+                        interior += b
+                c = Cost(flops=inner.flops, bytes=op_bytes,
+                         collective_bytes=inner.collective_bytes,
+                         attn_interior_bytes=interior,
+                         coll_by_kind=inner.coll_by_kind,
+                         coll_count=inner.coll_count)
+                total.add(c)
+                continue
+            if opcode in ("call", "async-start"):
+                cm = re.search(r"(?:to_apply|calls|called_computation)"
+                               r"=%?([\w.\-]+)", op.rest)
+                if cm:
+                    total.add(comp_cost(cm.group(1)))
+                continue
+            if opcode == "conditional":
+                branches = re.findall(
+                    r"(?:branch_computations=\{([^}]*)\}|"
+                    r"true_computation=%?([\w.\-]+)|"
+                    r"false_computation=%?([\w.\-]+))", op.rest)
+                names: list[str] = []
+                for grp in branches:
+                    for g in grp:
+                        if g:
+                            names.extend(re.findall(r"%?([\w.\-]+)", g))
+                costs = [comp_cost(n) for n in names if n in comps]
+                if costs:
+                    # one branch executes; take the max-flops branch
+                    total.add(max(costs, key=lambda c: c.flops))
+                continue
+
+            # ---- leaf ops ----
+            op_bytes = out_bytes
+            interior_bytes = out_bytes if _is_attn_interior(
+                op.out_sig, score_dims) else 0.0
+            for o in _operand_names(op.rest):
+                sig_o = comp.types.get(o, "")
+                _, b = _shape_numel_bytes(sig_o)
+                op_bytes += b
+                if _is_attn_interior(sig_o, score_dims):
+                    interior_bytes += b
+
+            kind = _collective_kind(opcode)
+            if kind is not None:
+                c = Cost(bytes=op_bytes, collective_bytes=out_bytes)
+                c.coll_by_kind[kind] += out_bytes
+                c.coll_count[kind] += 1
+                total.add(c)
+                continue
+            interior = interior_bytes
+            if opcode == "dot":
+                total.add(Cost(flops=_dot_flops(op, comp.types),
+                               bytes=op_bytes, attn_interior_bytes=interior))
+                continue
+            if opcode == "reduce":
+                total.add(Cost(flops=float(out_numel), bytes=op_bytes,
+                               attn_interior_bytes=interior))
+                continue
+            if opcode in ELEMENTWISE_FLOP_OPS:
+                total.add(Cost(flops=float(out_numel), bytes=op_bytes,
+                               attn_interior_bytes=interior))
+                continue
+            if opcode in ZERO_COST_OPS:
+                # moves data but no flops; count bytes for real movers only
+                if opcode in ("copy", "gather", "scatter", "concatenate",
+                              "dynamic-slice", "dynamic-update-slice", "pad",
+                              "sort", "reshape", "transpose", "broadcast",
+                              "slice"):
+                    total.add(Cost(bytes=op_bytes,
+                                   attn_interior_bytes=interior))
+                continue
+            # unknown op: count as elementwise
+            total.add(Cost(flops=float(out_numel), bytes=op_bytes,
+                           attn_interior_bytes=interior))
+        memo[name] = total
+        return total
+
+    return comp_cost(entry)

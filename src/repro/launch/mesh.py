@@ -1,0 +1,33 @@
+"""Production mesh construction.
+
+Single pod:  (16, 16) = 256 chips, axes (data, model).
+Multi-pod:   (2, 16, 16) = 512 chips, axes (pod, data, model) — the ``pod``
+axis carries only the DiLoCo outer sync (butterfly merge over DCN); inner
+train steps sync over (data, model) within a pod.
+
+A FUNCTION, not a module constant: importing this module must never touch
+jax device state (smoke tests see 1 CPU device; only dryrun.py sets
+XLA_FLAGS=--xla_force_host_platform_device_count=512).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    axis_types = (jax.sharding.AxisType.Auto,) * len(axes)
+    return jax.make_mesh(shape, axes, axis_types=axis_types)
+
+
+def make_debug_mesh(shape=(2, 2), axes=("data", "model")):
+    """Small mesh for in-process multi-device tests (8 host devices)."""
+    axis_types = (jax.sharding.AxisType.Auto,) * len(axes)
+    return jax.make_mesh(shape, axes, axis_types=axis_types)
+
+
+# TPU v5e hardware constants used by the roofline analysis (per chip)
+PEAK_FLOPS_BF16 = 197e12        # FLOP/s
+HBM_BW = 819e9                  # bytes/s
+ICI_LINK_BW = 50e9              # bytes/s per link

@@ -1,0 +1,168 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Per (arch x shape x mesh) we derive, from the post-SPMD per-device module:
+
+  compute term    = HLO_FLOPs_global    / (chips * 197e12)
+  memory term     = HLO_bytes_global    / (chips * 819e9)
+  collective term = collective_bytes_gl / (chips * 50e9)
+
+where *_global = per-device value (what ``cost_analysis`` / the HLO text
+report after SPMD partitioning) x chips, so the formulas reduce to honest
+per-device times.  collective_bytes is not in cost_analysis: we parse the
+optimized HLO and sum the output-operand sizes of every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute (methodology
+note: output size is the received volume per device; for all-reduce the
+on-wire volume is ~2x output in a ring — we report the raw sum and keep the
+convention fixed across all cells so comparisons are apples-to-apples).
+
+MODEL_FLOPS = 6*N*D (dense) or 6*N_active*D (MoE) gives the useful-compute
+yardstick; MODEL_FLOPS / HLO_FLOPs exposes remat/redundancy overhead.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+import numpy as np
+
+from repro.launch.mesh import HBM_BW, ICI_LINK_BW, PEAK_FLOPS_BF16
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "token": 0, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(sig: str) -> int:
+    """Sum byte sizes of every tensor literal in an HLO type signature."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(sig):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_kind: dict
+    count_by_kind: dict
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    """Sum output sizes of collective ops in (post-SPMD, per-device) HLO."""
+    bytes_by_kind = {k: 0 for k in COLLECTIVE_OPS}
+    count_by_kind = {k: 0 for k in COLLECTIVE_OPS}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = re.match(r"%?[\w.\-]+\s*=\s*(\(?.*?\)?)\s+([\w\-]+)\(", line)
+        if not m:
+            continue
+        out_sig, op = m.groups()
+        kind = None
+        for c in COLLECTIVE_OPS:
+            if op == c or op.startswith(c + "-"):   # e.g. all-reduce-start
+                kind = c
+                break
+        if kind is None:
+            continue
+        if op.endswith("-done"):                    # avoid double counting
+            continue
+        bytes_by_kind[kind] += _shape_bytes(out_sig)
+        count_by_kind[kind] += 1
+    return CollectiveStats(bytes_by_kind, count_by_kind)
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    # per-device quantities straight from the artifacts
+    device_flops: float
+    device_bytes: float
+    device_collective_bytes: float
+    collectives: CollectiveStats
+    # derived roofline terms (seconds)
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    bottleneck: str
+    model_flops: float           # 6*N(_active)*D for this step's tokens
+    useful_fraction: float       # MODEL_FLOPS / HLO_FLOPs_global
+    memory_per_device: Optional[dict] = None
+    # flash-kernel substitution: attention-interior HBM traffic measured in
+    # the HLO; on TPU these tensors stay in the Pallas kernel's VMEM
+    attn_interior_bytes: float = 0.0
+    t_memory_kernelized: float = 0.0
+
+    def asdict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["collectives"] = {
+            "bytes": self.collectives.bytes_by_kind,
+            "count": self.collectives.count_by_kind,
+        }
+        return d
+
+
+def analyze(arch: str, shape: str, mesh_name: str, chips: int,
+            cost: dict, hlo_text: str, model_flops: float,
+            memory_stats: Optional[dict] = None,
+            score_dims: Optional[tuple] = None) -> RooflineReport:
+    # trip-count-aware analysis (xla's cost_analysis counts loop bodies once;
+    # see hlo_cost.py) — cost_analysis values are kept as a cross-check
+    from repro.launch import hlo_cost
+    hc = hlo_cost.analyze_module(hlo_text, score_dims=score_dims)
+    flops = float(hc.flops)
+    dev_bytes = float(hc.bytes)
+    coll = CollectiveStats(dict(hc.coll_by_kind), dict(hc.coll_count))
+
+    t_compute = (flops * chips) / (chips * PEAK_FLOPS_BF16)
+    t_memory = (dev_bytes * chips) / (chips * HBM_BW)
+    t_collective = (coll.total_bytes * chips) / (chips * ICI_LINK_BW)
+    t_memory_kernelized = ((dev_bytes - hc.attn_interior_bytes) * chips
+                           ) / (chips * HBM_BW)
+    terms = {"compute": t_compute, "memory": t_memory,
+             "collective": t_collective}
+    bottleneck = max(terms, key=terms.get)
+    useful = model_flops / max(flops * chips, 1.0)
+    return RooflineReport(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        device_flops=flops, device_bytes=dev_bytes,
+        device_collective_bytes=float(coll.total_bytes),
+        collectives=coll, t_compute=t_compute, t_memory=t_memory,
+        t_collective=t_collective, bottleneck=bottleneck,
+        model_flops=model_flops, useful_fraction=useful,
+        memory_per_device=memory_stats,
+        attn_interior_bytes=float(hc.attn_interior_bytes),
+        t_memory_kernelized=t_memory_kernelized,
+    )
+
+
+def model_flops_for(cfg, shape, train: bool) -> float:
+    """6*N*D (dense) / 6*N_active*D (MoE); decode counts one token/seq."""
+    n = cfg.model.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens            # forward only
+    tokens = shape.global_batch            # one new token per sequence
+    return 2.0 * n * tokens

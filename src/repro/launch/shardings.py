@@ -1,0 +1,46 @@
+"""Assemble the full in/out sharding trees for each dry-run step kind."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models.model import Model, TrainState
+from repro.sharding.partition import MeshAxes, param_specs
+
+
+def named(mesh: Mesh, tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def train_state_specs(model: Model, ma: MeshAxes) -> TrainState:
+    params_shapes = jax.eval_shape(model.init, jax.random.key(0))
+    p_specs = param_specs(params_shapes, ma)
+    opt_specs = model.optimizer.state_specs(p_specs, params_shapes)
+    return TrainState(params=p_specs, opt_state=opt_specs, step=P())
+
+
+def batch_specs(model: Model, shape: ShapeConfig, ma: MeshAxes) -> dict:
+    specs = model.input_specs(shape)
+    b = ma.batch
+    total = int(np.prod([ma.mesh.shape[a] for a in b]))
+    bspec = b if shape.global_batch % total == 0 else (
+        b[0] if shape.global_batch % ma.mesh.shape[b[0]] == 0 else None)
+
+    out = {}
+    for k, v in specs.items():
+        dims = [bspec] + [None] * (len(v.shape) - 1)
+        out[k] = P(*dims)
+    return out
+
+
+def decode_state_spec_tree(model: Model, shape: ShapeConfig, ma: MeshAxes):
+    from repro.models import encdec, transformer
+    if model.mcfg.is_encoder_decoder:
+        return encdec.decode_state_specs(model.mcfg, ma, shape.global_batch)
+    return transformer.decode_state_specs(model.mcfg, ma, shape.global_batch)

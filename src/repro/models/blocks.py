@@ -1,0 +1,250 @@
+"""Unified block abstraction over every assigned family.
+
+A *block kind* is a string:
+  "attn_dense"        pre-norm GQA attention + SwiGLU FFN          (dense LMs)
+  "attn_moe"          attention + MoE FFN                          (kimi, olmoe)
+  "attn_none"         attention only (xlstm-style d_ff == 0 never uses this;
+                       kept for completeness)
+  "attn_dense_cross"  attention + cross-attention + FFN            (enc-dec dec)
+  "mamba_dense"/"mamba_moe"  Mamba mixer + (dense|MoE) FFN         (jamba)
+  "mlstm" / "slstm"   xLSTM blocks (own up/down projection, no FFN)
+
+Every kind shares one protocol:
+  init_block(key, kind, cfg)                         -> params
+  apply_block(kind, params, x, ctx, state, res_alpha) -> (y, new_state, aux)
+
+``state`` is the per-block decode state (KVCache / MambaState / xLSTM states)
+or None in training.  ``res_alpha`` is the partial-residual weight used by
+bottleneck / post-bottleneck blocks (paper Fig 4); None = standard residual.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import mamba as mamba_mod
+from repro.models import moe as moe_mod
+from repro.models import xlstm as xlstm_mod
+from repro.models.layers import (
+    KVCache,
+    attention,
+    init_attention,
+    init_mlp,
+    mlp,
+    norm_init,
+    rmsnorm,
+)
+from repro.sharding.partition import MeshAxes
+
+
+@dataclasses.dataclass
+class BlockCtx:
+    cfg: ModelConfig
+    ma: Optional[MeshAxes]
+    positions: jax.Array                       # (B, S) absolute positions
+    cross_memory: Optional[jax.Array] = None   # (B, F, d_model) encoder memory
+    causal: bool = True                        # False inside encoder stacks
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def init_block(key, kind: str, cfg: ModelConfig) -> dict:
+    ks = jax.random.split(key, 4)
+    d = cfg.d_model
+    if kind in ("attn_dense", "attn_moe", "attn_none", "attn_dense_cross"):
+        p: dict = {"attn_norm": norm_init(d), "attn": init_attention(ks[0], cfg)}
+        if kind == "attn_dense_cross":
+            p["cross_norm"] = norm_init(d)
+            p["cross"] = init_attention(ks[2], cfg)
+        if kind.endswith("_moe"):
+            p["ffn_norm"] = norm_init(d)
+            p["moe"] = moe_mod.init_moe(ks[1], cfg)
+        elif kind != "attn_none":
+            p["ffn_norm"] = norm_init(d)
+            p["mlp"] = init_mlp(ks[1], cfg)
+        return p
+    if kind.startswith("mamba"):
+        p = {"mamba_norm": norm_init(d), "mamba": mamba_mod.init_mamba(ks[0], cfg)}
+        if kind.endswith("_moe"):
+            p["ffn_norm"] = norm_init(d)
+            p["moe"] = moe_mod.init_moe(ks[1], cfg)
+        elif kind.endswith("_dense"):
+            p["ffn_norm"] = norm_init(d)
+            p["mlp"] = init_mlp(ks[1], cfg)
+        return p
+    if kind == "mlstm":
+        return {"mlstm": xlstm_mod.init_mlstm(ks[0], cfg)}
+    if kind == "slstm":
+        return {"slstm": xlstm_mod.init_slstm(ks[0], cfg)}
+    raise ValueError(f"unknown block kind {kind!r}")
+
+
+def init_block_state(kind: str, cfg: ModelConfig, batch: int, max_len: int,
+                     dtype=jnp.bfloat16) -> Any:
+    """Decode-time state for one block of this kind."""
+    if kind.startswith("attn"):
+        shape = (batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+        return KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype),
+                       jnp.zeros((), jnp.int32))
+    if kind.startswith("mamba"):
+        return mamba_mod.init_mamba_state(cfg, batch)
+    if kind == "mlstm":
+        return xlstm_mod.init_mlstm_state(cfg, batch)
+    if kind == "slstm":
+        return xlstm_mod.init_slstm_state(cfg, batch)
+    raise ValueError(kind)
+
+
+def block_state_specs(kind: str, cfg: ModelConfig, ma, batch: int):
+    """PartitionSpec tree mirroring ``init_block_state`` for the dry-run.
+
+    Batch shards over the batch axes when divisible; otherwise (long_500k
+    B=1) KV caches shard their *sequence* over ``data`` and recurrent states
+    shard their feature dim over ``model``.
+    """
+    from jax.sharding import PartitionSpec as P
+    if ma is None:
+        b = None
+    else:
+        total = 1
+        from numpy import prod
+        total = int(prod([ma.mesh.shape[a] for a in ma.batch])) \
+            if ma.mesh is not None else ma.data_axis_size
+        b = ma.batch if batch % max(total, 1) == 0 else None
+    mdl = ma.model if ma is not None else None
+    kv_div = ma is not None and ma.shard_kv_heads
+    kv = mdl if kv_div else None
+    if kind.startswith("attn"):
+        if ma is None:
+            kvspec = P(None, None, None, None)
+        elif b is not None:
+            # kv heads over model when divisible, else the 32k+ sequence dim
+            # — the cache must never be model-replicated (llama decode_32k:
+            # 17 GiB/device replicated vs 1.1 GiB seq-sharded)
+            kvspec = P(b, None, mdl, None) if kv_div else P(b, mdl, None, None)
+        else:
+            # tiny-batch decode (long_500k): shard the sequence dim
+            seq_axes = ma.data if kv_div else (ma.data, ma.model)
+            kvspec = P(None, seq_axes, kv, None)
+        return KVCache(kvspec, kvspec, P())
+    if kind.startswith("mamba"):
+        return mamba_mod.MambaState(h=P(b, mdl, None), conv=P(b, None, mdl))
+    if kind == "mlstm":
+        return xlstm_mod.MLSTMState(C=P(b, None, mdl, None),
+                                    n=P(b, None, mdl), m=P(b, None))
+    if kind == "slstm":
+        return xlstm_mod.SLSTMState(c=P(b, mdl), n=P(b, mdl), m=P(b, mdl),
+                                    h=P(b, mdl))
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# apply
+# ---------------------------------------------------------------------------
+
+
+def apply_block(
+    kind: str,
+    params: dict,
+    x: jax.Array,
+    ctx: BlockCtx,
+    state: Any = None,
+    res_alpha: Optional[jax.Array] = None,
+) -> tuple[jax.Array, Any, jax.Array]:
+    cfg = ctx.cfg
+    aux = jnp.zeros((), jnp.float32)
+    dtype = x.dtype
+
+    def resid(r, delta):
+        if res_alpha is None:
+            return r + delta
+        return res_alpha.astype(jnp.float32).astype(dtype) * r + delta
+
+    if kind.startswith("attn"):
+        a, new_state = attention(
+            params["attn"], rmsnorm(x, params["attn_norm"], cfg.norm_eps),
+            cfg, ctx.ma, ctx.positions, cache=state, causal=ctx.causal)
+        x = resid(x, a)
+        if kind == "attn_dense_cross":
+            mem = ctx.cross_memory
+            B, F, _ = mem.shape
+            hd = cfg.head_dim
+            ck = (mem @ params["cross"]["wk"].astype(mem.dtype)
+                  ).reshape(B, F, cfg.n_kv_heads, hd)
+            cv = (mem @ params["cross"]["wv"].astype(mem.dtype)
+                  ).reshape(B, F, cfg.n_kv_heads, hd)
+            c, _ = attention(
+                params["cross"], rmsnorm(x, params["cross_norm"], cfg.norm_eps),
+                cfg, ctx.ma, ctx.positions, cross_kv=(ck, cv))
+            x = x + c
+        if "moe" in params:
+            h, aux = moe_mod.moe_ffn(
+                params["moe"], rmsnorm(x, params["ffn_norm"], cfg.norm_eps),
+                cfg, ctx.ma)
+            x = x + h
+        elif "mlp" in params:
+            x = x + mlp(params["mlp"],
+                        rmsnorm(x, params["ffn_norm"], cfg.norm_eps), ctx.ma)
+        return x, new_state, aux
+
+    if kind.startswith("mamba"):
+        m, new_state = mamba_mod.mamba_block(
+            params["mamba"], rmsnorm(x, params["mamba_norm"], cfg.norm_eps),
+            cfg, state)
+        x = resid(x, m)
+        if "moe" in params:
+            h, aux = moe_mod.moe_ffn(
+                params["moe"], rmsnorm(x, params["ffn_norm"], cfg.norm_eps),
+                cfg, ctx.ma)
+            x = x + h
+        elif "mlp" in params:
+            x = x + mlp(params["mlp"],
+                        rmsnorm(x, params["ffn_norm"], cfg.norm_eps), ctx.ma)
+        return x, new_state, aux
+
+    if kind == "mlstm":
+        y, new_state = xlstm_mod.mlstm_block(params["mlstm"], x, cfg, state)
+        return resid(x, y), new_state, aux
+    if kind == "slstm":
+        y, new_state = xlstm_mod.slstm_block(params["slstm"], x, cfg, state)
+        return resid(x, y), new_state, aux
+    raise ValueError(f"unknown block kind {kind!r}")
+
+
+# ---------------------------------------------------------------------------
+# per-arch period layout
+# ---------------------------------------------------------------------------
+
+
+def period_kinds(cfg: ModelConfig, decoder: bool = False) -> list[str]:
+    """The repeating unit of block kinds for this arch.
+
+    The full stack is ``n_layers / len(period)`` repetitions, scanned.
+    """
+    fam = cfg.family
+    if fam == "ssm":
+        return ["mlstm", "slstm"]
+    if fam == "hybrid":
+        period = []
+        for i in range(cfg.hybrid_period):
+            mixer = "attn" if i == cfg.hybrid_attn_index else "mamba"
+            if cfg.moe is not None and cfg.moe.layer_pattern == "alternate":
+                ffn = "moe" if i % 2 == 1 else "dense"
+            else:
+                ffn = "moe" if cfg.moe is not None else "dense"
+            period.append(f"{mixer}_{ffn}")
+        return period
+    if cfg.is_encoder_decoder and decoder:
+        return ["attn_dense_cross"]
+    if cfg.moe is not None:
+        if cfg.moe.layer_pattern == "alternate":
+            return ["attn_dense", "attn_moe"]
+        return ["attn_moe"]
+    return ["attn_dense"]

@@ -1,0 +1,121 @@
+"""Encoder-decoder backbone for seamless-m4t-medium ([audio] family).
+
+The modality frontend is a STUB per the assignment: ``input_specs()`` feeds
+precomputed frame embeddings (B, F, d_model) straight into the encoder.  The
+decoder is a standard causal stack with per-layer cross-attention over the
+encoder memory.  n_layers applies to BOTH stacks (12 enc + 12 dec).
+
+Bottleneck boundaries use ``insert`` mode inside each stack; additionally the
+encoder memory handed to the decoder can be bottleneck-compressed once
+(``compress_memory``) — a beyond-paper extension of §4 to the cross-attention
+wire, used when the enc/dec stacks live on different pipeline stages.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import bottleneck as bn
+from repro.models import blocks as blk
+from repro.models.layers import embed, init_embeddings, logits, norm_init, rmsnorm
+from repro.models.transformer import (
+    StackLayout,
+    _state_length,
+    apply_stack,
+    init_decoder_stack,
+    init_stack_state,
+    plan_layout,
+)
+from repro.sharding.partition import MeshAxes
+
+WIRE_DTYPE = jnp.bfloat16
+
+
+def enc_layout(cfg: ModelConfig) -> StackLayout:
+    return plan_layout(cfg, decoder=False)
+
+
+def dec_layout(cfg: ModelConfig) -> StackLayout:
+    return plan_layout(cfg, decoder=True)
+
+
+def init_params(key, cfg: ModelConfig) -> dict:
+    ks = jax.random.split(key, 4)
+    p = {
+        "embeds": init_embeddings(ks[0], cfg),
+        "enc": init_decoder_stack(ks[1], cfg, enc_layout(cfg)),
+        "dec": init_decoder_stack(ks[2], cfg, dec_layout(cfg)),
+        "enc_norm": norm_init(cfg.d_model),
+        "final_norm": norm_init(cfg.d_model),
+    }
+    if cfg.bottleneck.enabled:
+        p["memory_boundary"] = bn.init_boundary(ks[3], cfg)
+    return p
+
+
+def encode(params: dict, frames: jax.Array, cfg: ModelConfig,
+           ma: Optional[MeshAxes], remat: bool = True) -> jax.Array:
+    """Frontend frame embeddings (B, F, d) -> encoder memory (B, F, d)."""
+    B, F, _ = frames.shape
+    positions = jnp.broadcast_to(jnp.arange(F, dtype=jnp.int32)[None], (B, F))
+    ctx = blk.BlockCtx(cfg=cfg, ma=ma, positions=positions, causal=False)
+    x, _, _ = apply_stack(params["enc"], frames, ctx, enc_layout(cfg),
+                          None, remat)
+    x = rmsnorm(x, params["enc_norm"], cfg.norm_eps)
+    if cfg.bottleneck.enabled:
+        # compress the cross-attention memory once for the enc->dec wire
+        z = bn.encode(params["memory_boundary"], x, cfg, WIRE_DTYPE)
+        x = bn.decode(params["memory_boundary"], z, cfg, x.dtype)
+    return x
+
+
+def forward(
+    params: dict,
+    tokens: jax.Array,                  # (B, S) decoder tokens
+    cfg: ModelConfig,
+    ma: Optional[MeshAxes] = None,
+    *,
+    frames: Optional[jax.Array] = None,  # (B, F, d_model) frontend embeddings
+    memory: Optional[jax.Array] = None,  # precomputed encoder memory (decode)
+    state: Optional[dict] = None,
+    remat: bool = True,
+    compute_dtype=jnp.bfloat16,
+    capture_wire: Optional[list] = None,
+):
+    """Returns (logits, new_state, aux)."""
+    assert (frames is None) != (memory is None), \
+        "pass exactly one of frames / memory"
+    if memory is None:
+        memory = encode(params, frames.astype(compute_dtype), cfg, ma, remat)
+
+    B, S = tokens.shape
+    x = embed(params["embeds"], tokens, cfg, ma, compute_dtype)
+    if state is not None:
+        length = _state_length(state)
+        positions = length + jnp.arange(S, dtype=jnp.int32)[None]
+        positions = jnp.broadcast_to(positions, (B, S))
+    else:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+
+    # cross-attention K/V are produced per decoder layer from the shared
+    # memory inside each attn_dense_cross block
+    ctx = blk.BlockCtx(cfg=cfg, ma=ma, positions=positions,
+                       cross_memory=memory, causal=True)
+    x, new_state, aux = apply_stack(params["dec"], x, ctx, dec_layout(cfg),
+                                    state, remat, capture_wire)
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    lgts = logits(params["embeds"], x, cfg, ma)
+    return lgts, new_state, aux
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_len: int,
+                      dtype=jnp.bfloat16) -> dict:
+    return init_stack_state(cfg, dec_layout(cfg), batch, max_len, dtype)
+
+
+def decode_state_specs(cfg: ModelConfig, ma, batch: int):
+    from repro.models.transformer import stack_state_specs
+    return stack_state_specs(cfg, dec_layout(cfg), ma, batch)

@@ -1,0 +1,48 @@
+"""Modality frontend STUBS for the [vlm]/[audio] assigned archs.
+
+Per the assignment, these entries specify the transformer BACKBONE only; the
+frontend supplies precomputed patch/frame embeddings.  ``input_specs()`` in
+launch/dryrun.py therefore feeds ``ShapeDtypeStruct`` embeddings directly; the
+helpers here generate *synthetic but deterministic* embeddings for smoke
+tests and examples, with the documented geometry:
+
+* llava-next-34b: anyres tiling — a 672x672 image = 1 base 336px tile + 4
+  crops, 576 patches each -> 2880 patch embeddings (width d_model).
+* seamless-m4t-medium: 16kHz audio, 80-dim fbank at 10ms hop, conv
+  subsampling x4 -> ``frames = seconds * 25`` frame embeddings.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+LLAVA_ANYRES_TILES = 5
+LLAVA_PATCHES_PER_TILE = 576
+LLAVA_FRONTEND_TOKENS = LLAVA_ANYRES_TILES * LLAVA_PATCHES_PER_TILE  # 2880
+
+
+def vision_patch_embeds(key, batch: int, n_patches: int, d_model: int,
+                        dtype=jnp.bfloat16) -> jax.Array:
+    """Stub ViT output: unit-RMS random patch embeddings (B, P, d)."""
+    x = jax.random.normal(key, (batch, n_patches, d_model), jnp.float32)
+    return (x / jnp.sqrt(jnp.mean(x ** 2, axis=-1, keepdims=True) + 1e-6)
+            ).astype(dtype)
+
+
+def audio_frame_embeds(key, batch: int, n_frames: int, d_model: int,
+                       dtype=jnp.bfloat16) -> jax.Array:
+    """Stub speech-encoder frontend output (B, F, d): smoothed noise so the
+
+    encoder sees locally correlated 'speech-like' features."""
+    x = jax.random.normal(key, (batch, n_frames + 8, d_model), jnp.float32)
+    kernel = jnp.ones((9,), jnp.float32) / 9.0
+    x = jax.vmap(jax.vmap(lambda row: jnp.convolve(row, kernel, mode="valid"),
+                          in_axes=1, out_axes=1))(x)
+    return x[:, :n_frames].astype(dtype)
+
+
+def audio_frames_for_seq(seq_len: int) -> int:
+    """Encoder memory length paired with a decoder length (doc'd in DESIGN.md):
+
+    1/4 of the text length, capped at 4096 frames (~163s of audio)."""
+    return min(max(seq_len // 4, 64), 4096)

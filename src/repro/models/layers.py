@@ -1,0 +1,242 @@
+"""Core layers: RMSNorm, RoPE, GQA attention (+qk_norm), SwiGLU, embeddings.
+
+Pure functions over param dicts.  ``ma`` (MeshAxes | None) threads sharding
+constraints through without making the layers mesh-dependent: with ``ma=None``
+everything runs unconstrained on one device.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops, ref
+from repro.sharding.partition import MeshAxes, batch_spec, shard_constraint
+
+Params = dict
+
+
+# ---------------------------------------------------------------------------
+# Init helpers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, d_in: int, d_out: int, scale: float | None = None,
+               dtype=jnp.float32) -> jax.Array:
+    scale = scale if scale is not None else 1.0 / np.sqrt(d_in)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, (d_in, d_out)) * scale
+            ).astype(dtype)
+
+
+def norm_init(d: int, dtype=jnp.float32) -> jax.Array:
+    return jnp.ones((d,), dtype)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x: jax.Array, gamma: jax.Array, eps: float = 1e-5) -> jax.Array:
+    return ref.rmsnorm(x, gamma, eps)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings (split-half convention)
+# ---------------------------------------------------------------------------
+
+
+def rope_angles(positions: jax.Array, d_head: int, theta: float) -> tuple[jax.Array, jax.Array]:
+    """positions (..., S) int32 -> cos/sin (..., S, d_head//2) f32."""
+    half = d_head // 2
+    inv_freq = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * inv_freq
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x (B, S, H, D); cos/sin (B, S, D/2) or (S, D/2).
+
+    Angles are computed in fp32 (rope_angles) but applied in x.dtype —
+    §Perf change, cell C iteration 2 (the fp32 rotation intermediates were
+    a top-5 HBM-traffic contributor in the baseline HLO)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    if cos.ndim == 2:
+        cos = cos[None]
+        sin = sin[None]
+    cos = cos[:, :, None, :].astype(x.dtype)
+    sin = sin[:, :, None, :].astype(x.dtype)
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention
+# ---------------------------------------------------------------------------
+
+
+class KVCache(NamedTuple):
+    k: jax.Array          # (B, S_max, KH, D)
+    v: jax.Array          # (B, S_max, KH, D)
+    length: jax.Array     # () int32 — valid prefix length
+
+
+def init_attention(key, cfg: ModelConfig) -> Params:
+    hd = cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], cfg.d_model, cfg.n_heads * hd),
+        "wk": dense_init(ks[1], cfg.d_model, cfg.n_kv_heads * hd),
+        "wv": dense_init(ks[2], cfg.d_model, cfg.n_kv_heads * hd),
+        "wo": dense_init(ks[3], cfg.n_heads * hd, cfg.d_model,
+                         scale=1.0 / np.sqrt(cfg.n_heads * hd * 2 * cfg.n_layers)),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = norm_init(hd)
+        p["k_norm"] = norm_init(hd)
+    return p
+
+
+def _attn_act_spec(ma: Optional[MeshAxes], heads_sharded: bool) -> Optional[P]:
+    if ma is None:
+        return None
+    if ma.attn_batch_reshard:
+        # heads don't divide the model axis: spread batch over (data, model)
+        return P((*ma.batch, ma.model), None, None, None)
+    return P(ma.batch, None, ma.model if heads_sharded else None, None)
+
+
+def attention(
+    params: Params,
+    x: jax.Array,                       # (B, S, d_model) compute dtype
+    cfg: ModelConfig,
+    ma: Optional[MeshAxes],
+    positions: jax.Array,               # (B, S) int32 absolute positions
+    cache: Optional[KVCache] = None,    # decode: append + attend over prefix
+    cross_kv: Optional[tuple[jax.Array, jax.Array]] = None,  # enc-dec cross-attn
+    causal: bool = True,                # False: bidirectional (encoder stacks)
+) -> tuple[jax.Array, Optional[KVCache]]:
+    B, S, _ = x.shape
+    hd = cfg.head_dim
+    dtype = x.dtype
+
+    q = (x @ params["wq"].astype(dtype)).reshape(B, S, cfg.n_heads, hd)
+    if cross_kv is None:
+        k = (x @ params["wk"].astype(dtype)).reshape(B, S, cfg.n_kv_heads, hd)
+        v = (x @ params["wv"].astype(dtype)).reshape(B, S, cfg.n_kv_heads, hd)
+    else:
+        k, v = cross_kv
+
+    if cfg.qk_norm:
+        q = rmsnorm(q, params["q_norm"], cfg.norm_eps)
+        if cross_kv is None:
+            k = rmsnorm(k, params["k_norm"], cfg.norm_eps)
+
+    if cross_kv is None:
+        cos, sin = rope_angles(positions, hd, cfg.rope_theta)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+
+    q = shard_constraint(q, _attn_act_spec(ma, True))
+    k = shard_constraint(k, _attn_act_spec(ma, ma.shard_kv_heads if ma else False))
+    v = shard_constraint(v, _attn_act_spec(ma, ma.shard_kv_heads if ma else False))
+
+    new_cache = None
+    if cross_kv is not None:
+        out = ops.flash_attention(q, k, v, causal=False)
+    elif cache is None:
+        out = ops.flash_attention(q, k, v, causal=causal)
+    else:
+        # Decode: write new kv at `length`, attend over the valid prefix + new.
+        S_max = cache.k.shape[1]
+        pos = jnp.minimum(cache.length, S_max - S)
+        k_cache = jax.lax.dynamic_update_slice(cache.k, k, (0, pos, 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(cache.v, v, (0, pos, 0, 0))
+        kv_len = jnp.minimum(cache.length + S, S_max) * jnp.ones((B,), jnp.int32)
+        out = ops.flash_attention(
+            q, k_cache, v_cache, causal=True, q_offset=pos, kv_len=kv_len)
+        new_cache = KVCache(k_cache, v_cache, cache.length + S)
+
+    out = out.reshape(B, S, cfg.n_heads * hd)
+    out = out @ params["wo"].astype(dtype)
+    out = shard_constraint(out, batch_spec(ma, None, None))
+    return out, new_cache
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int,
+                  dtype=jnp.bfloat16, n_layers: Optional[int] = None) -> KVCache:
+    """Stacked (layers-leading) KV cache for the scan-over-layers decoder."""
+    n_layers = cfg.n_layers if n_layers is None else n_layers
+    shape = (n_layers, batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+    return KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype),
+                   jnp.zeros((), jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, cfg: ModelConfig, d_ff: Optional[int] = None) -> Params:
+    d_ff = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(ks[0], cfg.d_model, d_ff),
+        "w_up": dense_init(ks[1], cfg.d_model, d_ff),
+        "w_out": dense_init(ks[2], d_ff, cfg.d_model,
+                            scale=1.0 / np.sqrt(d_ff * 2 * cfg.n_layers)),
+    }
+
+
+def mlp(params: Params, x: jax.Array, ma: Optional[MeshAxes]) -> jax.Array:
+    dtype = x.dtype
+    h = jax.nn.silu(x @ params["w_gate"].astype(dtype)) * (x @ params["w_up"].astype(dtype))
+    h = shard_constraint(h, batch_spec(ma, None, ma.model) if ma else None)
+    out = h @ params["w_out"].astype(dtype)
+    return shard_constraint(out, batch_spec(ma, None, None))
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding with Megatron-style vocab padding
+# ---------------------------------------------------------------------------
+
+
+def init_embeddings(key, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 2)
+    p = {"embed": dense_init(ks[0], cfg.padded_vocab, cfg.d_model, scale=1.0)}
+    if not cfg.tie_embeddings:
+        p["unembed"] = dense_init(ks[1], cfg.padded_vocab, cfg.d_model)
+    return p
+
+
+def embed(params: Params, tokens: jax.Array, cfg: ModelConfig,
+          ma: Optional[MeshAxes], dtype=jnp.bfloat16) -> jax.Array:
+    x = jnp.take(params["embed"], tokens, axis=0).astype(dtype)
+    return shard_constraint(x, batch_spec(ma, None, None))
+
+
+def logits(params: Params, x: jax.Array, cfg: ModelConfig,
+           ma: Optional[MeshAxes]) -> jax.Array:
+    """(B, S, d_model) -> (B, S, padded_vocab) fp32, padded entries ~ -inf."""
+    table = params.get("unembed", params["embed"])
+    out = jnp.einsum("bsd,vd->bsv", x.astype(jnp.float32),
+                     table.astype(jnp.float32))
+    pad_mask = (jnp.arange(cfg.padded_vocab) >= cfg.vocab_size) * (-1e9)
+    out = out + pad_mask
+    return shard_constraint(out, batch_spec(ma, None, ma.model) if ma else None)
+
+
+def next_token_loss(lgts: jax.Array, labels: jax.Array,
+                    z_loss: float = 0.0) -> jax.Array:
+    """Mean next-token cross entropy; labels (B, S) already shifted."""
+    lse = jax.nn.logsumexp(lgts, axis=-1)
+    true_logit = jnp.take_along_axis(lgts, labels[..., None], axis=-1)[..., 0]
+    nll = lse - true_logit
+    if z_loss:
+        nll = nll + z_loss * jnp.square(lse)
+    return jnp.mean(nll)

@@ -1,0 +1,141 @@
+"""Selective state-space (Mamba) block for the Jamba hybrid architecture.
+
+Faithful to Gu & Dao selective SSM: input-dependent (Δ, B, C), diagonal A,
+causal depthwise conv front, SiLU gating, with a recurrent decode path whose
+state is O(d_inner * d_state) — this is what makes ``long_500k`` runnable for
+the hybrid arch (per-token decode cost independent of context length).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common import cdiv
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init
+
+
+class MambaState(NamedTuple):
+    h: jax.Array          # (B, d_inner, d_state) SSM hidden
+    conv: jax.Array       # (B, d_conv - 1, d_inner) causal conv tail
+
+
+def _dims(cfg: ModelConfig) -> tuple[int, int]:
+    d_inner = cfg.mamba_expand * cfg.d_model
+    dt_rank = cdiv(cfg.d_model, 16)
+    return d_inner, dt_rank
+
+
+def init_mamba(key, cfg: ModelConfig) -> dict:
+    d, (d_in, dt_rank) = cfg.d_model, _dims(cfg)
+    ks = jax.random.split(key, 6)
+    # S4D-real initialisation of A
+    A = jnp.tile(jnp.arange(1, cfg.mamba_d_state + 1, dtype=jnp.float32)[None],
+                 (d_in, 1))
+    dt_bias = jnp.log(jnp.exp(
+        jnp.clip(jax.random.uniform(ks[4], (d_in,)) *
+                 (np.log(0.1) - np.log(1e-3)) + np.log(1e-3), -10, 10).astype(jnp.float32)
+    ))
+    return {
+        "in_proj": dense_init(ks[0], d, 2 * d_in),
+        "conv_w": (jax.random.normal(ks[1], (cfg.mamba_d_conv, d_in)) /
+                   np.sqrt(cfg.mamba_d_conv)).astype(jnp.float32),
+        "conv_b": jnp.zeros((d_in,), jnp.float32),
+        "x_proj": dense_init(ks[2], d_in, dt_rank + 2 * cfg.mamba_d_state),
+        "dt_proj": dense_init(ks[3], dt_rank, d_in, scale=dt_rank ** -0.5),
+        "dt_bias": dt_bias,
+        "A_log": jnp.log(A),
+        "D": jnp.ones((d_in,), jnp.float32),
+        "out_proj": dense_init(ks[5], d_in, d,
+                               scale=1.0 / np.sqrt(d_in * 2 * cfg.n_layers)),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 tail: Optional[jax.Array]) -> tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv along seq.  x (B,S,C), w (K,C).  Returns
+
+    (y (B,S,C), new_tail (B,K-1,C))."""
+    B, S, C = x.shape
+    K = w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((B, K - 1, C), x.dtype)
+    xp = jnp.concatenate([tail.astype(x.dtype), x], axis=1)   # (B, S+K-1, C)
+    y = sum(xp[:, i:i + S, :] * w[i][None, None, :].astype(x.dtype)
+            for i in range(K))
+    y = y + b.astype(x.dtype)
+    new_tail = xp[:, -(K - 1):, :] if K > 1 else jnp.zeros((B, 0, C), x.dtype)
+    return y, new_tail
+
+
+def mamba_block(params: dict, x: jax.Array, cfg: ModelConfig,
+                state: Optional[MambaState] = None
+                ) -> tuple[jax.Array, Optional[MambaState]]:
+    """x (B, S, d_model) -> (y, new_state).  state=None => training (h0 = 0,
+
+    no state returned unless a state was passed in)."""
+    B, S, d = x.shape
+    d_in, dt_rank = _dims(cfg)
+    d_state = cfg.mamba_d_state
+    dtype = x.dtype
+
+    xz = x @ params["in_proj"].astype(dtype)
+    x_part, z = jnp.split(xz, 2, axis=-1)                     # (B,S,d_in) each
+
+    tail_in = state.conv if state is not None else None
+    x_conv, new_tail = _causal_conv(x_part, params["conv_w"], params["conv_b"], tail_in)
+    x_conv = jax.nn.silu(x_conv)
+
+    dbc = x_conv @ params["x_proj"].astype(dtype)
+    dt, B_ssm, C_ssm = jnp.split(
+        dbc.astype(jnp.float32), [dt_rank, dt_rank + d_state], axis=-1)
+    delta = jax.nn.softplus(dt @ params["dt_proj"].astype(jnp.float32)
+                            + params["dt_bias"])              # (B,S,d_in)
+    A = -jnp.exp(params["A_log"])                             # (d_in, d_state)
+
+    h0 = (state.h.astype(jnp.float32) if state is not None
+          else jnp.zeros((B, d_in, d_state), jnp.float32))
+
+    if state is None:
+        # training / prefill: the whole-sequence selective scan goes through
+        # the Pallas kernel on TPU (h resident in VMEM — §Perf cell B); the
+        # reference lax.scan elsewhere
+        from repro.kernels import ops
+        y = ops.mamba_scan(delta, x_conv.astype(jnp.float32), B_ssm, C_ssm, A)
+        h_last = h0                  # not needed without a carried state
+    else:
+        # decode: explicit recurrence carrying the state
+        # (discretisation happens INSIDE the step so the (B,S,d_in,d_state)
+        # dA/dBx tensors are never materialised across the whole sequence)
+        def step(h, inputs):
+            delta_t, B_t, C_t, x_t = inputs                   # (B,d_in)/(B,ds)
+            dA_t = jnp.exp(delta_t[..., None] * A[None])      # (B,d_in,ds)
+            dBx_t = (delta_t * x_t)[..., None] * B_t[:, None, :]
+            h = dA_t * h + dBx_t                              # (B,d_in,ds)
+            y = jnp.einsum("bds,bs->bd", h, C_t)
+            return h, y
+
+        from repro.models.scan_utils import chunked_scan, pick_chunk
+        xs = (delta.transpose(1, 0, 2), B_ssm.transpose(1, 0, 2),
+              C_ssm.transpose(1, 0, 2),
+              x_conv.astype(jnp.float32).transpose(1, 0, 2))
+        h_last, ys = chunked_scan(step, h0, xs, chunk=pick_chunk(S))
+        y = ys.transpose(1, 0, 2)                             # (B,S,d_in)
+    y = y + x_conv.astype(jnp.float32) * params["D"]
+    y = (y.astype(dtype)) * jax.nn.silu(z)
+    out = y @ params["out_proj"].astype(dtype)
+
+    new_state = MambaState(h_last.astype(jnp.float32), new_tail) \
+        if state is not None else None
+    return out, new_state
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int) -> MambaState:
+    d_in, _ = _dims(cfg)
+    return MambaState(
+        h=jnp.zeros((batch, d_in, cfg.mamba_d_state), jnp.float32),
+        conv=jnp.zeros((batch, cfg.mamba_d_conv - 1, d_in), jnp.bfloat16),
+    )

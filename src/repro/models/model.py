@@ -1,0 +1,247 @@
+"""Unified Model: one object per assigned architecture.
+
+Wraps the family-specific assemblies behind a single interface used by the
+launcher, dry-run, runtime simulation, tests and benchmarks:
+
+    model = build_model(arch_cfg)
+    params       = model.init(key)
+    state        = model.init_train_state(key)
+    new_state, m = model.train_step(state, batch, ma)       # grad-accum inside
+    logits, ...  = model.prefill_step(params, batch, ma)
+    logits, st   = model.decode_step(params, dec_state, batch, ma)
+    specs        = model.input_specs(shape)                  # ShapeDtypeStructs
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import (
+    AUDIO,
+    VLM,
+    ArchConfig,
+    ModelConfig,
+    ShapeConfig,
+)
+from repro.models import encdec, frontends, transformer
+from repro.models.layers import next_token_loss
+from repro.optim import make_optimizer
+from repro.common import global_norm
+from repro.sharding.partition import MeshAxes
+
+AUX_LOSS_WEIGHT = 0.01
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt_state: Any
+    step: jax.Array
+
+
+class Model:
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+        self.mcfg = cfg.model
+        self.optimizer = make_optimizer(cfg.parallel, cfg.train)
+        self._is_encdec = self.mcfg.is_encoder_decoder
+
+    # ------------------------------------------------------------------
+    # init
+    # ------------------------------------------------------------------
+
+    def init(self, key) -> dict:
+        if self._is_encdec:
+            params = encdec.init_params(key, self.mcfg)
+        else:
+            params = transformer.init_params(key, self.mcfg)
+        pd = jnp.dtype(self.cfg.parallel.param_dtype)
+        if pd != jnp.float32:
+            params = jax.tree.map(lambda x: x.astype(pd), params)
+        return params
+
+    def init_train_state(self, key) -> TrainState:
+        params = self.init(key)
+        return TrainState(params=params,
+                          opt_state=self.optimizer.init(params),
+                          step=jnp.zeros((), jnp.int32))
+
+    def abstract_train_state(self, key=None) -> TrainState:
+        key = key if key is not None else jax.random.key(0)
+        return jax.eval_shape(self.init_train_state, key)
+
+    def init_decode_state(self, batch: int, max_len: int, dtype=jnp.bfloat16):
+        if self._is_encdec:
+            return encdec.init_decode_state(self.mcfg, batch, max_len, dtype)
+        return transformer.init_decode_state(self.mcfg, batch, max_len, dtype)
+
+    # ------------------------------------------------------------------
+    # forward / loss
+    # ------------------------------------------------------------------
+
+    def forward(self, params, batch: dict, ma: Optional[MeshAxes],
+                state=None, capture_wire=None):
+        m = self.mcfg
+        remat = self.cfg.parallel.remat
+        if self._is_encdec:
+            return encdec.forward(
+                params, batch["tokens"], m, ma,
+                frames=batch.get("frames"), memory=batch.get("memory"),
+                state=state, remat=remat, capture_wire=capture_wire)
+        return transformer.forward(
+            params, batch["tokens"], m, ma, state=state,
+            vision_embeds=batch.get("vision_embeds"), remat=remat,
+            capture_wire=capture_wire)
+
+    def loss_fn(self, params, batch: dict, ma: Optional[MeshAxes]):
+        lgts, _, aux = self.forward(params, batch, ma)
+        loss = next_token_loss(lgts, batch["labels"], self.cfg.train.z_loss)
+        total = loss + AUX_LOSS_WEIGHT * aux
+        return total, {"loss": loss, "aux_loss": aux}
+
+    # ------------------------------------------------------------------
+    # train step (with microbatch gradient accumulation)
+    # ------------------------------------------------------------------
+
+    def train_step(self, state: TrainState, batch: dict,
+                   ma: Optional[MeshAxes] = None,
+                   sync_axes: Optional[tuple[str, ...]] = None):
+        """One optimizer step.  ``sync_axes`` limits the gradient psum (DiLoCo
+
+        inner steps pass ("data","model") so the ``pod`` axis stays local);
+        None means full sync via jit's automatic reduction."""
+        accum = self.cfg.parallel.grad_accum
+        # each microbatch must still divide the batch shards, or GSPMD is
+        # forced into full rematerialization of the activation constraints
+        batch_size = batch["tokens"].shape[0]
+        if ma is not None:
+            accum = max(min(accum, batch_size // ma.batch_shard_total), 1)
+        while batch_size % accum != 0:
+            accum -= 1
+        grad_fn = jax.value_and_grad(
+            lambda p, b: self.loss_fn(p, b, ma), has_aux=True)
+
+        if accum == 1:
+            (_, metrics), grads = grad_fn(state.params, batch)
+        else:
+            def split(x):
+                return x.reshape((accum, x.shape[0] // accum) + x.shape[1:])
+            micro = jax.tree.map(split, batch)
+
+            def acc_body(carry, mb):
+                g_acc, m_acc = carry
+                (_, m), g = grad_fn(state.params, mb)
+                g_acc = jax.tree.map(jnp.add, g_acc, g)
+                m_acc = jax.tree.map(jnp.add, m_acc, m)
+                return (g_acc, m_acc), None
+
+            zeros_g = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+            zeros_m = {"loss": jnp.zeros((), jnp.float32),
+                       "aux_loss": jnp.zeros((), jnp.float32)}
+            (grads, metrics), _ = jax.lax.scan(acc_body, (zeros_g, zeros_m), micro)
+            grads = jax.tree.map(lambda g: g / accum, grads)
+            metrics = jax.tree.map(lambda m: m / accum, metrics)
+
+        if sync_axes:
+            grads = jax.lax.pmean(grads, sync_axes)
+
+        gnorm = global_norm(grads)
+        clip = self.cfg.train.grad_clip
+        scale = jnp.minimum(1.0, clip / jnp.maximum(gnorm, 1e-6)) if clip else 1.0
+        grads = jax.tree.map(lambda g: g * scale, grads)
+
+        new_params, new_opt = self.optimizer.update(
+            grads, state.opt_state, state.params, state.step)
+        metrics = dict(metrics, grad_norm=gnorm)
+        return TrainState(new_params, new_opt, state.step + 1), metrics
+
+    # ------------------------------------------------------------------
+    # serving
+    # ------------------------------------------------------------------
+
+    def prefill_step(self, params, batch: dict, ma: Optional[MeshAxes] = None):
+        lgts, _, _ = self.forward(params, batch, ma)
+        return lgts
+
+    def decode_step(self, params, dec_state, batch: dict,
+                    ma: Optional[MeshAxes] = None):
+        """One new token against a populated cache; returns (logits, state)."""
+        lgts, new_state, _ = self.forward(params, batch, ma, state=dec_state)
+        return lgts, new_state
+
+    # ------------------------------------------------------------------
+    # input specs (ShapeDtypeStruct stand-ins — no allocation)
+    # ------------------------------------------------------------------
+
+    def input_specs(self, shape: ShapeConfig) -> dict:
+        """Abstract inputs for jit(...).lower() for this (arch x shape)."""
+        m = self.mcfg
+        B, S = shape.global_batch, shape.seq_len
+        i32, bf16 = jnp.int32, jnp.bfloat16
+        sds = jax.ShapeDtypeStruct
+
+        if shape.kind == "train":
+            if m.family == AUDIO:
+                F = frontends.audio_frames_for_seq(S)
+                return {"tokens": sds((B, S), i32), "labels": sds((B, S), i32),
+                        "frames": sds((B, F, m.d_model), bf16)}
+            if m.family == VLM:
+                S_text = S - m.frontend_tokens
+                return {"tokens": sds((B, S_text), i32),
+                        "labels": sds((B, S_text), i32),
+                        "vision_embeds": sds((B, m.frontend_tokens, m.d_model), bf16)}
+            return {"tokens": sds((B, S), i32), "labels": sds((B, S), i32)}
+
+        if shape.kind == "prefill":
+            if m.family == AUDIO:
+                F = frontends.audio_frames_for_seq(S)
+                return {"tokens": sds((B, S), i32),
+                        "frames": sds((B, F, m.d_model), bf16)}
+            if m.family == VLM:
+                return {"tokens": sds((B, S - m.frontend_tokens), i32),
+                        "vision_embeds": sds((B, m.frontend_tokens, m.d_model), bf16)}
+            return {"tokens": sds((B, S), i32)}
+
+        # decode: one new token, cache of length S supplied separately
+        batch = {"tokens": sds((B, 1), i32)}
+        if m.family == AUDIO:
+            F = frontends.audio_frames_for_seq(S)
+            batch["memory"] = sds((B, F, m.d_model), bf16)
+        return batch
+
+    def decode_state_specs(self, shape: ShapeConfig, dtype=jnp.bfloat16):
+        assert shape.kind == "decode"
+        return jax.eval_shape(
+            partial(self.init_decode_state, shape.global_batch,
+                    shape.seq_len, dtype))
+
+    # ------------------------------------------------------------------
+
+    def synth_batch(self, key, shape_or_bs, seq_len: Optional[int] = None) -> dict:
+        """Concrete synthetic batch (smoke tests / examples)."""
+        m = self.mcfg
+        if isinstance(shape_or_bs, ShapeConfig):
+            B, S = shape_or_bs.global_batch, shape_or_bs.seq_len
+        else:
+            B, S = shape_or_bs, seq_len
+        ks = jax.random.split(key, 3)
+        toks = jax.random.randint(ks[0], (B, S + 1), 0, m.vocab_size, jnp.int32)
+        batch = {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+        if m.family == AUDIO:
+            F = frontends.audio_frames_for_seq(S)
+            batch["frames"] = frontends.audio_frame_embeds(ks[1], B, F, m.d_model)
+        if m.family == VLM and m.frontend_tokens:
+            batch["vision_embeds"] = frontends.vision_patch_embeds(
+                ks[2], B, m.frontend_tokens, m.d_model)
+        return batch
+
+
+def build_model(cfg: ArchConfig) -> Model:
+    return Model(cfg)

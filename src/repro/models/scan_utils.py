@@ -1,0 +1,51 @@
+"""Sequence-scan utilities for the recurrent families (mamba / xlstm).
+
+A naive ``lax.scan`` over 4k-500k timesteps stores the carry at every step
+for the backward pass — for mLSTM's (B, H, Dh, Dh) matrix memory that is
+terabytes.  ``chunked_scan`` nests the scan: an outer scan over chunks whose
+body is ``jax.checkpoint``-ed, so only chunk-boundary carries persist and
+each chunk's interior is recomputed during its own backward.  Memory drops
+from O(S * |carry|) to O(S/c * |carry| + c * |carry|), minimised at
+c ≈ sqrt(S) but fixed at the config's ``scan_chunk`` (256) for predictable
+VMEM-friendly chunk sizes.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def chunked_scan(body: Callable, carry: Any, xs: Any, *, chunk: int = 256,
+                 remat: bool = True) -> tuple[Any, Any]:
+    """Drop-in replacement for ``jax.lax.scan(body, carry, xs)``.
+
+    xs leaves are (S, ...); S must be divisible by ``chunk`` (callers pick
+    ``chunk = S`` for short/smoke sequences).
+    """
+    S = jax.tree_util.tree_leaves(xs)[0].shape[0]
+    if chunk >= S or S % chunk != 0:
+        return jax.lax.scan(body, carry, xs)
+
+    n_chunks = S // chunk
+    xs_c = jax.tree.map(
+        lambda x: x.reshape((n_chunks, chunk) + x.shape[1:]), xs)
+
+    def chunk_body(c, x_chunk):
+        return jax.lax.scan(body, c, x_chunk)
+
+    if remat:
+        chunk_body = jax.checkpoint(
+            chunk_body, policy=jax.checkpoint_policies.nothing_saveable)
+
+    carry, ys_c = jax.lax.scan(chunk_body, carry, xs_c)
+    ys = jax.tree.map(
+        lambda y: y.reshape((S,) + y.shape[2:]), ys_c)
+    return carry, ys
+
+
+def pick_chunk(seq_len: int, preferred: int = 256) -> int:
+    if seq_len % preferred == 0:
+        return preferred
+    return seq_len

@@ -1,0 +1,363 @@
+"""Decoder-only transformer assembly: scan-over-periods + bottleneck boundaries.
+
+Parameter layout (pytree):
+
+  {"embeds": {...}, "final_norm": g,
+   "seg0": {"period": {"b0": <block params, stacked (n_periods, ...)>,
+                        "b1": ...}},
+   "bnd0": {"boundary": <core.bottleneck params>,
+            "bn_block": <block>, "post_block": <block>},     # replacement mode
+   "seg1": {...}, ...}
+
+Bottleneck boundaries (paper §4) come in two integration modes:
+
+* ``replace`` (dense decoder stacks, the paper's own scheme): the block before
+  the boundary is the *bottleneck block*, the one after is the
+  *post-bottleneck block*; both live in the ``bndI`` subtree and are applied
+  with partial-residual mixing (res_alpha).
+
+* ``insert`` (ssm / hybrid / enc-dec): blocks are untouched; an
+  encode→wire→decode pair is inserted between segments.  Noted in DESIGN.md
+  §Arch-applicability — these families' recurrent/conv state never crosses a
+  boundary, only the residual stream does.
+
+Scanning is over *periods* (the repeating block-kind unit, see
+``blocks.period_kinds``), so heterogeneous stacks (jamba 1:7, xlstm m/s
+alternation) still lower to a single compiled period body.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import bottleneck as bn
+from repro.models import blocks as blk
+from repro.models.layers import embed, init_embeddings, logits, norm_init, rmsnorm
+from repro.sharding.partition import MeshAxes, batch_spec, shard_constraint
+
+WIRE_DTYPE = jnp.bfloat16
+
+
+# ---------------------------------------------------------------------------
+# Layout planning
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class StackLayout:
+    period: tuple[str, ...]          # block kinds in one period
+    seg_periods: tuple[int, ...]     # periods per segment (len = n_bnd + 1)
+    mode: str                        # "replace" | "insert" | "none"
+
+    @property
+    def n_boundaries(self) -> int:
+        return len(self.seg_periods) - 1
+
+    def total_blocks(self) -> int:
+        n = sum(self.seg_periods) * len(self.period)
+        if self.mode == "replace":
+            n += 2 * self.n_boundaries
+        return n
+
+
+def plan_layout(cfg: ModelConfig, decoder: bool = False) -> StackLayout:
+    period = tuple(blk.period_kinds(cfg, decoder=decoder))
+    plen = len(period)
+    n_b = cfg.bottleneck.n_bottlenecks
+    if n_b == 0:
+        assert cfg.n_layers % plen == 0, (cfg.arch_id, cfg.n_layers, period)
+        return StackLayout(period, (cfg.n_layers // plen,), "none")
+
+    mode = "replace" if period == ("attn_dense",) or period == ("attn_moe",) \
+        else "insert"
+    if mode == "replace":
+        # n_layers = scanned blocks + 2 per boundary (bn + post blocks)
+        scanned = cfg.n_layers - 2 * n_b
+        assert scanned >= 0, (cfg.n_layers, n_b)
+        base, extra = divmod(scanned, n_b + 1)
+        segs = tuple(base + (1 if i < extra else 0) for i in range(n_b + 1))
+    else:
+        n_periods = cfg.n_layers // plen
+        assert n_periods >= n_b + 1, (cfg.arch_id, n_periods, n_b)
+        base, extra = divmod(n_periods, n_b + 1)
+        segs = tuple(base + (1 if i < extra else 0) for i in range(n_b + 1))
+    return StackLayout(period, segs, mode)
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def _stack_trees(trees: list) -> Any:
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def init_segment(key, layout: StackLayout, n_periods: int, cfg: ModelConfig) -> dict:
+    """Stacked params for one scanned segment of ``n_periods`` periods."""
+    insts = []
+    for p in range(n_periods):
+        kp = jax.random.fold_in(key, p)
+        inst = {f"b{i}": blk.init_block(jax.random.fold_in(kp, i), kind, cfg)
+                for i, kind in enumerate(layout.period)}
+        insts.append(inst)
+    return {"period": _stack_trees(insts)}
+
+
+def init_decoder_stack(key, cfg: ModelConfig, layout: StackLayout) -> dict:
+    params: dict = {}
+    for s, n_p in enumerate(layout.seg_periods):
+        if n_p == 0:        # dense bottleneck packing leaves empty segments
+            continue
+        params[f"seg{s}"] = init_segment(
+            jax.random.fold_in(key, 1000 + s), layout, n_p, cfg)
+    for b in range(layout.n_boundaries):
+        kb = jax.random.fold_in(key, 2000 + b)
+        bnd: dict = {"boundary": bn.init_boundary(kb, cfg)}
+        if layout.mode == "replace":
+            kind = layout.period[0]
+            bnd["bn_block"] = blk.init_block(jax.random.fold_in(kb, 1), kind, cfg)
+            bnd["post_block"] = blk.init_block(jax.random.fold_in(kb, 2), kind, cfg)
+        params[f"bnd{b}"] = bnd
+    return params
+
+
+def init_params(key, cfg: ModelConfig) -> dict:
+    layout = plan_layout(cfg)
+    k_e, k_s = jax.random.split(key)
+    return {
+        "embeds": init_embeddings(k_e, cfg),
+        "final_norm": norm_init(cfg.d_model),
+        **init_decoder_stack(k_s, cfg, layout),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Decode state
+# ---------------------------------------------------------------------------
+
+
+def init_stack_state(cfg: ModelConfig, layout: StackLayout, batch: int,
+                     max_len: int, dtype=jnp.bfloat16) -> dict:
+    def period_state():
+        return {f"b{i}": blk.init_block_state(kind, cfg, batch, max_len, dtype)
+                for i, kind in enumerate(layout.period)}
+
+    state: dict = {}
+    for s, n_p in enumerate(layout.seg_periods):
+        if n_p == 0:
+            continue
+        state[f"seg{s}"] = {"period": _stack_trees([period_state()
+                                                    for _ in range(n_p)])}
+    for b in range(layout.n_boundaries):
+        if layout.mode == "replace":
+            kind = layout.period[0]
+            state[f"bnd{b}"] = {
+                "bn_block": blk.init_block_state(kind, cfg, batch, max_len, dtype),
+                "post_block": blk.init_block_state(kind, cfg, batch, max_len, dtype),
+            }
+        else:
+            state[f"bnd{b}"] = {}
+    return state
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_len: int,
+                      dtype=jnp.bfloat16) -> dict:
+    return init_stack_state(cfg, plan_layout(cfg), batch, max_len, dtype)
+
+
+def stack_state_specs(cfg: ModelConfig, layout: StackLayout, ma, batch: int):
+    """PartitionSpec tree mirroring ``init_stack_state`` (prepends the scan
+
+    dim as replicated)."""
+    from jax.sharding import PartitionSpec as P
+
+    def period_spec():
+        return {f"b{i}": blk.block_state_specs(kind, cfg, ma, batch)
+                for i, kind in enumerate(layout.period)}
+
+    def add_lead(tree):
+        return jax.tree.map(lambda s: P(None, *s), tree,
+                            is_leaf=lambda x: isinstance(x, P))
+
+    specs: dict = {}
+    for s, n_p in enumerate(layout.seg_periods):
+        if n_p == 0:
+            continue
+        specs[f"seg{s}"] = {"period": add_lead(period_spec())}
+    for b in range(layout.n_boundaries):
+        if layout.mode == "replace":
+            kind = layout.period[0]
+            specs[f"bnd{b}"] = {
+                "bn_block": blk.block_state_specs(kind, cfg, ma, batch),
+                "post_block": blk.block_state_specs(kind, cfg, ma, batch),
+            }
+        else:
+            specs[f"bnd{b}"] = {}
+    return specs
+
+
+def decode_state_specs(cfg: ModelConfig, ma, batch: int):
+    return stack_state_specs(cfg, plan_layout(cfg), ma, batch)
+
+
+# ---------------------------------------------------------------------------
+# Apply
+# ---------------------------------------------------------------------------
+
+
+def _apply_segment(seg_params, x, ctx: blk.BlockCtx, layout: StackLayout,
+                   seg_state, remat: bool):
+    """Scan the stacked periods of one segment."""
+    period = layout.period
+
+    def period_fn(x, p_params, p_state):
+        aux = jnp.zeros((), jnp.float32)
+        new_state = {}
+        for i, kind in enumerate(period):
+            st = None if p_state is None else p_state[f"b{i}"]
+            x, ns, a = blk.apply_block(kind, p_params[f"b{i}"], x, ctx, st)
+            if p_state is not None:
+                new_state[f"b{i}"] = ns
+            aux = aux + a
+        x = shard_constraint(x, batch_spec(ctx.ma, None, None))
+        return x, new_state if p_state is not None else None, aux
+
+    if remat:
+        period_fn = jax.checkpoint(
+            period_fn, policy=jax.checkpoint_policies.nothing_saveable)
+
+    has_state = seg_state is not None
+
+    def scan_body(carry, xs):
+        x, aux = carry
+        p_params, p_state = xs
+        x, ns, a = period_fn(x, p_params, p_state)
+        return (x, aux + a), ns
+
+    xs = (seg_params["period"], seg_state["period"] if has_state else None)
+    if not has_state:
+        # scan requires xs trees with a leading axis; params provide it.
+        (x, aux), _ = jax.lax.scan(
+            lambda c, p: scan_body(c, (p, None)),
+            (x, jnp.zeros((), jnp.float32)), seg_params["period"])
+        return x, None, aux
+    (x, aux), new_state = jax.lax.scan(
+        scan_body, (x, jnp.zeros((), jnp.float32)), xs)
+    return x, {"period": new_state}, aux
+
+
+def apply_stack(params, x, ctx: blk.BlockCtx, layout: StackLayout,
+                state=None, remat: bool = True,
+                capture_wire: Optional[list] = None):
+    """Run segments + boundaries. ``capture_wire`` (a list) collects the wire
+
+    codes z at each boundary — used by tests and the pipeline engine."""
+    cfg = ctx.cfg
+    aux_total = jnp.zeros((), jnp.float32)
+    new_state: dict = {}
+    n_seg = len(layout.seg_periods)
+    for s in range(n_seg):
+        if f"seg{s}" in params:       # zero-period segments are omitted
+            seg_state = None if state is None else state[f"seg{s}"]
+            x, ns, aux = _apply_segment(
+                params[f"seg{s}"], x, ctx, layout, seg_state, remat)
+            if state is not None:
+                new_state[f"seg{s}"] = ns
+            aux_total = aux_total + aux
+
+        if s < n_seg - 1:
+            bnd = params[f"bnd{s}"]
+            bp = bnd["boundary"]
+            bnd_state_new = {}
+            if layout.mode == "replace":
+                kind = layout.period[0]
+                st = None if state is None else state[f"bnd{s}"]["bn_block"]
+                x, ns1, a1 = blk.apply_block(
+                    kind, bnd["bn_block"], x, ctx, st,
+                    res_alpha=bp["alpha_enc"])
+                z = bn.encode(bp, x, cfg, WIRE_DTYPE)            # ---- wire ----
+                if capture_wire is not None:
+                    capture_wire.append(z)
+                r = bn.decode(bp, z, cfg, x.dtype)
+                st = None if state is None else state[f"bnd{s}"]["post_block"]
+                r2, ns2, a2 = blk.apply_block(
+                    kind, bnd["post_block"], r, ctx, st,
+                    res_alpha=bp["alpha_dec"])
+                x = r2
+                aux_total = aux_total + a1 + a2
+                if state is not None:
+                    bnd_state_new = {"bn_block": ns1, "post_block": ns2}
+            else:  # insert
+                z = bn.encode(bp, x, cfg, WIRE_DTYPE)            # ---- wire ----
+                if capture_wire is not None:
+                    capture_wire.append(z)
+                x = bp["alpha_dec"].astype(x.dtype) * bn.decode(bp, z, cfg, x.dtype)
+            if state is not None:
+                new_state[f"bnd{s}"] = bnd_state_new
+    return x, (new_state if state is not None else None), aux_total
+
+
+def forward(
+    params: dict,
+    tokens: jax.Array,                  # (B, S) int32
+    cfg: ModelConfig,
+    ma: Optional[MeshAxes] = None,
+    *,
+    state: Optional[dict] = None,       # decode state (KV caches etc.)
+    positions: Optional[jax.Array] = None,
+    vision_embeds: Optional[jax.Array] = None,   # (B, P, d_model) VLM frontend
+    remat: bool = True,
+    compute_dtype=jnp.bfloat16,
+    capture_wire: Optional[list] = None,
+):
+    """Returns (logits (B, S_text, padded_vocab) f32, new_state, aux_loss)."""
+    layout = plan_layout(cfg)
+    B, S = tokens.shape
+    x = embed(params["embeds"], tokens, cfg, ma, compute_dtype)
+    n_front = 0
+    if vision_embeds is not None:
+        n_front = vision_embeds.shape[1]
+        x = jnp.concatenate([vision_embeds.astype(compute_dtype), x], axis=1)
+
+    if positions is None:
+        if state is not None:
+            length = _state_length(state)
+            positions = length + jnp.arange(S + n_front, dtype=jnp.int32)[None]
+            positions = jnp.broadcast_to(positions, (B, S + n_front))
+        else:
+            positions = jnp.broadcast_to(
+                jnp.arange(S + n_front, dtype=jnp.int32)[None], (B, S + n_front))
+
+    ctx = blk.BlockCtx(cfg=cfg, ma=ma, positions=positions)
+    x, new_state, aux = apply_stack(params, x, ctx, layout, state, remat,
+                                    capture_wire)
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    if n_front:
+        x = x[:, n_front:, :]
+    lgts = logits(params["embeds"], x, cfg, ma)
+    return lgts, new_state, aux
+
+
+def _state_length(state) -> jax.Array:
+    """Fish the scalar cache length out of a decode-state pytree."""
+    from repro.models.layers import KVCache
+    found = []
+
+    def visit(node):
+        if isinstance(node, KVCache):
+            found.append(node.length if node.length.ndim == 0 else node.length[0])
+            return
+        if isinstance(node, dict):
+            for v in node.values():
+                visit(v)
+
+    visit(state)
+    if not found:
+        return jnp.zeros((), jnp.int32)
+    return found[0]

@@ -1,0 +1,198 @@
+"""xLSTM blocks (Beck et al., arXiv:2405.04517): stabilised mLSTM + sLSTM.
+
+The xlstm-125m assigned arch alternates mLSTM (even) / sLSTM (odd) blocks.
+Both cells use exponential gating with the log-space max-stabiliser m_t, so
+training is NaN-free even with exp input gates.  Decode state is O(1) in
+sequence length — this arch runs the ``long_500k`` shape.
+
+d_ff == 0 in the assigned config: the blocks carry their own up/down
+projection (proj_factor) instead of a separate FFN, per the paper.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init, norm_init, rmsnorm
+
+
+class MLSTMState(NamedTuple):
+    C: jax.Array      # (B, H, Dh, Dh) matrix memory
+    n: jax.Array      # (B, H, Dh) normaliser
+    m: jax.Array      # (B, H) stabiliser
+
+
+class SLSTMState(NamedTuple):
+    c: jax.Array      # (B, d) scalar cell
+    n: jax.Array      # (B, d) normaliser
+    m: jax.Array      # (B, d) stabiliser
+    h: jax.Array      # (B, d) previous hidden (recurrent input)
+
+
+def _d_up(cfg: ModelConfig) -> int:
+    return int(cfg.xlstm_proj_factor * cfg.d_model)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def init_mlstm(key, cfg: ModelConfig) -> dict:
+    d, H = cfg.d_model, cfg.n_heads
+    ks = jax.random.split(key, 8)
+    return {
+        "norm": norm_init(d),
+        "wq": dense_init(ks[0], d, d),
+        "wk": dense_init(ks[1], d, d),
+        "wv": dense_init(ks[2], d, d),
+        "wgi": dense_init(ks[3], d, H, scale=0.02),
+        "wgf": dense_init(ks[4], d, H, scale=0.02),
+        "bf": jnp.ones((H,), jnp.float32) * 3.0,   # forget-gate bias: remember
+        "bi": jnp.zeros((H,), jnp.float32),
+        "up_proj": dense_init(ks[5], d, 2 * _d_up(cfg)),
+        "down_proj": dense_init(ks[6], _d_up(cfg), d,
+                                scale=1.0 / np.sqrt(_d_up(cfg) * 2 * cfg.n_layers)),
+        "out_norm": norm_init(d),
+    }
+
+
+def init_mlstm_state(cfg: ModelConfig, batch: int) -> MLSTMState:
+    H = cfg.n_heads
+    Dh = cfg.d_model // H
+    return MLSTMState(
+        C=jnp.zeros((batch, H, Dh, Dh), jnp.float32),
+        n=jnp.zeros((batch, H, Dh), jnp.float32),
+        m=jnp.full((batch, H), -1e9, jnp.float32),
+    )
+
+
+def mlstm_block(params: dict, x: jax.Array, cfg: ModelConfig,
+                state: Optional[MLSTMState] = None
+                ) -> tuple[jax.Array, Optional[MLSTMState]]:
+    B, S, d = x.shape
+    H = cfg.n_heads
+    Dh = d // H
+    dtype = x.dtype
+    xn = rmsnorm(x, params["norm"], cfg.norm_eps)
+
+    q = (xn @ params["wq"].astype(dtype)).reshape(B, S, H, Dh).astype(jnp.float32)
+    k = (xn @ params["wk"].astype(dtype)).reshape(B, S, H, Dh).astype(jnp.float32)
+    v = (xn @ params["wv"].astype(dtype)).reshape(B, S, H, Dh).astype(jnp.float32)
+    k = k / np.sqrt(Dh)
+    i_pre = (xn.astype(jnp.float32) @ params["wgi"].astype(jnp.float32)) + params["bi"]
+    f_pre = (xn.astype(jnp.float32) @ params["wgf"].astype(jnp.float32)) + params["bf"]
+
+    st = state if state is not None else init_mlstm_state(cfg, B)
+
+    def step(carry, inputs):
+        C, n, m = carry
+        q_t, k_t, v_t, i_t, f_t = inputs                       # (B,H,...)
+        log_f = -jax.nn.softplus(-f_t)                         # log sigmoid(f)
+        m_new = jnp.maximum(log_f + m, i_t)
+        i_g = jnp.exp(i_t - m_new)                             # (B,H)
+        f_g = jnp.exp(log_f + m - m_new)
+        C = f_g[..., None, None] * C + i_g[..., None, None] * (
+            v_t[..., :, None] * k_t[..., None, :])             # (B,H,Dh,Dh)
+        n = f_g[..., None] * n + i_g[..., None] * k_t
+        num = jnp.einsum("bhvk,bhk->bhv", C, q_t)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, q_t)), 1.0)
+        h_t = num / den[..., None]
+        return (C, n, m_new), h_t
+
+    from repro.models.scan_utils import chunked_scan, pick_chunk
+    xs = (q.transpose(1, 0, 2, 3), k.transpose(1, 0, 2, 3),
+          v.transpose(1, 0, 2, 3),
+          i_pre.transpose(1, 0, 2), f_pre.transpose(1, 0, 2))
+    (C, n, m), hs = chunked_scan(step, (st.C, st.n, st.m), xs,
+                                 chunk=pick_chunk(S))
+    h = hs.transpose(1, 0, 2, 3).reshape(B, S, d).astype(dtype)
+
+    h = rmsnorm(h, params["out_norm"], cfg.norm_eps)
+    u, g = jnp.split(h @ params["up_proj"].astype(dtype), 2, axis=-1)
+    out = (u * jax.nn.silu(g)) @ params["down_proj"].astype(dtype)
+    new_state = MLSTMState(C, n, m) if state is not None else None
+    return out, new_state
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def init_slstm(key, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    H = cfg.n_heads
+    dh = d // H
+    ks = jax.random.split(key, 10)
+    # recurrent matrices are block-diagonal per head: (H, dh, dh)
+    def rec(k):
+        return (jax.random.normal(k, (H, dh, dh)) / np.sqrt(dh)).astype(jnp.float32)
+    return {
+        "norm": norm_init(d),
+        "wz": dense_init(ks[0], d, d), "wi": dense_init(ks[1], d, d, scale=0.02),
+        "wf": dense_init(ks[2], d, d, scale=0.02), "wo": dense_init(ks[3], d, d),
+        "rz": rec(ks[4]), "ri": rec(ks[5]), "rf": rec(ks[6]), "ro": rec(ks[7]),
+        "bf": jnp.ones((d,), jnp.float32) * 3.0,
+        "bi": jnp.zeros((d,), jnp.float32),
+        "up_proj": dense_init(ks[8], d, 2 * _d_up(cfg)),
+        "down_proj": dense_init(ks[9], _d_up(cfg), d,
+                                scale=1.0 / np.sqrt(_d_up(cfg) * 2 * cfg.n_layers)),
+        "out_norm": norm_init(d),
+    }
+
+
+def init_slstm_state(cfg: ModelConfig, batch: int) -> SLSTMState:
+    d = cfg.d_model
+    z = jnp.zeros((batch, d), jnp.float32)
+    return SLSTMState(c=z, n=z, m=jnp.full((batch, d), -1e9, jnp.float32), h=z)
+
+
+def _blockdiag(h: jax.Array, r: jax.Array) -> jax.Array:
+    """h (B, d) x blockdiag r (H, dh, dh) -> (B, d)."""
+    B, d = h.shape
+    H, dh, _ = r.shape
+    return jnp.einsum("bhi,hij->bhj", h.reshape(B, H, dh), r).reshape(B, d)
+
+
+def slstm_block(params: dict, x: jax.Array, cfg: ModelConfig,
+                state: Optional[SLSTMState] = None
+                ) -> tuple[jax.Array, Optional[SLSTMState]]:
+    B, S, d = x.shape
+    dtype = x.dtype
+    xn = rmsnorm(x, params["norm"], cfg.norm_eps).astype(jnp.float32)
+
+    pre = {g: xn @ params["w" + g].astype(jnp.float32) for g in "zifo"}
+    st = state if state is not None else init_slstm_state(cfg, B)
+
+    def step(carry, inputs):
+        c, n, m, h = carry
+        z_t, i_t, f_t, o_t = inputs
+        z_t = z_t + _blockdiag(h, params["rz"])
+        i_t = i_t + _blockdiag(h, params["ri"]) + params["bi"]
+        f_t = f_t + _blockdiag(h, params["rf"]) + params["bf"]
+        o_t = o_t + _blockdiag(h, params["ro"])
+        log_f = -jax.nn.softplus(-f_t)
+        m_new = jnp.maximum(log_f + m, i_t)
+        i_g = jnp.exp(i_t - m_new)
+        f_g = jnp.exp(log_f + m - m_new)
+        c = f_g * c + i_g * jnp.tanh(z_t)
+        n = f_g * n + i_g
+        h_new = jax.nn.sigmoid(o_t) * c / jnp.maximum(n, 1.0)
+        return (c, n, m_new, h_new), h_new
+
+    from repro.models.scan_utils import chunked_scan, pick_chunk
+    xs = tuple(pre[g].transpose(1, 0, 2) for g in "zifo")
+    (c, n, m, h_last), hs = chunked_scan(step, (st.c, st.n, st.m, st.h), xs,
+                                         chunk=pick_chunk(S))
+    h = hs.transpose(1, 0, 2).astype(dtype)
+
+    h = rmsnorm(h, params["out_norm"], cfg.norm_eps)
+    u, g = jnp.split(h @ params["up_proj"].astype(dtype), 2, axis=-1)
+    out = (u * jax.nn.silu(g)) @ params["down_proj"].astype(dtype)
+    new_state = SLSTMState(c, n, m, h_last) if state is not None else None
+    return out, new_state

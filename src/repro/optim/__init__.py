@@ -1,0 +1,8 @@
+from repro.optim.optimizers import (  # noqa: F401
+    Optimizer,
+    adafactor,
+    adamw,
+    make_optimizer,
+    sgdm,
+)
+from repro.optim.schedules import cosine_warmup  # noqa: F401

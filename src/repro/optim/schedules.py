@@ -1,0 +1,17 @@
+"""LR schedules (pure functions of the step counter)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_warmup(lr: float, warmup_steps: int, total_steps: int,
+                  min_ratio: float = 0.1):
+    """Linear warmup -> cosine decay to min_ratio * lr."""
+    def schedule(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = lr * jnp.minimum(step / jnp.maximum(warmup_steps, 1), 1.0)
+        prog = jnp.clip((step - warmup_steps) /
+                        jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup_steps, warm, lr * cos)
+    return schedule

@@ -1,0 +1,3 @@
+from repro.runtime.orchestrator import Orchestrator, SwarmConfig  # noqa: F401
+from repro.runtime.network import FaultModel, MinerBehavior  # noqa: F401
+from repro.runtime.state_store import StateStore  # noqa: F401

@@ -1,0 +1,152 @@
+"""Per-stage model functions for the swarm runtime: each miner owns one
+
+contiguous layer slice of a dense decoder LM (paper §2.2), with bottleneck
+codes (§4) as the inter-stage wire format.
+
+Roles:
+  first: tokens --embed--> blocks --encode--> z
+  mid:   z --decode--> blocks --encode--> z'
+  last:  z --decode--> blocks --norm--> logits (loss computed by the miner:
+         'those in the final layer compute the training loss')
+
+Backward passes recompute the stage forward under ``jax.vjp`` from the
+stored input — faithful to miners keeping activations locally while only
+boundary activations transit the store.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import bottleneck as bn
+from repro.models import blocks as blk
+from repro.models.layers import (
+    embed,
+    init_embeddings,
+    logits as logits_fn,
+    next_token_loss,
+    norm_init,
+    rmsnorm,
+)
+
+WIRE_DTYPE = jnp.bfloat16
+
+
+@dataclasses.dataclass(frozen=True)
+class SwarmModelSpec:
+    cfg: ModelConfig
+    n_stages: int
+    compress: bool = True
+    bottleneck_dim: int = 16
+
+    @property
+    def layers_per_stage(self) -> int:
+        assert self.cfg.n_layers % self.n_stages == 0
+        return self.cfg.n_layers // self.n_stages
+
+    def role(self, stage: int) -> str:
+        if stage == 0:
+            return "first"
+        return "last" if stage == self.n_stages - 1 else "mid"
+
+
+def init_stage_params(key, spec: SwarmModelSpec, stage: int) -> dict:
+    cfg = spec.cfg
+    ks = jax.random.split(key, 4)
+    kind = blk.period_kinds(cfg)[0]
+    layers = [blk.init_block(jax.random.fold_in(ks[0], l), kind, cfg)
+              for l in range(spec.layers_per_stage)]
+    p: dict = {"blocks": jax.tree.map(lambda *xs: jnp.stack(xs), *layers)}
+    d, db = cfg.d_model, spec.bottleneck_dim
+    role = spec.role(stage)
+    if role == "first":
+        p["embeds"] = {"embed": init_embeddings(ks[1], cfg)["embed"]}
+    if role != "first" and spec.compress:
+        from repro.models.layers import dense_init
+        p["w_up"] = dense_init(ks[2], db, d, scale=1.0 / np.sqrt(db))
+        p["alpha_dec"] = jnp.asarray(0.5, jnp.float32)
+    if role != "last" and spec.compress:
+        from repro.models.layers import dense_init
+        p["enc_norm"] = norm_init(d)
+        p["w_down"] = dense_init(ks[3], d, db)
+    if role == "last":
+        p["final_norm"] = norm_init(d)
+        p["unembed"] = init_embeddings(
+            jax.random.fold_in(ks[1], 7), cfg)["unembed"]
+    return p
+
+
+def _blocks_apply(p_blocks, x, cfg: ModelConfig):
+    kind = blk.period_kinds(cfg)[0]
+    B, S = x.shape[0], x.shape[1]
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    ctx = blk.BlockCtx(cfg=cfg, ma=None, positions=pos)
+
+    def body(h, lp):
+        h, _, _ = blk.apply_block(kind, lp, h, ctx, None)
+        return h, None
+
+    x, _ = jax.lax.scan(body, x, p_blocks)
+    return x
+
+
+@partial(jax.jit, static_argnames=("spec", "role"))
+def stage_forward(params: dict, x_in, spec: SwarmModelSpec, role: str):
+    """x_in: tokens (first) or wire code z (mid/last).  Returns the stage
+
+    output (wire code, or logits for the last stage)."""
+    cfg = spec.cfg
+    if role == "first":
+        x = embed({"embed": params["embeds"]["embed"]}, x_in, cfg, None)
+    else:
+        if spec.compress:
+            x = (x_in.astype(jnp.float32) @ params["w_up"].astype(jnp.float32)
+                 ).astype(jnp.bfloat16)
+            x = params["alpha_dec"].astype(jnp.bfloat16) * x
+        else:
+            x = x_in.astype(jnp.bfloat16)
+    x = _blocks_apply(params["blocks"], x, cfg)
+    if role == "last":
+        x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        return logits_fn({"embed": params["unembed"]}, x, cfg, None)
+    if spec.compress:
+        xn = rmsnorm(x, params["enc_norm"], cfg.norm_eps)
+        return (xn.astype(jnp.float32) @ params["w_down"].astype(jnp.float32)
+                ).astype(WIRE_DTYPE)
+    return x.astype(WIRE_DTYPE)
+
+
+@partial(jax.jit, static_argnames=("spec",))
+def last_stage_loss_and_grads(params: dict, z_in, labels, spec: SwarmModelSpec):
+    """Last miner computes the loss; returns (loss, g_params, g_z_in)."""
+    def f(p, z):
+        lgts = stage_forward(p, z, spec, "last")
+        return next_token_loss(lgts, labels)
+
+    loss, (g_params, g_z) = jax.value_and_grad(f, argnums=(0, 1))(params, z_in)
+    return loss, g_params, g_z
+
+
+@partial(jax.jit, static_argnames=("spec", "role"))
+def stage_backward(params: dict, x_in, g_out, spec: SwarmModelSpec, role: str):
+    """Recompute-forward VJP: returns (g_params, g_x_in).
+
+    For the first stage g_x_in is None-like (tokens are integers)."""
+    def f(p, x):
+        return stage_forward(p, x, spec, role)
+
+    if role == "first":
+        g_params = jax.grad(
+            lambda p: jnp.vdot(f(p, x_in).astype(jnp.float32),
+                               g_out.astype(jnp.float32)))(params)
+        return g_params, None
+    _, vjp = jax.vjp(f, params, x_in)
+    g_params, g_x = vjp(g_out.astype(WIRE_DTYPE) if spec.compress
+                        else g_out.astype(WIRE_DTYPE))
+    return g_params, g_x

@@ -1,0 +1,102 @@
+"""The globally accessible database of paper §2 ('S3 bucket', Fig 6).
+
+All miner/validator/orchestrator traffic flows through here, which is what
+makes interactions auditable ('making it easy to trace the movement of
+information').  In-process dict with:
+  * content digests (tamper evidence for validators),
+  * byte accounting per (namespace, direction) — the §5.3 transfer-analysis
+    benchmark reads these counters,
+  * optional wire codec applied on put (compressed sharing stage).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import defaultdict
+from typing import Any, Optional
+
+import jax
+from jax.flatten_util import ravel_pytree
+import numpy as np
+
+from repro.core import compression
+
+
+@dataclasses.dataclass
+class StoreEntry:
+    payload: Any
+    nbytes: int
+    digest: str
+    meta: dict
+
+
+def _nbytes(value: Any) -> int:
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(value):
+        arr = np.asarray(leaf)
+        total += arr.nbytes
+    return total
+
+
+def _digest(value: Any) -> str:
+    import hashlib
+    h = hashlib.blake2b(digest_size=12)
+    for leaf in jax.tree_util.tree_leaves(value):
+        h.update(np.ascontiguousarray(np.asarray(leaf)).tobytes())
+    return h.hexdigest()
+
+
+class StateStore:
+    def __init__(self):
+        self._data: dict[str, StoreEntry] = {}
+        self.uploaded = defaultdict(int)      # namespace -> bytes
+        self.downloaded = defaultdict(int)
+        self.uploads_by_actor = defaultdict(int)
+        self.downloads_by_actor = defaultdict(int)
+
+    @staticmethod
+    def _ns(key: str) -> str:
+        return key.split("/", 1)[0]
+
+    def put(self, key: str, value: Any, actor: str = "?",
+            codec: Optional[str] = None, meta: Optional[dict] = None) -> str:
+        if codec and codec != "none":
+            flat, _ = ravel_pytree(value)
+            value = compression.encode(flat, codec)
+        nbytes = _nbytes(value)
+        digest = _digest(value)
+        self._data[key] = StoreEntry(value, nbytes, digest,
+                                     dict(meta or {}, codec=codec or "none"))
+        self.uploaded[self._ns(key)] += nbytes
+        self.uploads_by_actor[actor] += nbytes
+        return digest
+
+    def get(self, key: str, actor: str = "?") -> Any:
+        entry = self._data[key]
+        self.downloaded[self._ns(key)] += entry.nbytes
+        self.downloads_by_actor[actor] += entry.nbytes
+        return entry.payload
+
+    def get_entry(self, key: str) -> StoreEntry:
+        return self._data[key]
+
+    def exists(self, key: str) -> bool:
+        return key in self._data
+
+    def delete_prefix(self, prefix: str) -> int:
+        doomed = [k for k in self._data if k.startswith(prefix)]
+        for k in doomed:
+            del self._data[k]
+        return len(doomed)
+
+    def keys(self, prefix: str = "") -> list[str]:
+        return sorted(k for k in self._data if k.startswith(prefix))
+
+    def traffic_report(self) -> dict:
+        return {
+            "uploaded": dict(self.uploaded),
+            "downloaded": dict(self.downloaded),
+            "by_actor_up": dict(self.uploads_by_actor),
+            "by_actor_down": dict(self.downloads_by_actor),
+            "total_bytes": (sum(self.uploaded.values())
+                            + sum(self.downloaded.values())),
+        }

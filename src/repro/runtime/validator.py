@@ -1,0 +1,103 @@
+"""Validator (paper §2.3, §3): computational-reproducibility auditing.
+
+At full sync the validator copies a target miner's state; during the epoch
+it re-runs the miner's logged work *in order* (forward from the same store
+inputs, backward with the same gradients), comparing its own outputs to the
+miner's uploads by cosine similarity.  Deviation below threshold => the
+work is rejected; the epoch score S_m^n is the count of *validated*
+backward passes.  Miners never know when they are tracked.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common import cosine_similarity
+from repro.core.incentives import IncentiveLedger
+from repro.runtime import stage_model as sm
+from repro.runtime.miner import Miner
+from repro.runtime.state_store import StateStore
+
+COSINE_THRESHOLD = 0.99
+
+
+@dataclasses.dataclass
+class ValidationResult:
+    miner_uid: int
+    epoch: int
+    checked: int
+    passed: int
+    score: float                 # validated backward passes
+    min_cosine: float
+
+    @property
+    def honest(self) -> bool:
+        return self.checked == 0 or self.passed == self.checked
+
+
+class Validator:
+    def __init__(self, uid: int, store: StateStore, ledger: IncentiveLedger):
+        self.uid = uid
+        self.store = store
+        self.ledger = ledger
+        self.results: list[ValidationResult] = []
+
+    @property
+    def actor(self) -> str:
+        return f"validator{self.uid}"
+
+    def validate_epoch(self, miner: Miner, snapshot: dict, epoch: int,
+                       t_now: float, labels_for: dict,
+                       max_items: Optional[int] = None) -> ValidationResult:
+        """Replay ``miner``'s logged epoch from ``snapshot`` (its full-sync
+
+        state).  ``labels_for`` maps sample_key -> labels (the validator
+        reads the same dataset shard).  Scores are assigned per §3."""
+        params = snapshot["params"]
+        opt_state = snapshot["opt_state"]
+        inner_step = snapshot["inner_step"]
+        opt = miner.opt
+        spec, role = miner.spec, miner.role
+
+        checked = passed = 0
+        validated_backwards = 0.0
+        min_cos = 1.0
+        items = miner.work_log if max_items is None else miner.work_log[:max_items]
+        for item in items:
+            x_in = self.store.get(item.sample_key, actor=self.actor)
+            mine = sm.stage_forward(params, x_in, spec, role)
+            theirs = self.store.get(item.out_key, actor=self.actor)
+            cos = float(cosine_similarity(jnp.asarray(mine, jnp.float32),
+                                          jnp.asarray(theirs, jnp.float32)))
+            checked += 1
+            min_cos = min(min_cos, cos)
+            ok = cos >= COSINE_THRESHOLD
+            passed += int(ok)
+            if not item.did_backward:
+                continue
+            # replay the miner's local update so later items line up
+            if role == "last":
+                labels = labels_for[item.sample_key]
+                _, g_params, _ = sm.last_stage_loss_and_grads(
+                    params, x_in, labels, spec)
+            else:
+                g_out_key = item.out_key + "/grad"
+                if not self.store.exists(g_out_key):
+                    continue
+                g_out = self.store.get(g_out_key, actor=self.actor)
+                g_params, _ = sm.stage_backward(params, x_in, g_out, spec, role)
+            params, opt_state = opt.update(g_params, opt_state, params,
+                                           inner_step)
+            inner_step = inner_step + 1
+            if ok:
+                validated_backwards += 1.0
+
+        result = ValidationResult(miner.uid, epoch, checked, passed,
+                                  validated_backwards, min_cos)
+        self.results.append(result)
+        self.ledger.record(miner.uid, epoch, result.score, t_now)
+        return result

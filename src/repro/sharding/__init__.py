@@ -1,0 +1,8 @@
+from repro.sharding.partition import (  # noqa: F401
+    MeshAxes,
+    batch_spec,
+    make_mesh_axes,
+    param_shardings,
+    param_specs,
+    shard_constraint,
+)

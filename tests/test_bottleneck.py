@@ -1,0 +1,97 @@
+"""Bottleneck compression blocks (paper §4): ratios, residual flow, wire."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get, smoke_variant
+from repro.configs.base import BottleneckConfig
+from repro.core import bottleneck as bn
+from repro.models import build_model, transformer
+
+
+def test_paper_headline_128x():
+    """2048-d fp32 basis, 32-d bf16 wire -> the paper's 128x."""
+    cfg = get("iota-bottleneck-1.5b").model
+    rep = bn.compression_report(cfg)
+    assert rep["ratio_vs_fp32"] == pytest.approx(128.0)
+    assert rep["ratio_vs_bf16"] == pytest.approx(64.0)
+    assert rep["wire_bytes_per_token"] == 64
+
+
+def test_boundary_positions_spacing():
+    assert bn.boundary_positions(16, 3) == [3, 8, 12]
+    assert bn.boundary_positions(16, 0) == []
+    # the paper's extreme case: 8 bottlenecks in 16 layers = 50% replaced
+    pos = bn.boundary_positions(16, 8)
+    assert pos == [0, 2, 4, 6, 8, 10, 12, 14]
+    assert all(b - a >= 2 for a, b in zip(pos, pos[1:]))
+
+
+def test_wire_capture_is_bottleneck_width():
+    cfg = smoke_variant(get("iota-bottleneck-1.5b"))
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    batch = model.synth_batch(jax.random.key(1), 2, 16)
+    wires = []
+    lgts, _, _ = model.forward(params, batch, None, capture_wire=wires)
+    assert len(wires) == cfg.model.bottleneck.n_bottlenecks
+    for z in wires:
+        assert z.shape == (2, 16, cfg.model.bottleneck.bottleneck_dim)
+        assert z.dtype == jnp.bfloat16
+
+
+def test_gradients_flow_through_boundary():
+    """The stated §4 property: residual pathway crosses the boundary through
+
+    z, so upstream blocks still receive gradients."""
+    cfg = smoke_variant(get("iota-bottleneck-1.5b"))
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    batch = model.synth_batch(jax.random.key(1), 2, 16)
+
+    def loss(p):
+        return model.loss_fn(p, batch, None)[0]
+
+    grads = jax.grad(loss)(params)
+    # first-segment block weights (upstream of every boundary) get signal
+    g0 = grads["seg0"]["period"]["b0"]["attn"]["wq"]
+    assert float(jnp.max(jnp.abs(g0))) > 0
+    # and the boundary projections themselves train
+    gb = grads["bnd0"]["boundary"]["w_down"]
+    assert float(jnp.max(jnp.abs(gb))) > 0
+
+
+def test_insert_mode_for_ssm():
+    cfg = smoke_variant(get("xlstm-125m"))
+    mcfg = dataclasses.replace(
+        cfg.model, bottleneck=BottleneckConfig(n_bottlenecks=1,
+                                               bottleneck_dim=8))
+    layout = transformer.plan_layout(mcfg)
+    assert layout.mode == "insert"
+    cfg2 = dataclasses.replace(cfg, model=mcfg)
+    model = build_model(cfg2)
+    params = model.init(jax.random.key(0))
+    batch = model.synth_batch(jax.random.key(1), 2, 16)
+    lgts, _, _ = model.forward(params, batch, None)
+    assert bool(jnp.all(jnp.isfinite(lgts)))
+
+
+def test_replace_mode_block_count():
+    cfg = get("iota-bottleneck-1.5b").model
+    layout = transformer.plan_layout(cfg)
+    assert layout.mode == "replace"
+    assert layout.total_blocks() == cfg.n_layers
+
+
+@pytest.mark.parametrize("n_b,dim,expected", [(3, 32, 128), (3, 128, 32),
+                                              (8, 32, 128)])
+def test_compression_ratio_table(n_b, dim, expected):
+    """Fig 5's sweep: ratios are vs fp32 full width."""
+    cfg = dataclasses.replace(
+        get("iota-bottleneck-1.5b").model,
+        bottleneck=BottleneckConfig(n_bottlenecks=n_b, bottleneck_dim=dim))
+    assert cfg.bottleneck.compression_ratio(cfg.d_model) == pytest.approx(
+        expected)

@@ -1,0 +1,107 @@
+"""Butterfly All-Reduce (paper §5): plan structure, reduce correctness,
+
+fault math, agreement matrix, O(1) bandwidth."""
+import itertools
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import butterfly
+
+
+def test_plan_covers_every_pair_once():
+    plan = butterfly.make_plan(6, 1000, seed=1)
+    assert plan.n_shards == 15          # C(6,2)
+    assert sorted(map(tuple, map(sorted, plan.pairs))) == sorted(
+        itertools.combinations(range(6), 2))
+
+
+def test_plan_shards_partition_vector():
+    plan = butterfly.make_plan(5, 997, seed=2)   # prime length: uneven shards
+    covered = []
+    for s in range(plan.n_shards):
+        lo, hi = plan.shard_bounds(s)
+        covered.extend(range(lo, hi))
+    assert covered == list(range(997))
+
+
+def test_each_miner_reduces_one_shard_per_partner():
+    plan = butterfly.make_plan(7, 1000, seed=3)
+    for m in range(7):
+        assert len(plan.shards_of(m)) == 6      # N-1
+
+
+def test_reduce_equals_mean():
+    plan = butterfly.make_plan(4, 500, seed=0)
+    uploads = {m: np.random.RandomState(m).randn(500).astype(np.float32)
+               for m in range(4)}
+    merged, valid, agree = butterfly.reduce_shards(plan, uploads)
+    np.testing.assert_allclose(
+        merged, np.mean([uploads[m] for m in range(4)], axis=0), atol=1e-5)
+    assert valid.all() and agree.all()
+
+
+def test_missing_upload_masked_not_fatal():
+    plan = butterfly.make_plan(5, 300, seed=0)
+    uploads = {m: np.full(300, float(m), np.float32) for m in range(5)}
+    del uploads[2]                               # miner 2 never uploaded
+    merged, valid, _ = butterfly.reduce_shards(plan, uploads)
+    np.testing.assert_allclose(merged, np.full(300, (0 + 1 + 3 + 4) / 4.0),
+                               atol=1e-5)
+    assert valid.all()                           # reducers still alive
+
+
+def test_both_reducers_down_loses_only_their_shard():
+    plan = butterfly.make_plan(5, 1000, seed=0)
+    uploads = {m: np.ones(1000, np.float32) for m in range(5)}
+    reducer_ok = [True] * 5
+    reducer_ok[1] = reducer_ok[3] = False        # pair (1,3) both dead
+    merged, valid, _ = butterfly.reduce_shards(plan, uploads, reducer_ok)
+    dead_shards = [s for s, p in enumerate(plan.pairs)
+                   if set(p) <= {1, 3}]
+    assert len(dead_shards) == 1
+    assert not valid[dead_shards[0]]
+    # C(5,2) - C(2,2) = 9 of 10 shards valid
+    assert valid.sum() == 9
+
+
+@given(n=st.integers(2, 40), k_frac=st.floats(0, 1))
+@settings(max_examples=50, deadline=None)
+def test_valid_fraction_formula_matches_combinatorics(n, k_frac):
+    k = int(n * k_frac)
+    expected = 1.0 if n < 2 else (
+        (n * (n - 1) // 2 - k * (k - 1) // 2) / (n * (n - 1) // 2))
+    assert butterfly.valid_shard_fraction(n, k) == pytest.approx(expected)
+
+
+def test_paper_fig7b_claims():
+    """Paper: at 10% failures >99% weights retained; tolerant to 35%."""
+    assert butterfly.valid_shard_fraction(50, 5) > 0.99
+    assert butterfly.valid_shard_fraction(50, 17) > 0.88   # ~35% failures
+
+
+def test_agreement_matrix_exposes_tamperer():
+    plan = butterfly.make_plan(6, 600, seed=0)
+    uploads = {m: np.random.RandomState(m).randn(600).astype(np.float32)
+               for m in range(6)}
+    copies = butterfly.reduce_with_copies(plan, uploads, tamper={2: 0.5})
+    agree = butterfly.agreement_matrix(plan, copies)
+    off_diag = ~np.eye(6, dtype=bool)
+    # miner 2 disagrees with every partner; the rest agree fully
+    assert np.nanmin(agree[2][np.arange(6) != 2]) == 0.0
+    honest = [i for i in range(6) if i != 2]
+    assert np.nanmin(agree[np.ix_(honest, honest)][
+        ~np.eye(5, dtype=bool)]) == 1.0
+
+
+@given(n=st.integers(2, 64))
+@settings(max_examples=30, deadline=None)
+def test_transfer_volume_o1(n):
+    """Per-miner traffic is 4W + 2W/N — bounded by 5W for any N (O(1))."""
+    vol = butterfly.transfer_volume(n, 1.0)
+    assert vol["per_miner_bytes"] <= 5.0
+    assert vol["per_miner_bytes"] == pytest.approx(4 + 2 / n)
+    # the central merger's ingest grows linearly — crossover proves O(1) wins
+    if n > 5:
+        assert vol["per_miner_bytes"] < vol["central_merger_bytes"]

@@ -1,0 +1,120 @@
+"""Checkpointing: atomic/integrity/async/elastic (fault-tolerance contract)."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager, restore_pytree, save_pytree
+
+
+def _tree(seed=0):
+    k = jax.random.key(seed)
+    return {"a": jax.random.normal(k, (8, 16)),
+            "nested": {"b": jnp.arange(10, dtype=jnp.int32),
+                       "c": jnp.ones((3,), jnp.bfloat16)}}
+
+
+def test_roundtrip(tmp_path):
+    t = _tree()
+    save_pytree(t, str(tmp_path / "ck"), {"step": 7})
+    restored, meta = restore_pytree(t, str(tmp_path / "ck"))
+    assert meta["step"] == 7
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert a.dtype == b.dtype
+
+
+def test_integrity_check_detects_corruption(tmp_path):
+    t = _tree()
+    save_pytree(t, str(tmp_path / "ck"))
+    # flip bytes in one leaf file
+    victim = sorted(os.listdir(tmp_path / "ck"))[0]
+    path = tmp_path / "ck" / victim
+    arr = np.load(path)
+    arr = np.asarray(arr).copy()
+    arr.reshape(-1)[0] += 1
+    np.save(path, arr)
+    with pytest.raises(IOError, match="corruption"):
+        restore_pytree(t, str(tmp_path / "ck"))
+
+
+def test_elastic_partial_restore(tmp_path):
+    """A template with extra/renamed leaves restores the matching subset."""
+    t = _tree()
+    save_pytree(t, str(tmp_path / "ck"))
+    template = {"a": jnp.zeros((8, 16)),
+                "nested": {"b": jnp.zeros(10, jnp.int32),
+                           "c": jnp.zeros((3,), jnp.bfloat16),
+                           "new_buffer": jnp.full((4,), -1.0)}}
+    restored, _ = restore_pytree(template, str(tmp_path / "ck"))
+    np.testing.assert_array_equal(np.asarray(restored["a"]),
+                                  np.asarray(t["a"]))
+    np.testing.assert_array_equal(np.asarray(restored["nested"]["new_buffer"]),
+                                  -1.0)  # kept from template
+
+
+def test_manager_rolling_gc_and_latest(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2, async_save=False)
+    for step in (10, 20, 30):
+        mgr.save(step, _tree(step))
+    assert mgr.all_steps() == [20, 30]
+    assert mgr.latest_step() == 30
+    restored, meta = mgr.restore(_tree())
+    assert meta["step"] == 30
+
+
+def test_manager_async_save(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), async_save=True)
+    t = _tree(1)
+    mgr.save(5, t)
+    mgr.wait()
+    restored, meta = mgr.restore(t)
+    assert meta["step"] == 5
+
+
+def test_atomicity_tmp_never_visible(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    mgr.save(1, _tree())
+    assert not any(n.endswith(".tmp") for n in os.listdir(tmp_path))
+
+
+def test_train_driver_preemption_resume(tmp_path):
+    """Kill the training driver mid-run; resume reproduces the uninterrupted
+
+    trajectory (same final loss) — checkpoint/restart works end to end."""
+    import subprocess
+    import sys
+    src = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+    env = dict(os.environ, PYTHONPATH=src)
+    base = [sys.executable, "-m", "repro.launch.train", "--arch",
+            "llama3.2-1b", "--smoke", "--batch-size", "2", "--seq-len", "32",
+            "--ckpt-every", "5", "--log-every", "5"]
+    # uninterrupted 15 steps
+    r0 = subprocess.run(base + ["--steps", "15", "--ckpt-dir",
+                                str(tmp_path / "a")],
+                        capture_output=True, text=True, env=env, timeout=600)
+    assert r0.returncode == 0, r0.stderr[-2000:]
+    # killed at step 10, then resumed
+    r1 = subprocess.run(base + ["--steps", "15", "--ckpt-dir",
+                                str(tmp_path / "b"), "--kill-at-step", "10"],
+                        capture_output=True, text=True, env=env, timeout=600)
+    assert r1.returncode == 17
+    r2 = subprocess.run(base + ["--steps", "15", "--ckpt-dir",
+                                str(tmp_path / "b"), "--resume"],
+                        capture_output=True, text=True, env=env, timeout=600)
+    assert r2.returncode == 0, r2.stderr[-2000:]
+    # the async step-10 save may have been killed mid-write; atomicity
+    # guarantees we resume from SOME intact checkpoint (5 or 10), and the
+    # final-loss equality below proves the trajectory replays exactly
+    assert ("resumed from step 10" in r2.stdout
+            or "resumed from step 5" in r2.stdout)
+
+    import json
+    last0 = json.loads([l for l in r0.stdout.splitlines()
+                        if l.startswith("{")][-1])
+    last2 = json.loads([l for l in r2.stdout.splitlines()
+                        if l.startswith("{")][-1])
+    assert last0["step"] == last2["step"] == 15
+    assert abs(last0["loss"] - last2["loss"]) < 1e-4

@@ -1,0 +1,70 @@
+"""CLASP (paper §6 / App. B): attribution, outlier detection, Fig 8."""
+import numpy as np
+import pytest
+
+from repro.core import clasp
+
+
+def _run(malicious, n_samples=4000, **kw):
+    cfg = clasp.ToyConfig(n_samples=n_samples, **kw)
+    recs, layer_of = clasp.toy_simulation(cfg, malicious)
+    n = cfg.n_layers * cfg.miners_per_layer
+    return recs, layer_of, n
+
+
+def test_flags_planted_outliers_cond_mean():
+    recs, layer_of, n = _run([3, 12])
+    rep = clasp.attribute(recs, n, layer_of)
+    assert set(np.where(rep.flagged)[0]) == {3, 12}
+
+
+def test_flags_planted_outliers_regression():
+    recs, layer_of, n = _run([3, 12, 13])
+    rep = clasp.attribute_regression(recs, n, layer_of)
+    assert set(np.where(rep.flagged)[0]) == {3, 12, 13}
+
+
+def test_regression_sharper_with_colluding_bad_actors():
+    """Two bad miners in the SAME layer contaminate each other's conditional
+
+    mean baseline; the regression separates them anyway."""
+    recs, layer_of, n = _run([10, 11], n_samples=6000)
+    rep_mean = clasp.attribute(recs, n, layer_of)
+    rep_reg = clasp.attribute_regression(recs, n, layer_of)
+    honest = [i for i in range(n) if i not in (10, 11)]
+    margin_reg = min(rep_reg.z_scores[[10, 11]]) - max(rep_reg.z_scores[honest])
+    assert set(np.where(rep_reg.flagged)[0]) == {10, 11}
+    assert margin_reg > 0
+
+
+def test_fig8b_fair_miner_suppression():
+    """Fig 8b: fair miners sharing a layer with bad actors show reduced
+
+    conditional-mean contribution."""
+    recs, layer_of, n = _run([7], n_samples=8000)
+    rep = clasp.attribute(recs, n, layer_of)
+    assert clasp.fair_miner_suppression(rep, [7]) < 0
+
+
+def test_counts_match_sampling():
+    recs, layer_of, n = _run([], n_samples=1000)
+    rep = clasp.attribute(recs, n, layer_of)
+    # every sample hits exactly one miner per layer
+    assert rep.counts.sum() == 1000 * 5
+    assert (rep.counts > 0).all()
+
+
+def test_no_false_positives_when_honest():
+    recs, layer_of, n = _run([], n_samples=5000)
+    for fn in (clasp.attribute, clasp.attribute_regression):
+        rep = fn(recs, n, layer_of)
+        assert not rep.flagged.any()
+
+
+def test_pathway_sampler_one_per_layer():
+    rng = np.random.RandomState(0)
+    layers = [[0, 1], [2, 3], [4, 5]]
+    for p in clasp.sample_pathways(rng, layers, 100):
+        assert len(p) == 3
+        for s, m in enumerate(p):
+            assert m in layers[s]

@@ -1,0 +1,75 @@
+"""Wire codecs + CLASP top-k logits (paper §2 compressed sharing, §4, §6)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import compression
+
+
+@pytest.mark.parametrize("codec", compression.CODECS)
+def test_roundtrip_shapes(codec):
+    v = jnp.asarray(np.random.RandomState(0).randn(4096), jnp.float32)
+    p = compression.encode(v, codec)
+    r = compression.decode(p, 4096)
+    assert r.shape == v.shape
+
+
+def test_bf16_ratio_and_error():
+    v = jnp.asarray(np.random.RandomState(1).randn(4096), jnp.float32)
+    p = compression.encode(v, "bf16")
+    assert compression.compression_ratio(p, 4096) == pytest.approx(2.0)
+    assert float(jnp.max(jnp.abs(compression.decode(p, 4096) - v))) < 0.05
+
+
+def test_int8_error_bounded_by_scale():
+    v = jnp.asarray(np.random.RandomState(2).randn(4096) * 3, jnp.float32)
+    p = compression.encode(v, "int8")
+    r = compression.decode(p, 4096)
+    # per-block error <= scale/2 = amax/254
+    blocks = np.asarray(v).reshape(-1, compression.INT8_BLOCK)
+    amax = np.abs(blocks).max(axis=1)
+    err = np.abs(np.asarray(r - v)).reshape(-1, compression.INT8_BLOCK)
+    assert (err.max(axis=1) <= amax / 127.0 * 0.51 + 1e-6).all()
+
+
+def test_topk_keeps_largest():
+    v = jnp.zeros(1024).at[17].set(100.0).at[500].set(-50.0)
+    p = compression.encode(v, "topk", topk_frac=2 / 1024)
+    r = compression.decode(p, 1024)
+    assert float(r[17]) == pytest.approx(100.0, rel=1e-2)
+    assert float(r[500]) == pytest.approx(-50.0, rel=1e-2)
+    assert float(jnp.sum(jnp.abs(r))) == pytest.approx(150.0, rel=1e-2)
+
+
+@given(frac=st.sampled_from([1 / 256, 1 / 64, 1 / 16]),
+       seed=st.integers(0, 10))
+@settings(max_examples=20, deadline=None)
+def test_topk_ratio_scales(frac, seed):
+    v = jnp.asarray(np.random.RandomState(seed).randn(8192), jnp.float32)
+    p = compression.encode(v, "topk", topk_frac=frac)
+    ratio = compression.compression_ratio(p, 8192)
+    # values bf16 + idx int32 = 6 bytes per kept element vs 4*n
+    assert ratio == pytest.approx((4 / 6) / frac, rel=0.1)
+
+
+def test_topk_logits_exact_when_label_in_topk():
+    rng = np.random.RandomState(3)
+    logits = jnp.asarray(rng.randn(4, 8, 512) * 3, jnp.float32)
+    labels = jnp.argmax(logits, axis=-1)       # guaranteed in top-k
+    payload = compression.topk_logits(logits, k=16)
+    nll, exact = compression.loss_from_topk(payload, labels)
+    ref = -(jax.nn.log_softmax(logits)[
+        jnp.arange(4)[:, None], jnp.arange(8)[None], labels])
+    assert bool(jnp.all(exact))
+    # values ride the wire in bf16: |err| <= bf16 eps at the logit scale
+    np.testing.assert_allclose(np.asarray(nll), np.asarray(ref),
+                               rtol=5e-2, atol=0.15)
+
+
+def test_topk_logits_bandwidth():
+    logits = jnp.zeros((1, 1, 151936))
+    payload = compression.topk_logits(logits, k=64)
+    nbytes = compression.payload_bytes(payload)
+    assert nbytes < 151936 * 4 / 100           # >100x smaller than raw fp32

@@ -1,0 +1,59 @@
+"""Incentives (paper §3, App. A): step decay, proportional emissions,
+
+stability simulation (Fig 9)."""
+import numpy as np
+import pytest
+
+from repro.core import incentives
+
+
+def test_step_decay():
+    led = incentives.IncentiveLedger(gamma=10.0)
+    led.record(0, 0, 5.0, t=0.0)
+    assert led.raw_incentive(0, t_now=9.9) == 5.0     # inside gamma
+    assert led.raw_incentive(0, t_now=10.1) == 0.0    # expired
+
+
+def test_emissions_proportional_to_work():
+    led = incentives.IncentiveLedger(gamma=100.0)
+    led.record(0, 0, 30.0, 0.0)
+    led.record(1, 0, 10.0, 0.0)
+    em = led.emissions(t_now=1.0, total_emission=1.0)
+    assert em[0] == pytest.approx(0.75)
+    assert em[1] == pytest.approx(0.25)
+
+
+def test_fixed_compensation_per_activation():
+    """§3: linear reward — doubling backward passes doubles the share ratio."""
+    led = incentives.IncentiveLedger(gamma=100.0)
+    led.record(0, 0, 10.0, 0.0)
+    led.record(1, 0, 20.0, 0.0)
+    em = led.emissions(1.0)
+    assert em[1] / em[0] == pytest.approx(2.0)
+
+
+def test_n_scores_formula():
+    assert incentives.expected_live_scores(10.0, 0.5) == 20.0
+
+
+def test_fig9_stability_improves_with_gamma():
+    """Appendix A: longer decay gamma (more live scores) -> lower emission
+
+    variance; very short gamma is unstable."""
+    cv_short = incentives.stability_simulation(1.0, 1.0, seed=1)["cv"]
+    cv_long = incentives.stability_simulation(1.0, 16.0, seed=1)["cv"]
+    assert cv_long < cv_short
+
+
+def test_fig9_stability_improves_with_faster_sync():
+    cv_slow = incentives.stability_simulation(8.0, 16.0, seed=2)["cv"]
+    cv_fast = incentives.stability_simulation(0.5, 16.0, seed=2)["cv"]
+    assert cv_fast < cv_slow
+
+
+def test_prune_drops_expired():
+    led = incentives.IncentiveLedger(gamma=1.0)
+    led.record(0, 0, 1.0, 0.0)
+    led.record(0, 1, 1.0, 5.0)
+    led.prune(t_now=5.0)
+    assert len(led.entries) == 1

@@ -1,0 +1,216 @@
+"""Pallas kernel validation: shape/dtype sweeps vs the ref.py oracles,
+
+run under interpret=True on CPU (assignment requirement)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from repro.kernels import (
+    bottleneck_fused as bf,
+    flash_attention as fa,
+    quant_stream as qs,
+    ref,
+    shard_merge as sm,
+)
+
+RNG = np.random.RandomState(0)
+
+
+def _tol(dtype):
+    return dict(rtol=3e-2, atol=3e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-3, atol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# bottleneck encode / decode
+# ---------------------------------------------------------------------------
+
+ENC_SHAPES = [(1, 8, 128), (2, 17, 256), (4, 64, 512), (3, 33, 1024)]
+
+
+@pytest.mark.parametrize("shape", ENC_SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("db", [16, 32])
+def test_bottleneck_encode_sweep(shape, dtype, db):
+    d = shape[-1]
+    x = jnp.asarray(RNG.randn(*shape), dtype)
+    gamma = jnp.asarray(RNG.rand(d) + 0.5, jnp.float32)
+    w = jnp.asarray(RNG.randn(d, db) * 0.05, jnp.float32)
+    got = bf.bottleneck_encode(x, gamma, w, wire_dtype=jnp.float32,
+                               interpret=True)
+    want = ref.bottleneck_encode(x, gamma, w, wire_dtype=jnp.float32)
+    assert got.shape == shape[:-1] + (db,)
+    assert_allclose(np.asarray(got), np.asarray(want), **_tol(dtype))
+
+
+@pytest.mark.parametrize("shape", ENC_SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_bottleneck_decode_sweep(shape, dtype):
+    d = shape[-1]
+    db = 32
+    z = jnp.asarray(RNG.randn(*shape[:-1], db), dtype)
+    w = jnp.asarray(RNG.randn(db, d) * 0.1, jnp.float32)
+    r = jnp.asarray(RNG.randn(*shape), dtype)
+    a = jnp.asarray(0.5, jnp.float32)
+    got = bf.bottleneck_decode(z, w, r, a, out_dtype=jnp.float32,
+                               interpret=True)
+    want = ref.bottleneck_decode(z, w, r, a, out_dtype=jnp.float32)
+    assert_allclose(np.asarray(got), np.asarray(want), **_tol(dtype))
+
+
+def test_bottleneck_encode_grad_matches_ref():
+    x = jnp.asarray(RNG.randn(6, 128), jnp.float32)
+    gamma = jnp.asarray(RNG.rand(128) + 0.5, jnp.float32)
+    w = jnp.asarray(RNG.randn(128, 16) * 0.1, jnp.float32)
+
+    def k(x, g, w):
+        return jnp.sum(jnp.square(bf.bottleneck_encode(
+            x, g, w, wire_dtype=jnp.float32, interpret=True)))
+
+    def r(x, g, w):
+        return jnp.sum(jnp.square(ref.bottleneck_encode(
+            x, g, w, wire_dtype=jnp.float32)))
+
+    gk = jax.grad(k, argnums=(0, 1, 2))(x, gamma, w)
+    gr = jax.grad(r, argnums=(0, 1, 2))(x, gamma, w)
+    for a, b in zip(gk, gr):
+        assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+FA_CASES = [
+    # (B, Sq, Skv, H, KH, D, causal, offset)
+    (1, 64, 64, 4, 4, 32, True, 0),
+    (2, 128, 128, 4, 2, 64, True, 0),          # GQA
+    (1, 128, 128, 8, 1, 64, True, 0),          # MQA
+    (2, 64, 64, 4, 4, 32, False, 0),           # bidirectional (encoder)
+    (1, 16, 144, 4, 2, 32, True, 128),         # decode-ish: q_offset
+    (1, 100, 100, 2, 2, 64, True, 0),          # non-multiple of block
+]
+
+
+@pytest.mark.parametrize("case", FA_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(case, dtype):
+    B, Sq, Skv, H, KH, D, causal, off = case
+    q = jnp.asarray(RNG.randn(B, Sq, H, D), dtype)
+    k = jnp.asarray(RNG.randn(B, Skv, KH, D), dtype)
+    v = jnp.asarray(RNG.randn(B, Skv, KH, D), dtype)
+    got = fa.flash_attention(q, k, v, causal=causal, q_offset=off,
+                             interpret=True)
+    want = ref.attention(q, k, v, causal=causal, q_offset=off)
+    assert_allclose(np.asarray(got, np.float32), np.asarray(want, np.float32),
+                    **_tol(dtype))
+
+
+def test_flash_attention_blocked_vs_small_blocks():
+    """Same result regardless of block partitioning (online softmax)."""
+    q = jnp.asarray(RNG.randn(1, 256, 2, 64), jnp.float32)
+    big = fa._flash_call(q.transpose(0, 2, 1, 3), q.transpose(0, 2, 1, 3),
+                         q.transpose(0, 2, 1, 3), causal=True, q_offset=0,
+                         scale=0.125, interpret=True, bq=256, bkv=256)
+    small = fa._flash_call(q.transpose(0, 2, 1, 3), q.transpose(0, 2, 1, 3),
+                           q.transpose(0, 2, 1, 3), causal=True, q_offset=0,
+                           scale=0.125, interpret=True, bq=64, bkv=32)
+    assert_allclose(np.asarray(big), np.asarray(small), rtol=2e-5, atol=2e-5)
+
+
+def test_flash_grad_matches_ref():
+    q = jnp.asarray(RNG.randn(1, 64, 2, 32), jnp.float32)
+
+    def k_loss(q):
+        return jnp.sum(fa.flash_attention(q, q, q, interpret=True))
+
+    def r_loss(q):
+        return jnp.sum(ref.attention(q, q, q))
+
+    assert_allclose(np.asarray(jax.grad(k_loss)(q)),
+                    np.asarray(jax.grad(r_loss)(q)), rtol=1e-3, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# int8 stream codec
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n", [256, 2048, 256 * 513])
+def test_quant_roundtrip_sweep(n):
+    v = jnp.asarray(RNG.randn(n) * 5, jnp.float32)
+    q1, s1 = qs.quantize_int8(v, interpret=True)
+    q2, s2 = ref.quantize_int8(v)
+    assert_allclose(np.asarray(q1), np.asarray(q2))
+    assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-6)
+    d1 = qs.dequantize_int8(q1, s1, interpret=True)
+    d2 = ref.dequantize_int8(q2, s2)
+    assert_allclose(np.asarray(d1), np.asarray(d2), rtol=1e-6)
+    assert float(jnp.max(jnp.abs(d1 - v))) <= float(jnp.max(jnp.abs(v))) / 100
+
+
+def test_quant_zero_block_safe():
+    v = jnp.zeros(512, jnp.float32)
+    q, s = qs.quantize_int8(v, interpret=True)
+    assert_allclose(np.asarray(qs.dequantize_int8(q, s, interpret=True)), 0.0)
+
+
+# ---------------------------------------------------------------------------
+# butterfly shard merge
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("m,l", [(2, 100), (8, 1000), (16, 20000), (5, 7)])
+def test_shard_merge_sweep(m, l):
+    shards = jnp.asarray(RNG.randn(m, l), jnp.float32)
+    valid = jnp.asarray(RNG.rand(m) > 0.3)
+    if not bool(valid.any()):
+        valid = valid.at[0].set(True)
+    got = sm.shard_merge(shards, valid, interpret=True)
+    want = ref.shard_merge(shards, valid)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6)
+
+
+def test_shard_merge_all_invalid_is_zero():
+    shards = jnp.ones((4, 64))
+    got = sm.shard_merge(shards, jnp.zeros(4, bool), interpret=True)
+    assert_allclose(np.asarray(got), 0.0)
+
+
+# ---------------------------------------------------------------------------
+# mamba selective scan (§Perf cell B kernel)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("case", [(2, 64, 32, 8, 16, 32),
+                                  (1, 128, 64, 16, 64, 64),
+                                  (2, 96, 48, 8, 48, 32)])
+def test_mamba_scan_kernel_sweep(case):
+    from repro.kernels import mamba_scan as ms
+    B, S, d_in, ds, bd, bs = case
+    delta = jnp.asarray(np.abs(RNG.randn(B, S, d_in)) * 0.1, jnp.float32)
+    x = jnp.asarray(RNG.randn(B, S, d_in), jnp.float32)
+    b = jnp.asarray(RNG.randn(B, S, ds), jnp.float32)
+    c = jnp.asarray(RNG.randn(B, S, ds), jnp.float32)
+    a = jnp.asarray(-np.abs(RNG.randn(d_in, ds)), jnp.float32)
+    got = ms.mamba_scan(delta, x, b, c, a, interpret=True, bd=bd, bs=bs)
+    want = ms.mamba_scan_ref(delta, x, b, c, a)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-5)
+
+
+def test_mamba_scan_kernel_state_carries_across_seq_blocks():
+    """The VMEM h scratch must persist across sequential S-grid steps."""
+    from repro.kernels import mamba_scan as ms
+    B, S, d_in, ds = 1, 64, 16, 4
+    delta = jnp.asarray(np.abs(RNG.randn(B, S, d_in)) * 0.2, jnp.float32)
+    x = jnp.asarray(RNG.randn(B, S, d_in), jnp.float32)
+    b = jnp.asarray(RNG.randn(B, S, ds), jnp.float32)
+    c = jnp.asarray(RNG.randn(B, S, ds), jnp.float32)
+    a = jnp.asarray(-np.abs(RNG.randn(d_in, ds)), jnp.float32)
+    # four sequence blocks of 16 vs a single block
+    blocked = ms.mamba_scan(delta, x, b, c, a, interpret=True, bd=16, bs=16)
+    single = ms.mamba_scan(delta, x, b, c, a, interpret=True, bd=16, bs=64)
+    assert_allclose(np.asarray(blocked), np.asarray(single),
+                    rtol=1e-5, atol=1e-6)

@@ -1,0 +1,124 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.common import cosine_similarity, stable_hash, tree_flatten_to_vector
+from repro.core import butterfly, compression, diloco
+from repro.core.incentives import IncentiveLedger
+
+
+@given(st.integers(2, 24), st.integers(10, 5000), st.integers(0, 100))
+@settings(max_examples=40, deadline=None)
+def test_butterfly_plan_invariants(n, length, seed):
+    plan = butterfly.make_plan(n, length, seed)
+    # every shard assigned to exactly 2 distinct miners
+    for (i, j) in plan.pairs:
+        assert 0 <= i < n and 0 <= j < n and i != j
+    # shard bounds tile [0, length) exactly
+    total = sum(plan.shard_bounds(s)[1] - plan.shard_bounds(s)[0]
+                for s in range(plan.n_shards))
+    assert total == length
+    # reduction load is balanced: each miner reduces exactly N-1 shards
+    assert all(len(plan.shards_of(m)) == n - 1 for m in range(n))
+
+
+@given(st.integers(2, 10), st.integers(0, 10), st.integers(0, 50))
+@settings(max_examples=30, deadline=None)
+def test_butterfly_failures_match_formula_empirically(n, k_raw, seed):
+    k = min(k_raw, n)
+    rng = np.random.RandomState(seed)
+    faulty = list(rng.choice(n, size=k, replace=False))
+    plan = butterfly.make_plan(n, 64 * plan_len(n), seed)
+    uploads = {m: np.ones(plan.vector_len, np.float32) for m in range(n)}
+    ok = [m not in faulty for m in range(n)]
+    _, valid, _ = butterfly.reduce_shards(plan, uploads, reducer_ok=ok)
+    assert abs(valid.mean() - butterfly.valid_shard_fraction(n, k)) < 1e-9
+
+
+def plan_len(n):
+    return n * (n - 1) // 2
+
+
+@given(st.sampled_from(["none", "bf16", "int8"]),
+       st.integers(0, 20), st.floats(0.1, 100.0))
+@settings(max_examples=40, deadline=None)
+def test_codec_relative_error_bound(codec, seed, scale):
+    v = jnp.asarray(np.random.RandomState(seed).randn(1024) * scale,
+                    jnp.float32)
+    r = compression.decode(compression.encode(v, codec), 1024)
+    rel = float(jnp.max(jnp.abs(r - v))) / (float(jnp.max(jnp.abs(v))) + 1e-9)
+    bound = {"none": 1e-7, "bf16": 0.01, "int8": 0.01}[codec]
+    assert rel <= bound
+
+
+@given(st.integers(0, 30))
+@settings(max_examples=20, deadline=None)
+def test_cosine_similarity_range_and_self(seed):
+    rng = np.random.RandomState(seed)
+    a = jnp.asarray(rng.randn(100), jnp.float32)
+    b = jnp.asarray(rng.randn(100), jnp.float32)
+    c = float(cosine_similarity(a, b))
+    assert -1.0 - 1e-5 <= c <= 1.0 + 1e-5
+    assert float(cosine_similarity(a, a)) == 1.0 or abs(
+        float(cosine_similarity(a, a)) - 1.0) < 1e-5
+
+
+@given(st.lists(st.tuples(st.integers(0, 7), st.floats(0, 100)),
+                min_size=1, max_size=30))
+@settings(max_examples=30, deadline=None)
+def test_emissions_sum_to_total_and_nonnegative(scores):
+    led = IncentiveLedger(gamma=1000.0)
+    for i, (m, s) in enumerate(scores):
+        led.record(m, 0, s, 0.0)
+    em = led.emissions(1.0, total_emission=1.0)
+    assert abs(sum(em.values()) - 1.0) < 1e-6
+    assert all(v >= 0 for v in em.values())
+
+
+@given(st.integers(0, 5))
+@settings(max_examples=10, deadline=None)
+def test_diloco_outer_reduces_to_average_with_lr1_no_momentum(seed):
+    """DiLoCo with outer_lr=1, momentum=0 sets the anchor to avg(workers)."""
+    rng = np.random.RandomState(seed)
+    params = {"w": jnp.asarray(rng.randn(16), jnp.float32)}
+    avg = {"w": jnp.asarray(rng.randn(16), jnp.float32)}
+    out = diloco.outer_update(diloco.outer_init(params), avg,
+                              outer_lr=1.0, outer_momentum=0.0)
+    np.testing.assert_allclose(np.asarray(out.anchor["w"]),
+                               np.asarray(avg["w"]), atol=1e-6)
+
+
+@given(st.integers(0, 100), st.integers(0, 100))
+@settings(max_examples=30, deadline=None)
+def test_stable_hash_deterministic_and_distinct(a, b):
+    assert stable_hash("x", a, b) == stable_hash("x", a, b)
+    if a != b:
+        assert stable_hash("x", a) != stable_hash("x", b)
+
+
+@given(st.integers(0, 10))
+@settings(max_examples=10, deadline=None)
+def test_tree_flatten_roundtrip(seed):
+    rng = np.random.RandomState(seed)
+    tree = {"a": jnp.asarray(rng.randn(3, 4), jnp.float32),
+            "b": {"c": jnp.asarray(rng.randn(7), jnp.bfloat16)}}
+    vec, unflatten = tree_flatten_to_vector(tree)
+    back = unflatten(vec)
+    for x, y in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        np.testing.assert_allclose(np.asarray(x, np.float32),
+                                   np.asarray(y, np.float32), atol=1e-2)
+        assert x.dtype == y.dtype
+
+
+@given(st.integers(2, 12), st.integers(1, 40), st.floats(0.1, 0.9))
+@settings(max_examples=30, deadline=None)
+def test_beff_quorum_properties(n_miners, b_min, quorum):
+    rng = np.random.RandomState(n_miners * 7 + b_min)
+    batches = {m: int(rng.randint(0, 3 * b_min)) for m in range(n_miners)}
+    beff = diloco.effective_batch(batches, b_min)
+    assert beff == sum(b for b in batches.values() if b >= b_min)
+    if diloco.should_merge(batches, b_min, quorum):
+        qual = sum(1 for b in batches.values() if b >= b_min)
+        assert qual >= max(1, int(n_miners * quorum))

@@ -1,0 +1,110 @@
+"""Sharding-rule unit tests: param specs, divisibility decisions, state specs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro import configs
+from repro.models import build_model
+from repro.sharding.partition import MeshAxes, param_specs
+
+
+def _ma(**kw):
+    base = dict(batch=("data",), model_axis_size=16, data_axis_size=16)
+    base.update(kw)
+    return MeshAxes(**base)
+
+
+def _specs_for(arch, **ma_kw):
+    cfg = configs.get(arch)
+    model = build_model(cfg)
+    shapes = jax.eval_shape(model.init, jax.random.key(0))
+    return shapes, param_specs(shapes, _ma(fsdp=cfg.parallel.fsdp, **ma_kw))
+
+
+def test_embed_vocab_sharded_over_model():
+    shapes, specs = _specs_for("llama3.2-1b")
+    assert specs["embeds"]["embed"] == P("model", None)
+    assert specs["embeds"]["unembed"] == P("model", None)
+
+
+def test_scanned_block_params_get_leading_replicated_dim():
+    shapes, specs = _specs_for("llama3.2-1b")
+    wq = specs["seg0"]["period"]["b0"]["attn"]["wq"]
+    assert wq == P(None, None, "model")       # (layers, d_model, H*hd)
+    assert shapes["seg0"]["period"]["b0"]["attn"]["wq"].shape[0] == 16
+
+
+def test_fsdp_shards_second_dim_over_data():
+    shapes, specs = _specs_for("qwen3-14b")     # fsdp=True
+    wq = specs["seg0"]["period"]["b0"]["attn"]["wq"]
+    assert wq == P(None, "data", "model")
+
+
+def test_moe_experts_ep_over_model():
+    shapes, specs = _specs_for("kimi-k2-1t-a32b")
+    wg = specs["seg0"]["period"]["b0"]["moe"]["experts"]["w_gate"]
+    assert wg == P(None, "model", "data", None)   # (layers, E, d, f)
+    wo = specs["seg0"]["period"]["b0"]["moe"]["experts"]["w_out"]
+    assert wo == P(None, "model", None, "data")
+
+
+def test_kv_replicated_when_heads_dont_divide():
+    # glm4: kv=2 on a 16-wide model axis -> kv projections replicated
+    shapes, specs = _specs_for("glm4-9b", shard_kv_heads=False)
+    wk = specs["seg0"]["period"]["b0"]["attn"]["wk"]
+    assert wk[-1] is None
+
+
+def test_norms_replicated():
+    shapes, specs = _specs_for("llama3.2-1b")
+    assert specs["final_norm"] in (P(), P(None))
+
+
+def test_every_leaf_gets_a_spec_matching_rank():
+    for arch in configs.all_arch_ids():
+        shapes, specs = _specs_for(arch)
+        flat_s = jax.tree_util.tree_leaves(shapes)
+        td = jax.tree_util.tree_structure(shapes)
+        flat_p = td.flatten_up_to(specs)
+        for sh, sp in zip(flat_s, flat_p):
+            assert isinstance(sp, P), (arch, sp)
+            assert len(sp) <= len(sh.shape), (arch, sh.shape, sp)
+            # every named axis must divide... or be the padded-head case
+            for dim, name in zip(sh.shape, list(sp) + [None] * 8):
+                if name in ("model",) and dim % 16 != 0:
+                    assert dim in (40, 56) or dim >= 16, (arch, sh.shape, sp)
+
+
+def test_decode_state_specs_cover_state():
+    from repro.launch.shardings import decode_state_spec_tree
+    from repro.configs.base import SHAPES
+    for arch in ["llama3.2-1b", "jamba-v0.1-52b", "xlstm-125m",
+                 "seamless-m4t-medium"]:
+        cfg = configs.get(arch)
+        model = build_model(cfg)
+        shape = SHAPES["decode_32k"]
+        st = model.decode_state_specs(shape)
+        specs = decode_state_spec_tree(model, shape, _ma())
+        flat_s = jax.tree_util.tree_leaves(st)
+        td = jax.tree_util.tree_structure(st)
+        flat_p = td.flatten_up_to(specs)
+        assert len(flat_s) == len(flat_p)
+        for sh, sp in zip(flat_s, flat_p):
+            assert len(sp) <= len(sh.shape), (arch, sh.shape, sp)
+
+
+def test_effective_accum_divides_batch():
+    """grad_accum larger than the batch still runs (clamped internally)."""
+    import dataclasses
+    cfg = configs.smoke_variant(configs.get("llama3.2-1b"))
+    cfg = dataclasses.replace(
+        cfg, parallel=dataclasses.replace(cfg.parallel, grad_accum=16))
+    model = build_model(cfg)
+    state = model.init_train_state(jax.random.key(0))
+    batch = model.synth_batch(jax.random.key(1), 4, 16)
+    ma = _ma(data_axis_size=2, model_axis_size=1)
+    _, metrics = jax.jit(lambda s, b: model.train_step(s, b, ma))(
+        state, batch)
+    assert jnp.isfinite(metrics["loss"])

@@ -1,0 +1,163 @@
+"""End-to-end decentralized-runtime integration (paper §2-§3, §5-§6).
+
+These are the system-behaviour tests: a real (tiny) model trained through
+the simulated swarm with faults, adversaries and stragglers injected.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.configs import get, smoke_variant
+from repro.runtime import FaultModel, MinerBehavior, Orchestrator, SwarmConfig
+
+
+def _mcfg(n_layers=6):
+    return dataclasses.replace(smoke_variant(get("llama3.2-1b")).model,
+                               n_layers=n_layers)
+
+
+@pytest.fixture(scope="module")
+def honest_run():
+    sw = SwarmConfig(n_stages=3, miners_per_stage=2, inner_steps=10, b_min=2,
+                     batch_size=4, seq_len=32, seed=0)
+    orch = Orchestrator(_mcfg(), sw)
+    stats = orch.run(6)
+    return orch, stats
+
+
+def test_swarm_loss_decreases(honest_run):
+    _, stats = honest_run
+    first, last = stats[0].mean_loss, stats[-1].mean_loss
+    assert last < first - 0.05, (first, last)
+
+
+def test_honest_miners_validate_clean(honest_run):
+    _, stats = honest_run
+    for s in stats:
+        for r in s.validation:
+            assert r.honest, (s.epoch, r)
+
+
+def test_agreement_matrix_clean_when_honest(honest_run):
+    _, stats = honest_run
+    for s in stats:
+        for stage, mat in s.agreement.items():
+            off = mat[~np.isnan(mat)]
+            assert (off == 1.0).all()
+
+
+def test_b_eff_counts_only_qualifying(honest_run):
+    orch, stats = honest_run
+    for s in stats:
+        expect = sum(b for b in s.batches.values() if b >= orch.swarm.b_min)
+        assert s.b_eff == expect
+
+
+def test_validator_catches_free_rider():
+    sw = SwarmConfig(n_stages=3, miners_per_stage=3, inner_steps=12, b_min=2,
+                     batch_size=2, seq_len=32, validators=6, seed=1)
+    faults = FaultModel({1: MinerBehavior(free_ride=True)}, seed=1)
+    orch = Orchestrator(_mcfg(), sw, faults=faults)
+    stats = orch.run(3)
+    verdicts = {}
+    for s in stats:
+        for r in s.validation:
+            verdicts.setdefault(r.miner_uid, []).append(r.honest)
+    # every time the cheater was audited it failed; honest miners never did
+    if 1 in verdicts:
+        assert not any(verdicts[1])
+    for uid, vs in verdicts.items():
+        if uid != 1:
+            assert all(vs), (uid, vs)
+
+
+def test_clasp_flags_free_rider_on_live_losses():
+    sw = SwarmConfig(n_stages=3, miners_per_stage=3, inner_steps=40, b_min=2,
+                     batch_size=2, seq_len=32, validators=0, seed=2)
+    faults = FaultModel({4: MinerBehavior(free_ride=True)}, seed=2)
+    orch = Orchestrator(_mcfg(), sw, faults=faults)
+    stats = orch.run(3)
+    rep = stats[-1].clasp
+    # the free-rider has the highest z-score in the network by the last epoch
+    assert int(np.argmax(rep.z_scores)) == 4
+
+
+def test_dropped_miners_dont_halt_training():
+    sw = SwarmConfig(n_stages=3, miners_per_stage=3, inner_steps=12, b_min=1,
+                     batch_size=2, seq_len=32, seed=3)
+    faults = FaultModel({0: MinerBehavior(drop_prob=0.7),
+                         3: MinerBehavior(drop_prob=0.7)}, seed=3)
+    orch = Orchestrator(_mcfg(), sw, faults=faults)
+    stats = orch.run(3)
+    for s in stats:
+        # ticks mostly complete via SWARM rerouting to the live replicas
+        assert s.stalled_ticks < sw.inner_steps / 2
+        assert np.isfinite(s.mean_loss)
+
+
+def test_straggler_finishes_fewer_batches():
+    sw = SwarmConfig(n_stages=2, miners_per_stage=2, inner_steps=12, b_min=1,
+                     batch_size=2, seq_len=32, seed=4)
+    faults = FaultModel({0: MinerBehavior(straggle_factor=4.0)}, seed=4)
+    orch = Orchestrator(_mcfg(4), sw, faults=faults)
+    stats = orch.run(2)
+    batches = stats[-1].batches
+    peers = [batches[m] for m in batches if m != 0
+             and orch.miners[m].stage == 0]
+    assert batches[0] < max(peers), batches
+
+
+def test_emissions_proportional_to_validated_work():
+    sw = SwarmConfig(n_stages=2, miners_per_stage=2, inner_steps=10, b_min=1,
+                     batch_size=2, seq_len=32, validators=4, seed=5)
+    orch = Orchestrator(_mcfg(4), sw)
+    stats = orch.run(3)
+    em = stats[-1].emissions
+    assert abs(sum(em.values()) - 1.0) < 1e-6
+    # validated miners earn; totals track ledger scores
+    t = (len(stats) - 1) * sw.sync_interval_hours
+    for uid, share in em.items():
+        raw = orch.ledger.raw_incentive(uid, t)
+        if raw == 0:
+            assert share <= max(em.values())
+
+
+def test_new_miner_joins_at_full_sync():
+    sw = SwarmConfig(n_stages=2, miners_per_stage=2, inner_steps=8, b_min=1,
+                     batch_size=2, seq_len=32, seed=6)
+    orch = Orchestrator(_mcfg(4), sw)
+    orch.run(1)
+    newbie = orch.register_miner(stage=1)
+    # joiner starts from the stage anchor (same weights as the merged model)
+    anchor_vec = np.asarray(
+        orch.miners[newbie.uid].weights_vector())
+    stats = orch.run(2)
+    assert newbie.uid in stats[-1].batches
+    assert stats[-1].batches[newbie.uid] > 0     # it worked after joining
+
+
+def test_tamperer_breaks_weight_agreement():
+    sw = SwarmConfig(n_stages=2, miners_per_stage=3, inner_steps=8, b_min=1,
+                     batch_size=2, seq_len=32, seed=7)
+    faults = FaultModel({1: MinerBehavior(tamper_weights=0.5)}, seed=7)
+    orch = Orchestrator(_mcfg(4), sw, faults=faults)
+    stats = orch.run(1)
+    mat = stats[-1].agreement.get(0)
+    assert mat is not None
+    # find the tamperer's index among qualifying stage-0 miners: its rows
+    # disagree (tampered uploads poison every shard it reduces... here the
+    # upload itself differs so partners disagree with each other's copies)
+    off = mat[~np.isnan(mat)]
+    assert (off < 1.0).any()
+
+
+def test_store_traffic_accounted():
+    sw = SwarmConfig(n_stages=2, miners_per_stage=2, inner_steps=4, b_min=1,
+                     batch_size=2, seq_len=16, seed=8)
+    orch = Orchestrator(_mcfg(4), sw)
+    orch.run(1)
+    rep = orch.store.traffic_report()
+    assert rep["uploaded"].get("activations", 0) > 0
+    assert rep["uploaded"].get("weights", 0) > 0
+    assert rep["total_bytes"] > 0
