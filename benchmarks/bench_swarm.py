@@ -1,18 +1,24 @@
-"""§2.1 B_min/B_eff behaviour + store traffic: swarm-level benchmark.
+"""§2.1 B_min/B_eff behaviour + §5.3 transfer analysis: swarm benchmark.
 
-Reports effective batch and stall rate as the straggler fraction grows
-(the orchestrator's robustness claim), plus store traffic per epoch.
+Three sections:
+  * swarm_beff:      effective batch / stall rate as stragglers grow
+                     (the orchestrator's robustness claim)
+  * swarm_traffic:   store bytes per namespace for a reference run
+  * swarm_transport: the SAME reference swarm under both transports —
+    the in-process baseline, then simulated datacenter and consumer
+    links, reporting simulated wall-clock, time-to-loss and per-link
+    bytes (scenario-parameterised §5.3 transfer analysis)
 """
 from __future__ import annotations
 
 import dataclasses
 
-import numpy as np
-
 from benchmarks.common import emit
+from repro.api import (InProcessTransport, NetworkModel,
+                       SimulatedNetworkTransport, Swarm, SwarmConfig)
 from repro.common import human_bytes
 from repro.configs import get, smoke_variant
-from repro.runtime import FaultModel, MinerBehavior, Orchestrator, SwarmConfig
+from repro.runtime import FaultModel, MinerBehavior
 
 
 def _mcfg():
@@ -20,7 +26,7 @@ def _mcfg():
                                n_layers=6)
 
 
-def run() -> None:
+def _beff_section() -> None:
     for frac in (0.0, 0.25, 0.5):
         sw = SwarmConfig(n_stages=2, miners_per_stage=4, inner_steps=12,
                          b_min=2, batch_size=2, seq_len=32, validators=0,
@@ -30,23 +36,65 @@ def run() -> None:
         faults = FaultModel(
             {m: MinerBehavior(straggle_factor=4.0) for m in range(n_slow)},
             seed=3)
-        orch = Orchestrator(_mcfg(), sw, faults=faults)
-        stats = orch.run(2)
+        swarm = Swarm.create(_mcfg(), sw, faults=faults)
+        stats = swarm.run(2)
         s = stats[-1]
         emit(f"swarm_beff/straggler_frac{frac}", 0.0,
              f"b_eff={s.b_eff};stalls={s.stalled_ticks}/"
              f"{sw.inner_steps};merged={s.merged_stages}/{sw.n_stages}")
 
+
+def _traffic_section() -> None:
     sw = SwarmConfig(n_stages=3, miners_per_stage=2, inner_steps=8, b_min=2,
                      batch_size=2, seq_len=32, validators=1, seed=4)
-    orch = Orchestrator(_mcfg(), sw)
-    orch.run(2)
-    rep = orch.store.traffic_report()
+    swarm = Swarm.create(_mcfg(), sw)
+    swarm.run(2)
+    rep = swarm.transport.traffic_report()
     emit("swarm_traffic/activations", 0.0,
          human_bytes(rep["uploaded"].get("activations", 0)))
     emit("swarm_traffic/weights", 0.0,
          human_bytes(rep["uploaded"].get("weights", 0)))
     emit("swarm_traffic/total", 0.0, human_bytes(rep["total_bytes"]))
+
+
+def _transport_section() -> None:
+    """Same seed, same trajectory; only the link model differs."""
+    scenarios = [
+        ("in_process", InProcessTransport),
+        ("sim_datacenter",
+         lambda: SimulatedNetworkTransport(NetworkModel.datacenter())),
+        ("sim_consumer",
+         lambda: SimulatedNetworkTransport(NetworkModel.consumer())),
+    ]
+    sw = SwarmConfig(n_stages=3, miners_per_stage=2, inner_steps=8, b_min=2,
+                     batch_size=2, seq_len=32, validators=1, seed=4)
+    final_loss = {}
+    for name, make in scenarios:
+        transport = make()
+        swarm = Swarm.create(_mcfg(), sw, transport=transport)
+        stats = swarm.run(2)
+        final_loss[name] = stats[-1].mean_loss
+        clock = transport.elapsed_seconds()
+        emit(f"swarm_transport/{name}", 0.0,
+             f"sim_clock={clock:.2f}s;"
+             f"time_to_loss={clock:.2f}s@{stats[-1].mean_loss:.3f}")
+        links = transport.link_report()
+        if links:
+            busiest = max(links.items(), key=lambda kv: kv[1]["up_bytes"])
+            emit(f"swarm_transport/{name}_links", 0.0,
+                 f"links={len(links)};"
+                 f"busiest={busiest[0]}:"
+                 f"up={human_bytes(busiest[1]['up_bytes'])},"
+                 f"down={human_bytes(busiest[1]['down_bytes'])},"
+                 f"busy={busiest[1]['busy_seconds']:.2f}s")
+    # determinism across transports is part of the API contract
+    assert len(set(final_loss.values())) == 1, final_loss
+
+
+def run() -> None:
+    _beff_section()
+    _traffic_section()
+    _transport_section()
 
 
 if __name__ == "__main__":

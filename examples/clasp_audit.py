@@ -15,8 +15,9 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import numpy as np
 
 from repro import configs
+from repro.api import Swarm, SwarmConfig
 from repro.core import clasp
-from repro.runtime import FaultModel, MinerBehavior, Orchestrator, SwarmConfig
+from repro.runtime import FaultModel, MinerBehavior
 
 
 def toy():
@@ -47,10 +48,10 @@ def live():
         configs.smoke_variant(configs.get("llama3.2-1b")).model, n_layers=6)
     sw = SwarmConfig(n_stages=3, miners_per_stage=3, inner_steps=30, b_min=2,
                      batch_size=2, seq_len=32, validators=0, seed=2)
-    orch = Orchestrator(mcfg, sw,
-                        faults=FaultModel({4: MinerBehavior(free_ride=True)},
-                                          seed=2))
-    stats = orch.run(3)
+    swarm = Swarm.create(
+        mcfg, sw, faults=FaultModel({4: MinerBehavior(free_ride=True)},
+                                    seed=2))
+    stats = swarm.run(3)
     rep = stats[-1].clasp
     print("per-miner z-scores:", np.round(rep.z_scores, 1).tolist())
     print(f"worst miner = {int(np.argmax(rep.z_scores))} (planted: 4)")

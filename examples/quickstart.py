@@ -21,7 +21,7 @@ from repro.data.pipeline import DataConfig, SyntheticCorpus
 from repro.launch.serve import generate
 from repro.models import build_model
 
-STEPS = 300
+STEPS = int(os.environ.get("QUICKSTART_STEPS", "300"))
 BATCH, SEQ = 16, 128
 
 

@@ -1,12 +1,17 @@
 """Decentralized swarm training demo — the paper's full Fig 1/Fig 2 loop.
 
-An orchestrator drives miners (layer-slice workers) and validators through
-training / compressed-sharing / butterfly full-sync / validation epochs,
-with a straggler, a dropper and a free-riding adversary injected.  Watch:
-loss falls, the validator catches the cheat, CLASP ranks it worst, and
-emissions follow validated work.
+A ``Swarm`` (see repro.api / docs/API.md) drives miners (layer-slice
+workers) and validators through training / compressed-sharing / butterfly
+full-sync / validation epochs, with a straggler, a dropper and a
+free-riding adversary injected.  Watch: loss falls, the validator catches
+the cheat, CLASP ranks it worst, and emissions follow validated work.
 
-    PYTHONPATH=src python examples/swarm_train.py
+    python examples/swarm_train.py             # in-process transport
+    python examples/swarm_train.py network     # simulated consumer links
+
+The ``network`` variant runs the *same* deterministic trajectory but
+accumulates simulated wall-clock per store transfer, reporting what the
+epoch loop would cost over realistic links (§5.3 transfer analysis).
 """
 import dataclasses
 import os
@@ -17,40 +22,58 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import numpy as np
 
 from repro import configs
-from repro.runtime import FaultModel, MinerBehavior, Orchestrator, SwarmConfig
+from repro.api import (NetworkModel, SimulatedNetworkTransport, Swarm,
+                       SwarmConfig)
+from repro.runtime import FaultModel, MinerBehavior
 
 
 def main():
     mcfg = dataclasses.replace(
         configs.smoke_variant(configs.get("llama3.2-1b")).model, n_layers=6)
-    swarm = SwarmConfig(n_stages=3, miners_per_stage=3, inner_steps=24,
-                        b_min=3, batch_size=4, seq_len=64, compress=True,
-                        bottleneck_dim=16, validators=4, seed=0)
+    swarm_cfg = SwarmConfig(n_stages=3, miners_per_stage=3, inner_steps=24,
+                            b_min=3, batch_size=4, seq_len=64, compress=True,
+                            bottleneck_dim=16, validators=4, seed=0)
     faults = FaultModel({
         2: MinerBehavior(free_ride=True),          # adversary (stage 0)
         4: MinerBehavior(straggle_factor=3.0),     # slow hardware (stage 1)
         7: MinerBehavior(drop_prob=0.4),           # flaky node (stage 2)
     }, seed=0)
-    orch = Orchestrator(mcfg, swarm, faults=faults)
+    networked = "network" in sys.argv[1:]
+    transport = (SimulatedNetworkTransport(NetworkModel.consumer())
+                 if networked else None)
+    swarm = Swarm.create(mcfg, swarm_cfg, faults=faults, transport=transport)
 
-    print(f"swarm: {swarm.n_stages} stages x {swarm.miners_per_stage} miners, "
-          f"wire={swarm.bottleneck_dim}-d bottleneck codes "
-          f"(vs {mcfg.d_model}-d residuals)")
+    print(f"swarm: {swarm_cfg.n_stages} stages x "
+          f"{swarm_cfg.miners_per_stage} miners, "
+          f"wire={swarm_cfg.bottleneck_dim}-d bottleneck codes "
+          f"(vs {mcfg.d_model}-d residuals)"
+          + (" | transport=simulated-consumer-links" if networked else ""))
     for epoch in range(5):
-        s = orch.run_epoch()
+        s = swarm.run_epoch()
         flagged = (np.where(s.clasp.flagged)[0].tolist()
                    if s.clasp is not None else [])
         cheats = [r.miner_uid for r in s.validation if not r.honest]
-        print(f"epoch {s.epoch}: loss {s.mean_loss:.3f} | B_eff {s.b_eff} "
-              f"| merged {s.merged_stages}/{swarm.n_stages} stages "
-              f"| validator-caught {sorted(set(cheats))} "
-              f"| clasp-flagged {flagged}")
-    last = orch.history[-1]
+        line = (f"epoch {s.epoch}: loss {s.mean_loss:.3f} | B_eff {s.b_eff} "
+                f"| merged {s.merged_stages}/{swarm_cfg.n_stages} stages "
+                f"| validator-caught {sorted(set(cheats))} "
+                f"| clasp-flagged {flagged}")
+        if networked:
+            line += f" | sim-clock {swarm.transport.elapsed_seconds():.1f}s"
+        print(line)
+    last = swarm.history[-1]
     print("\nfinal emissions (miner: share):")
     for uid, share in sorted(last.emissions.items()):
         tag = " <- free-rider" if uid == 2 else ""
         print(f"  miner {uid}: {share:.3f}{tag}")
-    print("\nstore traffic:", orch.store.traffic_report()["uploaded"])
+    print("\nstore traffic:", swarm.transport.traffic_report()["uploaded"])
+    if networked:
+        print("per-link bytes (top 4 by upload):")
+        rep = swarm.transport.link_report()
+        top = sorted(rep.items(), key=lambda kv: -kv[1]["up_bytes"])[:4]
+        for actor, s in top:
+            print(f"  {actor}: up {s['up_bytes']:,} B, "
+                  f"down {s['down_bytes']:,} B, "
+                  f"busy {s['busy_seconds']:.1f}s")
 
 
 if __name__ == "__main__":

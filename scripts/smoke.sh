@@ -1,0 +1,31 @@
+#!/usr/bin/env bash
+# Pre-commit smoke check: fast test subset + the quickstart example.
+#
+#   scripts/smoke.sh            # from the repo root
+#
+# Runs everything except tests marked `slow` (marker registered in
+# pyproject.toml, which also sets pythonpath=src — no PYTHONPATH needed),
+# then drives examples/quickstart.py end to end at a reduced step count.
+# This is the documented check to run before every commit; the full suite
+# is `python -m pytest -q`.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+# Excluded from the smoke gate (run them via the full suite when relevant):
+#   test_kernels.py / test_multidevice.py — need accelerator hardware; red
+#     on CPU-only containers since the seed
+#   test_system.py::test_claim_c3_...     — known-red since the seed
+#     (baseline fails its own learning threshold at 60 steps)
+echo "== smoke: fast test subset (excluding -m slow + hardware suites) =="
+python -m pytest -q -m "not slow" \
+    --ignore=tests/test_kernels.py \
+    --ignore=tests/test_multidevice.py \
+    --deselect "tests/test_system.py::test_claim_c3_bottleneck_trains_close_to_baseline" \
+    tests
+
+echo
+echo "== smoke: quickstart example (reduced steps) =="
+QUICKSTART_STEPS="${QUICKSTART_STEPS:-60}" python examples/quickstart.py
+
+echo
+echo "smoke OK"

@@ -1,0 +1,37 @@
+"""Peer-protocol API for the swarm runtime (see docs/API.md).
+
+Typed messages + versioned key schema + pluggable transports + phase-based
+epoch driver.  ``Swarm.create(...)`` is the entry point; the legacy
+``repro.runtime.Orchestrator`` is a thin subclass kept for compatibility.
+"""
+from repro.api.config import EpochStats, SwarmConfig  # noqa: F401
+from repro.api.keys import KeySchema, SCHEMA_VERSION  # noqa: F401
+from repro.api.messages import (  # noqa: F401
+    ActivationMsg,
+    AnchorMsg,
+    GradientMsg,
+    Message,
+    MESSAGE_TYPES,
+    ScoreMsg,
+    WeightUploadMsg,
+    message_for_key,
+)
+from repro.api.phases import (  # noqa: F401
+    EpochDriver,
+    EpochState,
+    Phase,
+    SharingPhase,
+    SyncPhase,
+    TrainingPhase,
+    ValidationPhase,
+    default_phases,
+)
+from repro.api.swarm import Swarm  # noqa: F401
+from repro.api.transport import (  # noqa: F401
+    InProcessTransport,
+    LinkSpec,
+    NetworkModel,
+    SimulatedNetworkTransport,
+    StoreKeyError,
+    Transport,
+)

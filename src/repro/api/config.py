@@ -1,0 +1,49 @@
+"""Swarm-level configuration + per-epoch stats (shared by phases/driver).
+
+``SwarmConfig``/``EpochStats`` moved here from ``repro.runtime.orchestrator``
+(which re-exports them unchanged) so the api package never imports the
+legacy facade module.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from repro.core import clasp
+
+
+@dataclasses.dataclass(frozen=True)
+class SwarmConfig:
+    n_stages: int = 3
+    miners_per_stage: int = 3
+    inner_steps: int = 8              # ticks per epoch (training stage)
+    b_min: int = 4                    # BATCHES_BEFORE_MERGING
+    quorum_frac: float = 0.5
+    batch_size: int = 4
+    seq_len: int = 32
+    compress: bool = True
+    bottleneck_dim: int = 16
+    share_codec: str = "int8"         # compressed-sharing stage codec
+    outer_lr: float = 0.7
+    outer_momentum: float = 0.9
+    gamma_hours: float = 10.0         # score decay
+    sync_interval_hours: float = 0.5  # T_s
+    validators: int = 1
+    validate_max_items: Optional[int] = None
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class EpochStats:
+    epoch: int
+    mean_loss: float
+    b_eff: int
+    batches: dict[int, int]
+    merged_stages: int
+    stalled_ticks: int
+    agreement: dict[int, np.ndarray]      # stage -> (n,n) agreement matrix
+    clasp: Optional[clasp.ClaspReport]
+    validation: list
+    emissions: dict[int, float]

@@ -1,0 +1,117 @@
+"""Versioned store-key schema: the single place key strings are minted.
+
+Every object that transits the shared store (paper §2 'S3 bucket', Fig 6)
+lives under a namespaced key.  The seed runtime scattered these as f-strings
+across orchestrator/miner/validator; this module is now the only producer.
+Acceptance grep: ``grep -rn '"activations/' src/repro`` must hit only this
+file.
+
+Layout (version 1 — byte-for-byte the seed layout, so digests, namespace
+byte accounting and garbage-collection prefixes are unchanged):
+
+  activations/ep{E}/t{T}/tokens          pipeline-entry token batch
+  activations/ep{E}/t{T}/s{S}/m{U}       stage-S output uploaded by miner U
+  activations/ep{E}/t{T}/s{S}/m{U}/grad  gradient w.r.t. that output
+  weights/ep{E}/s{S}/m{U}                compressed weight upload (sharing)
+  weights/ep{E}/s{S}/merged              post-butterfly DiLoCo anchor
+  scores/ep{E}/v{V}/m{U}                 validator V's score for miner U
+
+Versioning: a ``KeySchema`` is constructed at a pinned ``version``; bumping
+the layout means adding a new version branch here (and a migration note in
+docs/API.md) — never editing v1 in place, because validator replay and the
+§5.3 transfer analysis both depend on historical keys staying parseable.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+SCHEMA_VERSION = 1
+SUPPORTED_VERSIONS = (1,)
+
+# namespaces (the first path segment; StateStore accounts bytes per namespace)
+NS_ACTIVATIONS = "activations"
+NS_WEIGHTS = "weights"
+NS_SCORES = "scores"
+
+_V1_PATTERNS = (
+    ("tokens", re.compile(r"^activations/ep(?P<epoch>\d+)/t(?P<tick>\d+)/tokens$")),
+    ("gradient", re.compile(
+        r"^activations/ep(?P<epoch>\d+)/t(?P<tick>\d+)/s(?P<stage>\d+)"
+        r"/m(?P<uid>\d+)/grad$")),
+    ("activation", re.compile(
+        r"^activations/ep(?P<epoch>\d+)/t(?P<tick>\d+)/s(?P<stage>\d+)"
+        r"/m(?P<uid>\d+)$")),
+    ("anchor", re.compile(r"^weights/ep(?P<epoch>\d+)/s(?P<stage>\d+)/merged$")),
+    ("weights", re.compile(
+        r"^weights/ep(?P<epoch>\d+)/s(?P<stage>\d+)/m(?P<uid>\d+)$")),
+    ("score", re.compile(
+        r"^scores/ep(?P<epoch>\d+)/v(?P<validator>\d+)/m(?P<uid>\d+)$")),
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class ParsedKey:
+    kind: str                # tokens|activation|gradient|weights|anchor|score
+    fields: dict
+
+
+@dataclasses.dataclass(frozen=True)
+class KeySchema:
+    version: int = SCHEMA_VERSION
+
+    def __post_init__(self):
+        if self.version not in SUPPORTED_VERSIONS:
+            raise ValueError(
+                f"unsupported KeySchema version {self.version}; "
+                f"supported: {SUPPORTED_VERSIONS}")
+
+    # -- activation plane ------------------------------------------------
+
+    def tokens(self, epoch: int, tick: int) -> str:
+        return f"activations/ep{epoch}/t{tick}/tokens"
+
+    def activation(self, epoch: int, tick: int, stage: int, uid: int) -> str:
+        return f"activations/ep{epoch}/t{tick}/s{stage}/m{uid}"
+
+    def gradient(self, epoch: int, tick: int, stage: int, uid: int) -> str:
+        return self.activation(epoch, tick, stage, uid) + "/grad"
+
+    def gradient_for(self, activation_key: str) -> str:
+        """Gradient key paired with an already-minted activation key
+        (validator replay walks the miner's work log, which stores keys)."""
+        return activation_key + "/grad"
+
+    # -- weight plane ----------------------------------------------------
+
+    def weight_upload(self, epoch: int, stage: int, uid: int) -> str:
+        return f"weights/ep{epoch}/s{stage}/m{uid}"
+
+    def anchor(self, epoch: int, stage: int) -> str:
+        return f"weights/ep{epoch}/s{stage}/merged"
+
+    # -- score plane -----------------------------------------------------
+
+    def score(self, epoch: int, validator_uid: int, miner_uid: int) -> str:
+        return f"scores/ep{epoch}/v{validator_uid}/m{miner_uid}"
+
+    # -- prefixes (garbage collection, audits) ---------------------------
+
+    def activations_prefix(self, epoch: int) -> str:
+        return f"activations/ep{epoch}"
+
+    def weights_prefix(self, epoch: int) -> str:
+        return f"weights/ep{epoch}"
+
+    # -- parsing ---------------------------------------------------------
+
+    def parse(self, key: str) -> ParsedKey:
+        """Invert a v1 key back to (kind, fields); raises ValueError on
+        keys outside the schema — audit tooling uses this to walk a store."""
+        for kind, pat in _V1_PATTERNS:
+            m = pat.match(key)
+            if m:
+                return ParsedKey(kind, {k: int(v)
+                                        for k, v in m.groupdict().items()})
+        raise ValueError(f"key does not match KeySchema v{self.version}: "
+                         f"{key!r}")

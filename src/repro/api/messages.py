@@ -1,0 +1,125 @@
+"""Typed peer-protocol messages (frozen dataclasses).
+
+Everything miners, validators and the orchestrator exchange is one of these
+five message types; a message knows its own store key via ``key(schema)``.
+Payloads ride next to the envelope (``Transport.publish(msg, payload)``)
+rather than inside it so the frozen envelope stays hashable and cheap to
+log/replay.
+
+The set mirrors the paper's traffic planes:
+  ActivationMsg    forward wire codes (plus pipeline-entry tokens)
+  GradientMsg      backward wire gradients
+  WeightUploadMsg  compressed weight uploads (sharing stage, §2.1)
+  AnchorMsg        merged per-stage anchor after butterfly + DiLoCo outer
+  ScoreMsg         validator scores feeding the incentive ledger (§3)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Union
+
+from repro.api.keys import KeySchema
+
+
+@dataclasses.dataclass(frozen=True)
+class ActivationMsg:
+    """A boundary activation.  ``stage is None`` marks the pipeline entry
+    (the orchestrator's token batch, produced by no miner)."""
+    epoch: int
+    tick: int
+    stage: Optional[int] = None
+    miner_uid: Optional[int] = None
+
+    @classmethod
+    def tokens(cls, epoch: int, tick: int) -> "ActivationMsg":
+        return cls(epoch, tick)
+
+    @property
+    def is_tokens(self) -> bool:
+        return self.stage is None
+
+    def key(self, schema: KeySchema) -> str:
+        if self.is_tokens:
+            return schema.tokens(self.epoch, self.tick)
+        return schema.activation(self.epoch, self.tick, self.stage,
+                                 self.miner_uid)
+
+
+@dataclasses.dataclass(frozen=True)
+class GradientMsg:
+    """Gradient w.r.t. the activation miner_uid uploaded at (tick, stage)."""
+    epoch: int
+    tick: int
+    stage: int
+    miner_uid: int
+
+    @classmethod
+    def for_activation(cls, act: ActivationMsg) -> "GradientMsg":
+        assert not act.is_tokens, "no gradient flows into the token batch"
+        return cls(act.epoch, act.tick, act.stage, act.miner_uid)
+
+    def key(self, schema: KeySchema) -> str:
+        return schema.gradient(self.epoch, self.tick, self.stage,
+                               self.miner_uid)
+
+
+@dataclasses.dataclass(frozen=True)
+class WeightUploadMsg:
+    """A qualifying miner's compressed weight vector (sharing stage)."""
+    epoch: int
+    stage: int
+    miner_uid: int
+    # advisory (payload is already encoded) and not part of the key, so it
+    # is excluded from equality — message_for_key must round-trip envelopes
+    # regardless of which share codec the config picked
+    codec: str = dataclasses.field(default="int8", compare=False)
+
+    def key(self, schema: KeySchema) -> str:
+        return schema.weight_upload(self.epoch, self.stage, self.miner_uid)
+
+
+@dataclasses.dataclass(frozen=True)
+class AnchorMsg:
+    """The merged per-stage anchor every miner downloads at full sync."""
+    epoch: int
+    stage: int
+
+    def key(self, schema: KeySchema) -> str:
+        return schema.anchor(self.epoch, self.stage)
+
+
+@dataclasses.dataclass(frozen=True)
+class ScoreMsg:
+    """A validator's epoch verdict on one tracked miner."""
+    epoch: int
+    validator_uid: int
+    miner_uid: int
+
+    def key(self, schema: KeySchema) -> str:
+        return schema.score(self.epoch, self.validator_uid, self.miner_uid)
+
+
+Message = Union[ActivationMsg, GradientMsg, WeightUploadMsg, AnchorMsg,
+                ScoreMsg]
+
+MESSAGE_TYPES = (ActivationMsg, GradientMsg, WeightUploadMsg, AnchorMsg,
+                 ScoreMsg)
+
+
+def message_for_key(key: str, schema: KeySchema) -> Message:
+    """Reconstruct the typed envelope from a raw store key (audit path)."""
+    parsed = schema.parse(key)
+    f = parsed.fields
+    if parsed.kind == "tokens":
+        return ActivationMsg(f["epoch"], f["tick"])
+    if parsed.kind == "activation":
+        return ActivationMsg(f["epoch"], f["tick"], f["stage"], f["uid"])
+    if parsed.kind == "gradient":
+        return GradientMsg(f["epoch"], f["tick"], f["stage"], f["uid"])
+    if parsed.kind == "weights":
+        return WeightUploadMsg(f["epoch"], f["stage"], f["uid"])
+    if parsed.kind == "anchor":
+        return AnchorMsg(f["epoch"], f["stage"])
+    if parsed.kind == "score":
+        return ScoreMsg(f["epoch"], f["validator"], f["uid"])
+    raise ValueError(f"unmapped key kind: {parsed.kind}")

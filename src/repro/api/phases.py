@@ -1,0 +1,301 @@
+"""Phase objects behind the ``Phase`` protocol + the ``EpochDriver``.
+
+The seed ``Orchestrator.run_epoch`` hard-coded the Fig 2 epoch timeline in
+one ~180-line method; each stage is now its own object so scenarios can
+re-order, replace or extend the timeline (async joins, multi-validator
+panels, partition faults) without touching the core loop:
+
+  TrainingPhase    CLASP-sampled pathways, forward/backward over the
+                   transport, SWARM rerouting, stragglers
+  ValidationPhase  validators replay tracked miners from their sync
+                   snapshots (runs *before* merge: replay starts from the
+                   pre-merge snapshot, exactly as the seed did)
+  SharingPhase     qualifying miners upload codec-compressed weights
+  SyncPhase        butterfly all-reduce + DiLoCo outer step + anchor
+                   download for everyone (incl. joiners)
+
+Determinism contract: with ``InProcessTransport`` the default timeline
+reproduces the seed trajectory bit-exactly — every RNG draw (pathway
+sampling, drop rolls, fault corruption) happens in the same order as the
+seed monolith.  Phases that reorder RNG-consuming work define a *different*
+scenario, not a bug, but must say so.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Iterable, Optional, Protocol, runtime_checkable
+
+import jax
+from jax.flatten_util import ravel_pytree
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api.config import EpochStats
+from repro.api.messages import (
+    ActivationMsg,
+    AnchorMsg,
+    GradientMsg,
+    ScoreMsg,
+    WeightUploadMsg,
+)
+from repro.core import butterfly, clasp, compression, diloco
+
+
+@dataclasses.dataclass
+class EpochState:
+    """Mutable scratchpad one epoch's phases write into; the driver folds
+    it into ``EpochStats`` at the end."""
+    epoch: int
+    snapshots: dict[int, dict]
+    records: list = dataclasses.field(default_factory=list)
+    labels_for: dict = dataclasses.field(default_factory=dict)
+    stalled: int = 0
+    validation: list = dataclasses.field(default_factory=list)
+    batches: dict[int, int] = dataclasses.field(default_factory=dict)
+    merge_quorum: bool = False
+    b_eff: int = 0
+    # sharing -> sync handoff: stage -> (qualifying miners, decoded uploads)
+    qualified: dict[int, list] = dataclasses.field(default_factory=dict)
+    uploads: dict[int, dict[int, np.ndarray]] = dataclasses.field(
+        default_factory=dict)
+    merged_stages: int = 0
+    agreement: dict[int, np.ndarray] = dataclasses.field(default_factory=dict)
+
+
+@runtime_checkable
+class Phase(Protocol):
+    """One slice of the epoch timeline.  ``run`` mutates ``state`` (and the
+    swarm: miner params, anchors, ledger) through the swarm's transport."""
+    name: str
+
+    def run(self, swarm: Any, state: EpochState) -> None: ...
+
+
+class TrainingPhase:
+    name = "training"
+
+    def run(self, swarm, state: EpochState) -> None:
+        S = swarm.config
+        tp, schema = swarm.transport, swarm.transport.schema
+        for tick in range(S.inner_steps):
+            batch = swarm.corpus.batch(swarm.global_tick)
+            swarm.global_tick += 1
+            # SWARM routing: sample one available miner per stage, reroute
+            pathway = []
+            ok = True
+            for s in range(S.n_stages):
+                avail = [m for m in swarm.stage_miners(s)
+                         if swarm.available(m, tick)]
+                if not avail:
+                    ok = False
+                    break
+                pathway.append(avail[swarm.rng.randint(len(avail))])
+            if not ok:
+                state.stalled += 1     # a whole layer offline: pipeline stall
+                continue
+
+            tok_msg = ActivationMsg.tokens(state.epoch, tick)
+            tp.publish(tok_msg, jnp.asarray(batch["tokens"]),
+                       actor="orchestrator")
+            # ---------------- forward chain ----------------
+            in_key = tok_msg.key(schema)
+            last_in_key = in_key
+            for s, miner in enumerate(pathway):
+                out_msg = ActivationMsg(state.epoch, tick, s, miner.uid)
+                out_key = out_msg.key(schema)
+                if s == S.n_stages - 1:
+                    last_in_key = in_key
+                out = miner.forward(tick, in_key, out_key)
+                # an adversarial miner uploads a corrupted activation in
+                # place of its honest output — validators catch the mismatch
+                # on replay, CLASP catches the downstream loss inflation
+                b = swarm.faults.behavior(miner.uid)
+                if s < S.n_stages - 1 and (b.free_ride
+                                           or b.tamper_activations > 0):
+                    corrupted = swarm.faults.corrupt_activation(
+                        miner.uid, np.asarray(out, np.float32))
+                    tp.publish(out_msg,
+                               jnp.asarray(corrupted).astype(out.dtype),
+                               actor=miner.actor)
+                in_key = out_key
+            last = pathway[-1]
+            labels = jnp.asarray(batch["labels"])
+            state.labels_for[last_in_key] = labels
+
+            # ---------------- backward chain ----------------
+            loss, g = last.backward_last(last_in_key, labels)
+            state.records.append(clasp.PathwayRecord(
+                tuple(m.uid for m in pathway), loss))
+            for s in range(S.n_stages - 2, -1, -1):
+                miner = pathway[s]
+                tp.publish(GradientMsg(state.epoch, tick, s, miner.uid), g,
+                           actor="orchestrator")
+                g = miner.backward(miner.work_log[-1].sample_key, g)
+
+
+class ValidationPhase:
+    """Each validator tracks a random miner (§3: random assignment) and
+    publishes its verdict as a ``ScoreMsg`` so emissions are auditable
+    from the store alone."""
+    name = "validation"
+
+    def run(self, swarm, state: EpochState) -> None:
+        t_now = state.epoch * swarm.config.sync_interval_hours
+        uids = sorted(swarm.miners.keys())
+        for v in swarm.validators:
+            uid = uids[swarm.rng.randint(len(uids))]
+            m = swarm.miners[uid]
+            res = v.validate_epoch(m, state.snapshots[uid], state.epoch,
+                                   t_now, state.labels_for,
+                                   max_items=swarm.config.validate_max_items)
+            swarm.transport.publish(
+                ScoreMsg(state.epoch, v.uid, uid),
+                np.asarray([res.score, res.checked, res.passed,
+                            res.min_cosine], np.float32),
+                actor=v.actor)
+            state.validation.append(res)
+
+
+class SharingPhase:
+    """Compressed sharing (§2.1): qualifying miners (B_m >= B_min, quorum)
+    upload codec-compressed weight vectors within their layer."""
+    name = "sharing"
+
+    def run(self, swarm, state: EpochState) -> None:
+        S = swarm.config
+        state.batches = {m.uid: m.batches_done
+                         for m in swarm.miners.values()}
+        state.b_eff = diloco.effective_batch(state.batches, S.b_min)
+        state.merge_quorum = diloco.should_merge(state.batches, S.b_min,
+                                                 S.quorum_frac)
+        if not state.merge_quorum:
+            return
+        for s in range(S.n_stages):
+            qual = [m for m in swarm.stage_miners(s)
+                    if m.batches_done >= S.b_min]
+            if len(qual) < 2:
+                continue
+            uploads: dict[int, np.ndarray] = {}
+            with swarm.transport.parallel():   # distinct links: overlap
+                for idx, m in enumerate(qual):
+                    vec = m.weights_vector()
+                    vec = swarm.faults.corrupt_weights(m.uid, vec)
+                    payload = compression.encode(jnp.asarray(vec),
+                                                 S.share_codec)
+                    swarm.transport.publish(
+                        WeightUploadMsg(state.epoch, s, m.uid,
+                                        codec=S.share_codec),
+                        payload, actor=m.actor)
+                    uploads[idx] = np.asarray(
+                        compression.decode(payload, vec.shape[0]))
+            state.qualified[s] = qual
+            state.uploads[s] = uploads
+
+
+class SyncPhase:
+    """Butterfly all-reduce per layer (agreement matrix exposes tamperers),
+    DiLoCo outer Nesterov step on the per-stage anchor, then everyone —
+    stragglers and joiners included — downloads the anchor."""
+    name = "sync"
+
+    def run(self, swarm, state: EpochState) -> None:
+        S = swarm.config
+        if not state.merge_quorum:
+            return
+        for s, qual in state.qualified.items():
+            uploads = state.uploads[s]
+            plan = butterfly.make_plan(len(qual), uploads[0].shape[0],
+                                       seed=S.seed + state.epoch * 131 + s)
+            # a weight-tampering miner also reduces dishonestly: its merged
+            # shard copies deviate, which is what the agreement matrix
+            # exposes (paper Fig 7a)
+            tamper = {idx: swarm.faults.behavior(m.uid).tamper_weights
+                      for idx, m in enumerate(qual)
+                      if swarm.faults.behavior(m.uid).tamper_weights > 0}
+            copies = butterfly.reduce_with_copies(plan, uploads,
+                                                  tamper=tamper or None)
+            state.agreement[s] = butterfly.agreement_matrix(plan, copies)
+            merged, _, _ = butterfly.reduce_shards(plan, uploads)
+            # --- DiLoCo outer step on the per-stage anchor ---
+            _, unravel = ravel_pytree(
+                jax.tree.map(lambda x: x.astype(jnp.float32),
+                             swarm.anchors[s]))
+            avg = unravel(jnp.asarray(merged))
+            swarm.outer[s] = diloco.outer_update(
+                swarm.outer[s], avg, outer_lr=S.outer_lr,
+                outer_momentum=S.outer_momentum)
+            swarm.anchors[s] = jax.tree.map(
+                lambda a, p: a.astype(p.dtype), swarm.outer[s].anchor,
+                swarm.anchors[s])
+            # --- full sync: every miner (incl. stragglers/joiners) downloads
+            anchor_vec, _ = ravel_pytree(
+                jax.tree.map(lambda x: x.astype(jnp.float32),
+                             swarm.anchors[s]))
+            msg = AnchorMsg(state.epoch, s)
+            swarm.transport.publish(msg, np.asarray(anchor_vec),
+                                    actor="orchestrator")
+            with swarm.transport.parallel():
+                for m in swarm.stage_miners(s):
+                    vec = swarm.transport.fetch(msg, actor=m.actor)
+                    m.load_weights_vector(vec)
+            state.merged_stages += 1
+
+
+def default_phases() -> list[Phase]:
+    """Seed-equivalent timeline.  Validation precedes merge because replay
+    starts from the epoch-start snapshot (the miner's last full sync)."""
+    return [TrainingPhase(), ValidationPhase(), SharingPhase(), SyncPhase()]
+
+
+class EpochDriver:
+    """Runs the phase list over a swarm and folds the scratchpad into
+    ``EpochStats``.  Swap/extend ``phases`` to define new scenarios."""
+
+    def __init__(self, phases: Optional[Iterable[Phase]] = None):
+        self.phases: list[Phase] = list(phases or default_phases())
+
+    def run_epoch(self, swarm) -> EpochStats:
+        for m in swarm.miners.values():
+            m.reset_epoch()
+        state = EpochState(
+            epoch=swarm.epoch,
+            snapshots={uid: m.snapshot()
+                       for uid, m in swarm.miners.items()})
+        for phase in self.phases:
+            phase.run(swarm, state)
+        if not state.batches:
+            # a timeline without SharingPhase still reports the batch census
+            state.batches = {m.uid: m.batches_done
+                             for m in swarm.miners.values()}
+            state.b_eff = diloco.effective_batch(state.batches,
+                                                 swarm.config.b_min)
+
+        n_miners = len(swarm.miners)
+        layer_of = np.array([swarm.miners[u].stage
+                             for u in sorted(swarm.miners.keys())])
+        report = (clasp.attribute(state.records, n_miners, layer_of)
+                  if state.records else None)
+        t_now = swarm.epoch * swarm.config.sync_interval_hours
+        swarm.ledger.prune(t_now)
+        emissions = swarm.ledger.emissions(
+            t_now, miners=sorted(swarm.miners.keys()))
+
+        stats = EpochStats(
+            epoch=swarm.epoch,
+            mean_loss=float(np.mean([r.loss for r in state.records]))
+            if state.records else float("nan"),
+            b_eff=state.b_eff,
+            batches=dict(state.batches),
+            merged_stages=state.merged_stages,
+            stalled_ticks=state.stalled,
+            agreement=state.agreement,
+            clasp=report,
+            validation=state.validation,
+            emissions=emissions,
+        )
+        swarm.history.append(stats)
+        swarm.epoch += 1
+        # activations from this epoch are garbage-collected from the store
+        swarm.transport.delete_prefix(
+            swarm.transport.schema.activations_prefix(stats.epoch))
+        return stats

@@ -1,0 +1,134 @@
+"""``Swarm`` — the thin facade over transport + phases + driver.
+
+The seed ``Orchestrator`` monolith is now: construction (this class),
+a message plane (``Transport``), and a timeline (``EpochDriver`` over
+``Phase`` objects).  ``Orchestrator`` in ``repro.runtime.orchestrator``
+subclasses this for backward compatibility.
+
+    swarm = Swarm.create(model_cfg, SwarmConfig(seed=0))
+    stats = swarm.run(3)
+
+    net = Swarm.create(model_cfg, SwarmConfig(seed=0),
+                       transport=SimulatedNetworkTransport(
+                           NetworkModel.consumer()))
+    net.run(3)
+    net.transport.elapsed_seconds()   # simulated wall-clock
+"""
+from __future__ import annotations
+
+from typing import Any, Iterable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api.config import EpochStats, SwarmConfig
+from repro.api.phases import EpochDriver, Phase
+from repro.api.transport import InProcessTransport, Transport
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.core import diloco
+from repro.core.incentives import IncentiveLedger
+from repro.data.pipeline import DataConfig, SyntheticCorpus
+from repro.runtime import stage_model as sm
+from repro.runtime.miner import Miner
+from repro.runtime.network import FaultModel
+from repro.runtime.validator import Validator
+
+
+class Swarm:
+    def __init__(self, model_cfg: ModelConfig, config: SwarmConfig,
+                 faults: Optional[FaultModel] = None,
+                 transport: Optional[Transport] = None,
+                 train_cfg: Optional[TrainConfig] = None,
+                 driver: Optional[EpochDriver] = None):
+        self.cfg = model_cfg
+        self.config = config
+        self.transport = transport or InProcessTransport()
+        self.faults = faults or FaultModel({}, seed=config.seed)
+        self.spec = sm.SwarmModelSpec(model_cfg, config.n_stages,
+                                      config.compress, config.bottleneck_dim)
+        self.train_cfg = train_cfg or TrainConfig(lr=1e-3, warmup_steps=20)
+        self.rng = np.random.RandomState(config.seed)
+        self.ledger = IncentiveLedger(config.gamma_hours)
+        self.corpus = SyntheticCorpus(DataConfig(
+            vocab_size=model_cfg.vocab_size, seq_len=config.seq_len,
+            batch_size=config.batch_size, seed=config.seed))
+        self.driver = driver or EpochDriver()
+        self.global_tick = 0
+        self.epoch = 0
+
+        # per-stage anchors + DiLoCo outer state (the shared model)
+        key = jax.random.key(config.seed)
+        self.anchors: list[Any] = []
+        self.outer: list[diloco.OuterState] = []
+        for s in range(config.n_stages):
+            p = sm.init_stage_params(jax.random.fold_in(key, s), self.spec, s)
+            self.anchors.append(p)
+            self.outer.append(diloco.outer_init(p))
+
+        # register miners: uid = stage * miners_per_stage + slot
+        self.miners: dict[int, Miner] = {}
+        for s in range(config.n_stages):
+            for _ in range(config.miners_per_stage):
+                self.register_miner(stage=s)
+
+        self.validators = [Validator(v, self.transport, self.ledger)
+                           for v in range(config.validators)]
+        self.history: list[EpochStats] = []
+
+    @classmethod
+    def create(cls, model_cfg: ModelConfig,
+               config: Optional[SwarmConfig] = None, *,
+               faults: Optional[FaultModel] = None,
+               transport: Optional[Transport] = None,
+               train_cfg: Optional[TrainConfig] = None,
+               phases: Optional[Iterable[Phase]] = None) -> "Swarm":
+        driver = EpochDriver(phases) if phases is not None else None
+        return cls(model_cfg, config or SwarmConfig(), faults=faults,
+                   transport=transport, train_cfg=train_cfg, driver=driver)
+
+    # ------------------------------------------------------------------
+
+    @property
+    def swarm(self) -> SwarmConfig:
+        """Seed-era alias (``orch.swarm`` was the config attribute)."""
+        return self.config
+
+    @property
+    def store(self):
+        """The backing StateStore, when the transport has one in-process."""
+        return getattr(self.transport, "store", None)
+
+    def register_miner(self, stage: int) -> Miner:
+        """Join at any time; actively participates after the next full sync
+
+        (it is initialised from the anchor = 'copying existing miners'
+        states', §2.2)."""
+        uid = len(self.miners)
+        params = jax.tree.map(jnp.copy, self.anchors[stage])
+        m = Miner(uid, stage, self.spec, params, self.transport,
+                  self.train_cfg)
+        self.miners[uid] = m
+        return m
+
+    def stage_miners(self, stage: int) -> list[Miner]:
+        return [m for m in self.miners.values() if m.stage == stage]
+
+    def available(self, m: Miner, tick: int) -> bool:
+        """Fault-model gate the TrainingPhase consults per (miner, tick).
+
+        NOTE: draws from the fault RNG on every call — call order is part
+        of the determinism contract."""
+        b = self.faults.behavior(m.uid)
+        if self.faults.is_dropped(m.uid):
+            return False
+        period = max(int(round(b.straggle_factor)), 1)
+        return tick % period == 0
+
+    # ------------------------------------------------------------------
+
+    def run_epoch(self) -> EpochStats:
+        return self.driver.run_epoch(self)
+
+    def run(self, n_epochs: int) -> list[EpochStats]:
+        return [self.run_epoch() for _ in range(n_epochs)]

@@ -1,0 +1,225 @@
+"""Pluggable transports: how messages physically reach the shared store.
+
+The paper's hub-and-spoke network (§2, Fig 6) routes everything through a
+globally accessible store; *how long* that takes is a property of each
+actor's link, not of the algorithm.  The ``Transport`` protocol is the seam:
+
+  * ``InProcessTransport``      zero-latency wrapper over ``StateStore`` —
+    bit-identical to the seed runtime (same accounting, same digests, same
+    trajectory).
+  * ``SimulatedNetworkTransport``  the same store plus a per-link
+    latency/bandwidth model that accumulates *simulated* wall-clock, so
+    benchmarks can report time-to-loss under realistic links (§5.3
+    transfer analysis, scenario-parameterised).
+
+Clock model (documented, deliberately simple): every actor owns one full-
+duplex link to the hub.  Transfers on the same link serialize; transfers on
+different links overlap only inside an explicit ``transport.parallel()``
+block (the phases mark weight upload / anchor download fan-outs that way —
+the forward/backward activation chain is genuinely sequential).  The global
+simulated clock advances by each transfer's duration, or by the *max*
+duration inside a parallel block.
+
+Missing keys surface as ``StoreKeyError`` (key + actor + nearest existing
+prefix) through ``get``/``fetch`` on every transport.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from collections import defaultdict
+from typing import Any, Optional, Protocol, runtime_checkable
+
+from repro.api.keys import KeySchema
+from repro.api.messages import Message
+from repro.runtime.state_store import StateStore, StoreKeyError  # noqa: F401
+
+
+@runtime_checkable
+class Transport(Protocol):
+    """What the runtime needs from a message plane.
+
+    ``publish``/``fetch`` move typed messages; ``put``/``get`` move raw
+    keys (validator replay walks logged keys).  ``elapsed_seconds`` is the
+    simulated wall-clock spent on transfers (0.0 for in-process)."""
+
+    schema: KeySchema
+
+    def publish(self, msg: Message, payload: Any, actor: str = "?",
+                meta: Optional[dict] = None) -> str: ...
+    def fetch(self, msg: Message, actor: str = "?") -> Any: ...
+    def put(self, key: str, value: Any, actor: str = "?",
+            codec: Optional[str] = None,
+            meta: Optional[dict] = None) -> str: ...
+    def get(self, key: str, actor: str = "?") -> Any: ...
+    def exists(self, key: str) -> bool: ...
+    def delete_prefix(self, prefix: str) -> int: ...
+    def keys(self, prefix: str = "") -> list[str]: ...
+    def parallel(self): ...
+    def traffic_report(self) -> dict: ...
+    def link_report(self) -> dict: ...
+    def elapsed_seconds(self) -> float: ...
+
+
+class InProcessTransport:
+    """The seed behaviour: a dict lookup away, no latency, no bandwidth."""
+
+    def __init__(self, store: Optional[StateStore] = None,
+                 schema: Optional[KeySchema] = None):
+        self.store = store or StateStore()
+        self.schema = schema or KeySchema()
+
+    # -- typed plane -----------------------------------------------------
+
+    def publish(self, msg: Message, payload: Any, actor: str = "?",
+                meta: Optional[dict] = None) -> str:
+        return self.put(msg.key(self.schema), payload, actor=actor, meta=meta)
+
+    def fetch(self, msg: Message, actor: str = "?") -> Any:
+        return self.get(msg.key(self.schema), actor=actor)
+
+    # -- raw plane -------------------------------------------------------
+
+    def put(self, key: str, value: Any, actor: str = "?",
+            codec: Optional[str] = None,
+            meta: Optional[dict] = None) -> str:
+        return self.store.put(key, value, actor=actor, codec=codec, meta=meta)
+
+    def get(self, key: str, actor: str = "?") -> Any:
+        return self.store.get(key, actor=actor)
+
+    def exists(self, key: str) -> bool:
+        return self.store.exists(key)
+
+    def delete_prefix(self, prefix: str) -> int:
+        return self.store.delete_prefix(prefix)
+
+    def keys(self, prefix: str = "") -> list[str]:
+        return self.store.keys(prefix)
+
+    # -- timing ----------------------------------------------------------
+
+    @contextlib.contextmanager
+    def parallel(self):
+        yield
+
+    def traffic_report(self) -> dict:
+        return self.store.traffic_report()
+
+    def link_report(self) -> dict:
+        return {}
+
+    def elapsed_seconds(self) -> float:
+        return 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class LinkSpec:
+    """One actor's link to the hub."""
+    latency_s: float = 0.02           # per-request round-trip setup
+    bandwidth_mbps: float = 100.0     # megabits/second, symmetric
+
+    def transfer_seconds(self, nbytes: int) -> float:
+        return self.latency_s + (nbytes * 8.0) / (self.bandwidth_mbps * 1e6)
+
+
+@dataclasses.dataclass(frozen=True)
+class NetworkModel:
+    """Per-actor link overrides on top of a default link.
+
+    Presets mirror the §5.3 scenarios: ``datacenter`` (what the paper's
+    centralized baseline assumes) vs ``consumer`` (what a permissionless
+    swarm actually gets)."""
+    default: LinkSpec = LinkSpec()
+    links: dict = dataclasses.field(default_factory=dict)  # actor -> LinkSpec
+
+    def link(self, actor: str) -> LinkSpec:
+        return self.links.get(actor, self.default)
+
+    @classmethod
+    def datacenter(cls) -> "NetworkModel":
+        return cls(default=LinkSpec(latency_s=0.001, bandwidth_mbps=10_000.0))
+
+    @classmethod
+    def consumer(cls) -> "NetworkModel":
+        return cls(default=LinkSpec(latency_s=0.03, bandwidth_mbps=100.0))
+
+
+@dataclasses.dataclass
+class LinkStats:
+    up_bytes: int = 0
+    down_bytes: int = 0
+    busy_seconds: float = 0.0
+    transfers: int = 0
+
+
+class SimulatedNetworkTransport(InProcessTransport):
+    """Same store, same payloads, same trajectory — plus a simulated clock.
+
+    Byte accounting per link equals ``StateStore.traffic_report()``'s
+    per-actor accounting by construction (both count ``StoreEntry.nbytes``
+    on the same calls); tests assert the invariant."""
+
+    def __init__(self, network: Optional[NetworkModel] = None,
+                 store: Optional[StateStore] = None,
+                 schema: Optional[KeySchema] = None):
+        super().__init__(store=store, schema=schema)
+        self.network = network or NetworkModel()
+        self.links: dict[str, LinkStats] = defaultdict(LinkStats)
+        self._clock = 0.0
+        self._parallel_batch: Optional[dict[str, float]] = None
+
+    # -- clock -----------------------------------------------------------
+
+    def _charge(self, actor: str, nbytes: int, up: bool) -> None:
+        seconds = self.network.link(actor).transfer_seconds(nbytes)
+        stats = self.links[actor]
+        stats.busy_seconds += seconds
+        stats.transfers += 1
+        if up:
+            stats.up_bytes += nbytes
+        else:
+            stats.down_bytes += nbytes
+        if self._parallel_batch is not None:
+            self._parallel_batch[actor] = \
+                self._parallel_batch.get(actor, 0.0) + seconds
+        else:
+            self._clock += seconds
+
+    @contextlib.contextmanager
+    def parallel(self):
+        """Transfers inside the block overlap *across* links only: per the
+        clock model, same-link transfers still serialize, so the clock
+        advances by the busiest link's total.  Nested blocks flatten into
+        the outermost."""
+        if self._parallel_batch is not None:
+            yield                      # already inside a batch
+            return
+        self._parallel_batch = {}
+        try:
+            yield
+        finally:
+            batch, self._parallel_batch = self._parallel_batch, None
+            if batch:
+                self._clock += max(batch.values())
+
+    def elapsed_seconds(self) -> float:
+        return self._clock
+
+    def link_report(self) -> dict:
+        return {actor: dataclasses.asdict(s)
+                for actor, s in sorted(self.links.items())}
+
+    # -- raw plane (timed) -----------------------------------------------
+
+    def put(self, key: str, value: Any, actor: str = "?",
+            codec: Optional[str] = None,
+            meta: Optional[dict] = None) -> str:
+        digest = super().put(key, value, actor=actor, codec=codec, meta=meta)
+        self._charge(actor, self.store.get_entry(key).nbytes, up=True)
+        return digest
+
+    def get(self, key: str, actor: str = "?") -> Any:
+        payload = super().get(key, actor=actor)
+        self._charge(actor, self.store.get_entry(key).nbytes, up=False)
+        return payload

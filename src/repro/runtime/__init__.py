@@ -1,3 +1,18 @@
-from repro.runtime.orchestrator import Orchestrator, SwarmConfig  # noqa: F401
 from repro.runtime.network import FaultModel, MinerBehavior  # noqa: F401
-from repro.runtime.state_store import StateStore  # noqa: F401
+from repro.runtime.state_store import StateStore, StoreKeyError  # noqa: F401
+
+# Orchestrator/SwarmConfig re-export lazily (PEP 562): orchestrator.py sits
+# on top of repro.api, which itself imports runtime submodules — an eager
+# import here would make ``import repro.api`` hit this package mid-cycle.
+_LAZY = ("Orchestrator", "SwarmConfig", "EpochStats")
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        from repro.runtime import orchestrator
+        return getattr(orchestrator, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(list(globals()) + list(_LAZY))

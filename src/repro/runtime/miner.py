@@ -1,13 +1,13 @@
 """Miner: one layer-slice worker (paper §2.2).
 
 Holds stage params + a local inner optimizer (the DiLoCo inner loop), streams
-activations through the StateStore, keeps a local work log that validators
-can replay bit-exactly.
+activations through its Transport (in-process or simulated-network), keeps a
+local work log that validators can replay bit-exactly.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional
+from typing import Any, Optional, TYPE_CHECKING
 
 import jax
 from jax.flatten_util import ravel_pytree
@@ -19,7 +19,9 @@ from repro.configs.base import TrainConfig
 from repro.optim import adamw
 from repro.optim.schedules import cosine_warmup
 from repro.runtime import stage_model as sm
-from repro.runtime.state_store import StateStore
+
+if TYPE_CHECKING:
+    from repro.api.transport import Transport
 
 
 @dataclasses.dataclass
@@ -33,13 +35,13 @@ class WorkItem:
 
 class Miner:
     def __init__(self, uid: int, stage: int, spec: sm.SwarmModelSpec,
-                 params: Any, store: StateStore,
+                 params: Any, transport: "Transport",
                  train_cfg: Optional[TrainConfig] = None):
         self.uid = uid
         self.stage = stage
         self.spec = spec
         self.role = spec.role(stage)
-        self.store = store
+        self.transport = transport
         self.params = params
         tc = train_cfg or TrainConfig(lr=1e-3, warmup_steps=20)
         self.opt = adamw(cosine_warmup(tc.lr, tc.warmup_steps, 10_000),
@@ -59,10 +61,10 @@ class Miner:
 
     def forward(self, tick: int, sample_key: str, out_key: str) -> Any:
         """Read input from the store, apply the stage, upload the output."""
-        x_in = self.store.get(sample_key, actor=self.actor)
+        x_in = self.transport.get(sample_key, actor=self.actor)
         out = sm.stage_forward(self.params, x_in, self.spec, self.role)
         self._pending[sample_key] = x_in
-        self.store.put(out_key, out, actor=self.actor)
+        self.transport.put(out_key, out, actor=self.actor)
         self.work_log.append(WorkItem(tick, sample_key, out_key))
         return out
 

@@ -1,318 +1,38 @@
-"""Orchestrator (paper §2, §2.1): the hub of the hub-and-spoke architecture.
+"""Orchestrator — backward-compatible facade over ``repro.api.Swarm``.
 
-Drives the four-stage epoch timeline of Fig 2:
-  1. *training*       — samples stream along CLASP-sampled pathways (one
-                         miner per stage); forward codes + backward grads
-                         transit the StateStore; miners update locally
-                         (DiLoCo inner steps); SWARM-style rerouting around
-                         dropped miners; stragglers finish fewer batches.
-  2. *compressed sharing* — qualifying miners (B_m >= B_min, §2.1 quorum)
-                         upload int8-compressed weights within their layer.
-  3. *full sync*      — butterfly all-reduce per layer merges weights
-                         (agreement matrix exposes tamperers), the DiLoCo
-                         outer Nesterov step updates the per-stage anchor,
-                         everyone (including joiners) downloads the anchor.
-  4. *validation*     — validators replay tracked miners from their sync
-                         snapshots and write scores to the incentive ledger.
+The hub of the hub-and-spoke architecture (paper §2, §2.1) used to live
+here as a ~320-line monolith; it is now built from the peer-protocol API:
 
-Everything is seeded and deterministic: the same SwarmConfig reproduces the
-same training trajectory, which is also what makes validator replay exact.
+  * typed messages + versioned ``KeySchema``   repro.api.messages / .keys
+  * pluggable ``Transport``                    repro.api.transport
+  * phase objects + ``EpochDriver``            repro.api.phases
+  * the ``Swarm`` facade                       repro.api.swarm
+
+This module keeps the seed constructor signature (``store=`` takes a raw
+``StateStore``) and re-exports ``SwarmConfig``/``EpochStats`` so existing
+tests, examples and benchmarks keep working unchanged.  New code should use
+``Swarm.create(...)`` directly — see docs/API.md.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Optional
+from typing import Optional
 
-import jax
-from jax.flatten_util import ravel_pytree
-import jax.numpy as jnp
-import numpy as np
-
+from repro.api.config import EpochStats, SwarmConfig  # noqa: F401
+from repro.api.swarm import Swarm
+from repro.api.transport import InProcessTransport
 from repro.configs.base import ModelConfig, TrainConfig
-from repro.core import butterfly, clasp, compression, diloco
-from repro.core.incentives import IncentiveLedger
-from repro.data.pipeline import DataConfig, SyntheticCorpus
-from repro.runtime import stage_model as sm
-from repro.runtime.miner import Miner
-from repro.runtime.network import FaultModel, MinerBehavior
+from repro.runtime.network import FaultModel
 from repro.runtime.state_store import StateStore
-from repro.runtime.validator import Validator
 
 
-@dataclasses.dataclass(frozen=True)
-class SwarmConfig:
-    n_stages: int = 3
-    miners_per_stage: int = 3
-    inner_steps: int = 8              # ticks per epoch (training stage)
-    b_min: int = 4                    # BATCHES_BEFORE_MERGING
-    quorum_frac: float = 0.5
-    batch_size: int = 4
-    seq_len: int = 32
-    compress: bool = True
-    bottleneck_dim: int = 16
-    share_codec: str = "int8"         # compressed-sharing stage codec
-    outer_lr: float = 0.7
-    outer_momentum: float = 0.9
-    gamma_hours: float = 10.0         # score decay
-    sync_interval_hours: float = 0.5  # T_s
-    validators: int = 1
-    validate_max_items: Optional[int] = None
-    seed: int = 0
+class Orchestrator(Swarm):
+    """Seed-compatible constructor: wraps a ``StateStore`` in the zero-
+    latency ``InProcessTransport`` (bit-identical trajectories)."""
 
-
-@dataclasses.dataclass
-class EpochStats:
-    epoch: int
-    mean_loss: float
-    b_eff: int
-    batches: dict[int, int]
-    merged_stages: int
-    stalled_ticks: int
-    agreement: dict[int, np.ndarray]      # stage -> (n,n) agreement matrix
-    clasp: Optional[clasp.ClaspReport]
-    validation: list
-    emissions: dict[int, float]
-
-
-class Orchestrator:
     def __init__(self, model_cfg: ModelConfig, swarm: SwarmConfig,
                  faults: Optional[FaultModel] = None,
                  store: Optional[StateStore] = None,
                  train_cfg: Optional[TrainConfig] = None):
-        self.cfg = model_cfg
-        self.swarm = swarm
-        self.store = store or StateStore()
-        self.faults = faults or FaultModel({}, seed=swarm.seed)
-        self.spec = sm.SwarmModelSpec(model_cfg, swarm.n_stages,
-                                      swarm.compress, swarm.bottleneck_dim)
-        self.train_cfg = train_cfg or TrainConfig(lr=1e-3, warmup_steps=20)
-        self.rng = np.random.RandomState(swarm.seed)
-        self.ledger = IncentiveLedger(swarm.gamma_hours)
-        self.corpus = SyntheticCorpus(DataConfig(
-            vocab_size=model_cfg.vocab_size, seq_len=swarm.seq_len,
-            batch_size=swarm.batch_size, seed=swarm.seed))
-        self.global_tick = 0
-        self.epoch = 0
-
-        # per-stage anchors + DiLoCo outer state (the shared model)
-        key = jax.random.key(swarm.seed)
-        self.anchors: list[Any] = []
-        self.outer: list[diloco.OuterState] = []
-        for s in range(swarm.n_stages):
-            p = sm.init_stage_params(jax.random.fold_in(key, s), self.spec, s)
-            self.anchors.append(p)
-            self.outer.append(diloco.outer_init(p))
-
-        # register miners: uid = stage * miners_per_stage + slot
-        self.miners: dict[int, Miner] = {}
-        for s in range(swarm.n_stages):
-            for slot in range(swarm.miners_per_stage):
-                self.register_miner(stage=s)
-
-        self.validators = [Validator(v, self.store, self.ledger)
-                           for v in range(swarm.validators)]
-        self.history: list[EpochStats] = []
-
-    # ------------------------------------------------------------------
-
-    def register_miner(self, stage: int) -> Miner:
-        """Join at any time; actively participates after the next full sync
-
-        (it is initialised from the anchor = 'copying existing miners'
-        states', §2.2)."""
-        uid = len(self.miners)
-        params = jax.tree.map(jnp.copy, self.anchors[stage])
-        m = Miner(uid, stage, self.spec, params, self.store, self.train_cfg)
-        self.miners[uid] = m
-        return m
-
-    def stage_miners(self, stage: int) -> list[Miner]:
-        return [m for m in self.miners.values() if m.stage == stage]
-
-    # ------------------------------------------------------------------
-    # epoch stages
-    # ------------------------------------------------------------------
-
-    def _available(self, m: Miner, tick: int) -> bool:
-        b = self.faults.behavior(m.uid)
-        if self.faults.is_dropped(m.uid):
-            return False
-        period = max(int(round(b.straggle_factor)), 1)
-        return tick % period == 0
-
-    def _training_stage(self) -> tuple[list[clasp.PathwayRecord], dict, int]:
-        records: list[clasp.PathwayRecord] = []
-        labels_for: dict[str, Any] = {}
-        stalled = 0
-        S = self.swarm
-        for tick in range(S.inner_steps):
-            batch = self.corpus.batch(self.global_tick)
-            self.global_tick += 1
-            # SWARM routing: sample one available miner per stage, reroute
-            pathway: list[Miner] = []
-            ok = True
-            for s in range(S.n_stages):
-                avail = [m for m in self.stage_miners(s)
-                         if self._available(m, tick)]
-                if not avail:
-                    ok = False
-                    break
-                pathway.append(avail[self.rng.randint(len(avail))])
-            if not ok:
-                stalled += 1           # a whole layer offline: pipeline stall
-                continue
-
-            base = f"activations/ep{self.epoch}/t{tick}"
-            tok_key = f"{base}/tokens"
-            self.store.put(tok_key, jnp.asarray(batch["tokens"]),
-                           actor="orchestrator")
-            # ---------------- forward chain ----------------
-            in_key = tok_key
-            last_in_key = tok_key
-            for s, miner in enumerate(pathway):
-                out_key = f"{base}/s{s}/m{miner.uid}"
-                if s == S.n_stages - 1:
-                    last_in_key = in_key
-                out = miner.forward(tick, in_key, out_key)
-                # an adversarial miner uploads a corrupted activation in
-                # place of its honest output — validators catch the mismatch
-                # on replay, CLASP catches the downstream loss inflation
-                b = self.faults.behavior(miner.uid)
-                if s < S.n_stages - 1 and (b.free_ride
-                                           or b.tamper_activations > 0):
-                    corrupted = self.faults.corrupt_activation(
-                        miner.uid, np.asarray(out, np.float32))
-                    self.store.put(out_key,
-                                   jnp.asarray(corrupted).astype(out.dtype),
-                                   actor=miner.actor)
-                in_key = out_key
-            last = pathway[-1]
-            labels = jnp.asarray(batch["labels"])
-            labels_for[last_in_key] = labels
-
-            # ---------------- backward chain ----------------
-            loss, g = last.backward_last(last_in_key, labels)
-            records.append(clasp.PathwayRecord(
-                tuple(m.uid for m in pathway), loss))
-            for s in range(S.n_stages - 2, -1, -1):
-                miner = pathway[s]
-                item = miner.work_log[-1]
-                self.store.put(item.out_key + "/grad", g, actor="orchestrator")
-                g = miner.backward(item.sample_key, g)
-        return records, labels_for, stalled
-
-    def _merge_stage(self) -> tuple[int, dict[int, np.ndarray], int]:
-        """Compressed sharing + butterfly full sync + DiLoCo outer step."""
-        S = self.swarm
-        batches = {m.uid: m.batches_done for m in self.miners.values()}
-        if not diloco.should_merge(batches, S.b_min, S.quorum_frac):
-            return 0, {}, diloco.effective_batch(batches, S.b_min)
-        merged_stages = 0
-        agreement: dict[int, np.ndarray] = {}
-        for s in range(S.n_stages):
-            miners = self.stage_miners(s)
-            qual = [m for m in miners if m.batches_done >= S.b_min]
-            if len(qual) < 2:
-                continue
-            # --- weight upload (compressed sharing uses the share codec) ---
-            uploads: dict[int, np.ndarray] = {}
-            uid_order = [m.uid for m in qual]
-            for idx, m in enumerate(qual):
-                vec = m.weights_vector()
-                vec = self.faults.corrupt_weights(m.uid, vec)
-                payload = compression.encode(jnp.asarray(vec), S.share_codec)
-                self.store.put(f"weights/ep{self.epoch}/s{s}/m{m.uid}",
-                               payload, actor=m.actor)
-                uploads[idx] = np.asarray(
-                    compression.decode(payload, vec.shape[0]))
-            # --- butterfly all-reduce within the layer ---
-            plan = butterfly.make_plan(len(qual), uploads[0].shape[0],
-                                       seed=S.seed + self.epoch * 131 + s)
-            # a weight-tampering miner also reduces dishonestly: its merged
-            # shard copies deviate, which is what the agreement matrix
-            # exposes (paper Fig 7a)
-            tamper = {idx: self.faults.behavior(m.uid).tamper_weights
-                      for idx, m in enumerate(qual)
-                      if self.faults.behavior(m.uid).tamper_weights > 0}
-            copies = butterfly.reduce_with_copies(plan, uploads,
-                                                  tamper=tamper or None)
-            agreement[s] = butterfly.agreement_matrix(plan, copies)
-            merged, valid, _ = butterfly.reduce_shards(plan, uploads)
-            # --- DiLoCo outer step on the per-stage anchor ---
-            flat_anchor, unravel = ravel_pytree(
-                jax.tree.map(lambda x: x.astype(jnp.float32), self.anchors[s]))
-            avg = unravel(jnp.asarray(merged))
-            self.outer[s] = diloco.outer_update(
-                self.outer[s], avg, outer_lr=S.outer_lr,
-                outer_momentum=S.outer_momentum)
-            self.anchors[s] = jax.tree.map(
-                lambda a, p: a.astype(p.dtype), self.outer[s].anchor,
-                self.anchors[s])
-            # --- full sync: every miner (incl. stragglers/joiners) downloads
-            anchor_vec, _ = ravel_pytree(
-                jax.tree.map(lambda x: x.astype(jnp.float32), self.anchors[s]))
-            self.store.put(f"weights/ep{self.epoch}/s{s}/merged",
-                           np.asarray(anchor_vec), actor="orchestrator")
-            for m in miners:
-                vec = self.store.get(f"weights/ep{self.epoch}/s{s}/merged",
-                                     actor=m.actor)
-                m.load_weights_vector(vec)
-            merged_stages += 1
-        return merged_stages, agreement, diloco.effective_batch(batches, S.b_min)
-
-    def _validation_stage(self, snapshots: dict[int, dict],
-                          labels_for: dict) -> list:
-        """Each validator tracks a random miner (§3: random assignment)."""
-        results = []
-        t_now = self.epoch * self.swarm.sync_interval_hours
-        uids = sorted(self.miners.keys())
-        for v in self.validators:
-            uid = uids[self.rng.randint(len(uids))]
-            m = self.miners[uid]
-            res = v.validate_epoch(m, snapshots[uid], self.epoch, t_now,
-                                   labels_for,
-                                   max_items=self.swarm.validate_max_items)
-            results.append(res)
-        return results
-
-    # ------------------------------------------------------------------
-
-    def run_epoch(self) -> EpochStats:
-        for m in self.miners.values():
-            m.reset_epoch()
-        snapshots = {uid: m.snapshot() for uid, m in self.miners.items()}
-
-        records, labels_for, stalled = self._training_stage()
-        results = self._validation_stage(snapshots, labels_for)
-        merged, agreement, b_eff = self._merge_stage()
-
-        n_miners = len(self.miners)
-        layer_of = np.array([self.miners[u].stage
-                             for u in sorted(self.miners.keys())])
-        report = clasp.attribute(records, n_miners, layer_of) if records else None
-        t_now = self.epoch * self.swarm.sync_interval_hours
-        self.ledger.prune(t_now)
-        emissions = self.ledger.emissions(
-            t_now, miners=sorted(self.miners.keys()))
-
-        stats = EpochStats(
-            epoch=self.epoch,
-            mean_loss=float(np.mean([r.loss for r in records])) if records
-            else float("nan"),
-            b_eff=b_eff,
-            batches={m.uid: m.batches_done for m in self.miners.values()},
-            merged_stages=merged,
-            stalled_ticks=stalled,
-            agreement=agreement,
-            clasp=report,
-            validation=results,
-            emissions=emissions,
-        )
-        self.history.append(stats)
-        self.epoch += 1
-        # activations from this epoch are garbage-collected from the store
-        self.store.delete_prefix(f"activations/ep{stats.epoch}")
-        return stats
-
-    def run(self, n_epochs: int) -> list[EpochStats]:
-        return [self.run_epoch() for _ in range(n_epochs)]
+        super().__init__(model_cfg, swarm, faults=faults,
+                         transport=InProcessTransport(store=store),
+                         train_cfg=train_cfg)

@@ -21,6 +21,30 @@ import numpy as np
 from repro.core import compression
 
 
+class StoreKeyError(KeyError):
+    """Missing store key, with enough context to debug a routing bug:
+    the key, who asked, and the nearest prefix that *does* exist (so an
+    off-by-one epoch/tick/uid is visible at a glance)."""
+
+    def __init__(self, key: str, actor: str = "?",
+                 nearest_prefix: str = "", nearest_count: int = 0):
+        self.key = key
+        self.actor = actor
+        self.nearest_prefix = nearest_prefix
+        self.nearest_count = nearest_count
+        if nearest_prefix:
+            hint = (f"nearest existing prefix {nearest_prefix!r} "
+                    f"({nearest_count} keys)")
+        else:
+            hint = "store is empty" if nearest_count == 0 else \
+                f"no shared prefix ({nearest_count} keys in store)"
+        super().__init__(
+            f"store key not found: {key!r} (requested by {actor!r}; {hint})")
+
+    def __str__(self) -> str:  # KeyError.__str__ repr()s the arg; undo that
+        return self.args[0]
+
+
 @dataclasses.dataclass
 class StoreEntry:
     payload: Any
@@ -70,14 +94,33 @@ class StateStore:
         self.uploads_by_actor[actor] += nbytes
         return digest
 
+    def _nearest_prefix(self, key: str) -> tuple[str, int]:
+        """Longest '/'-segment prefix of ``key`` under which keys exist."""
+        parts = key.split("/")
+        for i in range(len(parts), 0, -1):
+            p = "/".join(parts[:i])
+            n = sum(1 for k in self._data if k == p or k.startswith(p + "/"))
+            if n:
+                return p, n
+        return "", len(self._data)
+
+    def _missing(self, key: str, actor: str) -> StoreKeyError:
+        prefix, count = self._nearest_prefix(key)
+        return StoreKeyError(key, actor, prefix, count)
+
     def get(self, key: str, actor: str = "?") -> Any:
-        entry = self._data[key]
+        entry = self._data.get(key)
+        if entry is None:
+            raise self._missing(key, actor)
         self.downloaded[self._ns(key)] += entry.nbytes
         self.downloads_by_actor[actor] += entry.nbytes
         return entry.payload
 
     def get_entry(self, key: str) -> StoreEntry:
-        return self._data[key]
+        entry = self._data.get(key)
+        if entry is None:
+            raise self._missing(key, "?")
+        return entry
 
     def exists(self, key: str) -> bool:
         return key in self._data

@@ -10,7 +10,7 @@ backward passes.  Miners never know when they are tracked.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Optional, TYPE_CHECKING
 
 import jax
 import jax.numpy as jnp
@@ -20,7 +20,9 @@ from repro.common import cosine_similarity
 from repro.core.incentives import IncentiveLedger
 from repro.runtime import stage_model as sm
 from repro.runtime.miner import Miner
-from repro.runtime.state_store import StateStore
+
+if TYPE_CHECKING:
+    from repro.api.transport import Transport
 
 COSINE_THRESHOLD = 0.99
 
@@ -40,9 +42,10 @@ class ValidationResult:
 
 
 class Validator:
-    def __init__(self, uid: int, store: StateStore, ledger: IncentiveLedger):
+    def __init__(self, uid: int, transport: "Transport",
+                 ledger: IncentiveLedger):
         self.uid = uid
-        self.store = store
+        self.transport = transport
         self.ledger = ledger
         self.results: list[ValidationResult] = []
 
@@ -68,9 +71,9 @@ class Validator:
         min_cos = 1.0
         items = miner.work_log if max_items is None else miner.work_log[:max_items]
         for item in items:
-            x_in = self.store.get(item.sample_key, actor=self.actor)
+            x_in = self.transport.get(item.sample_key, actor=self.actor)
             mine = sm.stage_forward(params, x_in, spec, role)
-            theirs = self.store.get(item.out_key, actor=self.actor)
+            theirs = self.transport.get(item.out_key, actor=self.actor)
             cos = float(cosine_similarity(jnp.asarray(mine, jnp.float32),
                                           jnp.asarray(theirs, jnp.float32)))
             checked += 1
@@ -85,10 +88,10 @@ class Validator:
                 _, g_params, _ = sm.last_stage_loss_and_grads(
                     params, x_in, labels, spec)
             else:
-                g_out_key = item.out_key + "/grad"
-                if not self.store.exists(g_out_key):
+                g_out_key = self.transport.schema.gradient_for(item.out_key)
+                if not self.transport.exists(g_out_key):
                     continue
-                g_out = self.store.get(g_out_key, actor=self.actor)
+                g_out = self.transport.get(g_out_key, actor=self.actor)
                 g_params, _ = sm.stage_backward(params, x_in, g_out, spec, role)
             params, opt_state = opt.update(g_params, opt_state, params,
                                            inner_step)

@@ -1,0 +1,280 @@
+"""Peer-protocol API tests: messages, KeySchema, transports, driver.
+
+The golden trajectory constants below were recorded from the *seed*
+monolithic ``Orchestrator`` (commit b78e3ed) running
+``Orchestrator(mcfg, SwarmConfig(seed=0)).run(3)`` — the refactored
+runtime must reproduce them bit-exactly through ``InProcessTransport``.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.api import (
+    ActivationMsg,
+    AnchorMsg,
+    GradientMsg,
+    InProcessTransport,
+    KeySchema,
+    NetworkModel,
+    ScoreMsg,
+    SimulatedNetworkTransport,
+    Swarm,
+    SwarmConfig,
+    WeightUploadMsg,
+    message_for_key,
+)
+from repro.api.transport import LinkSpec
+from repro.configs import get, smoke_variant
+from repro.runtime import Orchestrator, StateStore, StoreKeyError
+
+# seed trajectory: per-epoch EpochStats.mean_loss / b_eff / merged_stages
+SEED_MEAN_LOSS = [6.283693909645081, 6.273095548152924, 6.267263352870941]
+SEED_B_EFF = [16, 9, 13]
+SEED_MERGED = [1, 0, 0]
+
+
+def _mcfg(n_layers=6):
+    return dataclasses.replace(smoke_variant(get("llama3.2-1b")).model,
+                               n_layers=n_layers)
+
+
+# ---------------------------------------------------------------------------
+# messages + keys
+# ---------------------------------------------------------------------------
+
+ALL_MESSAGES = [
+    ActivationMsg.tokens(3, 1),
+    ActivationMsg(3, 1, stage=2, miner_uid=7),
+    GradientMsg(3, 1, stage=2, miner_uid=7),
+    WeightUploadMsg(4, stage=0, miner_uid=5),
+    AnchorMsg(4, stage=0),
+    ScoreMsg(2, validator_uid=1, miner_uid=9),
+]
+
+
+def test_keys_match_seed_layout():
+    ks = KeySchema()
+    assert ks.tokens(0, 2) == "activations/ep0/t2/tokens"
+    assert ks.activation(0, 2, 1, 4) == "activations/ep0/t2/s1/m4"
+    assert ks.gradient(0, 2, 1, 4) == "activations/ep0/t2/s1/m4/grad"
+    assert ks.gradient_for("activations/ep0/t2/s1/m4") == \
+        "activations/ep0/t2/s1/m4/grad"
+    assert ks.weight_upload(1, 0, 3) == "weights/ep1/s0/m3"
+    assert ks.anchor(1, 0) == "weights/ep1/s0/merged"
+    assert ks.activations_prefix(5) == "activations/ep5"
+
+
+def test_key_schema_version_gate():
+    assert KeySchema(version=1).version == 1
+    with pytest.raises(ValueError):
+        KeySchema(version=99)
+
+
+@pytest.mark.parametrize("msg", ALL_MESSAGES, ids=lambda m: type(m).__name__
+                         + ("/tokens" if getattr(m, "is_tokens", False)
+                            else ""))
+def test_key_parse_inverts_mint(msg):
+    ks = KeySchema()
+    assert message_for_key(msg.key(ks), ks) == msg
+
+
+def test_parse_rejects_foreign_keys():
+    with pytest.raises(ValueError):
+        KeySchema().parse("checkpoints/step100")
+
+
+def test_weight_upload_roundtrip_ignores_codec():
+    # codec is advisory and not in the key: the audit inverse must hold
+    # for any share_codec the config picked
+    ks = KeySchema()
+    msg = WeightUploadMsg(4, stage=0, miner_uid=5, codec="bf16")
+    assert message_for_key(msg.key(ks), ks) == msg
+
+
+@pytest.mark.parametrize("transport_cls", [
+    InProcessTransport,
+    lambda: SimulatedNetworkTransport(NetworkModel.consumer()),
+], ids=["in_process", "simulated_network"])
+def test_message_roundtrip_through_transport(transport_cls):
+    tp = transport_cls()
+    rng = np.random.RandomState(0)
+    for i, msg in enumerate(ALL_MESSAGES):
+        payload = rng.randn(8 + i).astype(np.float32)
+        digest = tp.publish(msg, payload, actor=f"actor{i}")
+        assert isinstance(digest, str) and digest
+        got = tp.fetch(msg, actor=f"actor{i}")
+        np.testing.assert_array_equal(got, payload)
+    # raw-key plane sees the same objects
+    ks = tp.schema
+    np.testing.assert_array_equal(
+        tp.get(ALL_MESSAGES[0].key(ks)), tp.fetch(ALL_MESSAGES[0]))
+
+
+# ---------------------------------------------------------------------------
+# StoreKeyError (descriptive missing-key diagnostics)
+# ---------------------------------------------------------------------------
+
+def test_store_missing_key_is_descriptive():
+    store = StateStore()
+    store.put("activations/ep0/t0/tokens", np.zeros(4), actor="orchestrator")
+    with pytest.raises(StoreKeyError) as ei:
+        store.get("activations/ep0/t1/s0/m2", actor="miner2")
+    err = ei.value
+    assert isinstance(err, KeyError)            # drop-in for bare KeyError
+    assert err.key == "activations/ep0/t1/s0/m2"
+    assert err.actor == "miner2"
+    assert err.nearest_prefix == "activations/ep0"
+    msg = str(err)
+    assert "miner2" in msg and "activations/ep0" in msg
+
+
+def test_store_key_error_surfaces_through_transports():
+    for tp in (InProcessTransport(), SimulatedNetworkTransport()):
+        with pytest.raises(StoreKeyError):
+            tp.get("weights/ep9/s0/merged", actor="miner0")
+        with pytest.raises(StoreKeyError):
+            tp.fetch(AnchorMsg(9, 0), actor="miner0")
+
+
+# ---------------------------------------------------------------------------
+# trajectory equivalence + byte accounting (full golden config)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def golden_runs():
+    in_proc = Orchestrator(_mcfg(), SwarmConfig(seed=0))
+    in_stats = in_proc.run(3)
+    net_tp = SimulatedNetworkTransport(NetworkModel.consumer())
+    net = Swarm.create(_mcfg(), SwarmConfig(seed=0), transport=net_tp)
+    net_stats = net.run(3)
+    return in_proc, in_stats, net_tp, net_stats
+
+
+def test_in_process_matches_seed_trajectory_bit_exactly(golden_runs):
+    _, stats, _, _ = golden_runs
+    assert [s.mean_loss for s in stats] == SEED_MEAN_LOSS
+    assert [s.b_eff for s in stats] == SEED_B_EFF
+    assert [s.merged_stages for s in stats] == SEED_MERGED
+
+
+def test_network_transport_same_trajectory(golden_runs):
+    _, in_stats, _, net_stats = golden_runs
+    assert [s.mean_loss for s in net_stats] == [s.mean_loss for s in in_stats]
+    assert [s.b_eff for s in net_stats] == [s.b_eff for s in in_stats]
+
+
+def test_network_clock_advances(golden_runs):
+    _, _, tp, _ = golden_runs
+    assert tp.elapsed_seconds() > 0.0
+    assert all(s["busy_seconds"] > 0 for s in tp.link_report().values())
+
+
+def test_network_bytes_match_store_accounting(golden_runs):
+    _, _, tp, _ = golden_runs
+    rep = tp.link_report()
+    store_rep = tp.store.traffic_report()
+    assert sum(s["up_bytes"] for s in rep.values()) == \
+        sum(store_rep["uploaded"].values())
+    assert sum(s["down_bytes"] for s in rep.values()) == \
+        sum(store_rep["downloaded"].values())
+    # per-actor totals agree too (link accounting == store actor accounting)
+    for actor, s in rep.items():
+        assert s["up_bytes"] == store_rep["by_actor_up"].get(actor, 0)
+        assert s["down_bytes"] == store_rep["by_actor_down"].get(actor, 0)
+
+
+def test_scores_published_to_store(golden_runs):
+    in_proc, in_stats, _, _ = golden_runs
+    score_keys = in_proc.store.keys("scores/")
+    assert len(score_keys) == sum(len(s.validation) for s in in_stats)
+    for k in score_keys:
+        msg = message_for_key(k, in_proc.transport.schema)
+        assert isinstance(msg, ScoreMsg)
+
+
+# ---------------------------------------------------------------------------
+# transports: timing model
+# ---------------------------------------------------------------------------
+
+def test_link_spec_transfer_time():
+    link = LinkSpec(latency_s=0.01, bandwidth_mbps=8.0)   # 1 MB/s
+    assert link.transfer_seconds(1_000_000) == pytest.approx(1.01)
+
+
+def test_parallel_block_takes_max_not_sum():
+    tp = SimulatedNetworkTransport(
+        NetworkModel(default=LinkSpec(latency_s=1.0, bandwidth_mbps=1e9)))
+    with tp.parallel():
+        for i in range(5):
+            tp.put(f"weights/ep0/s0/m{i}", np.zeros(4), actor=f"miner{i}")
+    assert tp.elapsed_seconds() == pytest.approx(1.0)     # overlapped
+    tp.put("weights/ep0/s0/merged", np.zeros(4), actor="orchestrator")
+    assert tp.elapsed_seconds() == pytest.approx(2.0)     # sequential
+
+
+def test_parallel_block_serializes_same_link():
+    # overlap is across links only: one actor's transfers still queue
+    tp = SimulatedNetworkTransport(
+        NetworkModel(default=LinkSpec(latency_s=1.0, bandwidth_mbps=1e9)))
+    with tp.parallel():
+        tp.put("weights/ep0/s0/m0", np.zeros(4), actor="miner0")
+        tp.put("weights/ep0/s1/m0", np.zeros(4), actor="miner0")
+        tp.put("weights/ep0/s0/m1", np.zeros(4), actor="miner1")
+    assert tp.elapsed_seconds() == pytest.approx(2.0)     # miner0's sum
+
+
+def test_in_process_transport_is_free():
+    tp = InProcessTransport()
+    tp.put("weights/ep0/s0/m0", np.zeros(1024), actor="miner0")
+    tp.get("weights/ep0/s0/m0", actor="miner1")
+    assert tp.elapsed_seconds() == 0.0
+    assert tp.link_report() == {}
+
+
+# ---------------------------------------------------------------------------
+# facade + driver
+# ---------------------------------------------------------------------------
+
+def test_swarm_facade_run(golden_runs):
+    in_proc, _, _, _ = golden_runs
+    # the facade exposes the seed-era surface the tests/examples rely on
+    assert in_proc.swarm.b_min == in_proc.config.b_min
+    assert in_proc.store is in_proc.transport.store
+    assert len(in_proc.history) == 3
+
+
+def test_custom_phase_timeline():
+    from repro.api import TrainingPhase, SharingPhase, SyncPhase
+
+    class CountingPhase:
+        name = "counting"
+
+        def __init__(self):
+            self.calls = 0
+
+        def run(self, swarm, state):
+            self.calls += 1
+
+    probe = CountingPhase()
+    sw = Swarm.create(
+        _mcfg(), SwarmConfig(n_stages=3, miners_per_stage=2, inner_steps=2,
+                             b_min=1, batch_size=2, seq_len=16, validators=0,
+                             seed=0),
+        phases=[TrainingPhase(), probe, SharingPhase(), SyncPhase()])
+    stats = sw.run(2)
+    assert probe.calls == 2
+    assert len(stats) == 2 and np.isfinite(stats[-1].mean_loss)
+
+
+def test_timeline_without_sharing_still_reports_batches():
+    from repro.api import TrainingPhase
+
+    sw = Swarm.create(
+        _mcfg(), SwarmConfig(n_stages=3, miners_per_stage=1, inner_steps=3,
+                             b_min=2, batch_size=2, seq_len=16, validators=0,
+                             seed=0),
+        phases=[TrainingPhase()])
+    stats = sw.run(1)[0]
+    assert sum(stats.batches.values()) > 0
+    assert stats.b_eff == sum(b for b in stats.batches.values() if b >= 2)
