@@ -49,9 +49,52 @@ def oracle_throughput() -> None:
     emit("attention_1x1024_gqa", us, f"seq=1024;gqa=4:1")
 
 
+def boundary_codec_table() -> None:
+    """Pipeline-boundary hot path (core/pipeline): the fused Pallas
+    encode/decode and the int8 wire codec vs their jnp oracles.  On CPU the
+    Pallas numbers are the *interpret-mode emulation* (correctness path);
+    the fusion win — one HBM read of x, one write of the 64x-smaller code —
+    is a TPU claim measured by the §Roofline dry-run."""
+    import jax
+
+    from repro.kernels import bottleneck_fused as bf
+    from repro.kernels import quant_stream as qs
+    from repro.kernels import ref
+
+    rng = np.random.RandomState(1)
+    B, S, D, DB = 8, 128, 2048, 32
+    x = jnp.asarray(rng.randn(B, S, D), jnp.bfloat16)
+    gamma = jnp.ones(D, jnp.float32)
+    wd = jnp.asarray(rng.randn(D, DB) * 0.02, jnp.float32)
+    wu = jnp.asarray(rng.randn(DB, D) * 0.1, jnp.float32)
+    alpha = jnp.asarray(0.5, jnp.float32)
+    z = jnp.asarray(rng.randn(B, S, DB), jnp.float32)
+
+    enc_ref = jax.jit(lambda x: ref.bottleneck_encode(x, gamma, wd))
+    enc_pal = jax.jit(lambda x: bf.bottleneck_encode(x, gamma, wd,
+                                                     interpret=True))
+    emit("boundary/encode_ref_jnp", time_call(enc_ref, x), f"{B}x{S}x{D}")
+    emit("boundary/encode_pallas_interpret", time_call(enc_pal, x),
+         f"{B}x{S}x{D}->db{DB}")
+
+    dec_ref = jax.jit(lambda z: ref.bottleneck_decode_gated(z, wu, alpha))
+    dec_pal = jax.jit(lambda z: bf.bottleneck_decode_gated(z, wu, alpha,
+                                                           interpret=True))
+    emit("boundary/decode_ref_jnp", time_call(dec_ref, z), f"db{DB}->{D}")
+    emit("boundary/decode_pallas_interpret", time_call(dec_pal, z),
+         f"db{DB}->{D}")
+
+    rt = jax.jit(lambda z: qs.int8_wire_roundtrip(z, interpret=True))
+    us = time_call(rt, z)
+    nb = qs.wire_nbytes(z.shape)
+    emit("boundary/int8_wire_roundtrip", us,
+         f"bytes={nb};vs_bf16={z.size * 2 / nb:.2f}x")
+
+
 def run() -> None:
     vmem_working_sets()
     oracle_throughput()
+    boundary_codec_table()
 
 
 if __name__ == "__main__":

@@ -91,10 +91,38 @@ def _transport_section() -> None:
     assert len(set(final_loss.values())) == 1, final_loss
 
 
+def _overlap_section() -> None:
+    """ROADMAP async-phases item: overlap Training-phase activation
+    streaming with Sharing-phase uploads (phases.OverlappedTrainingSharing)
+    and report the simulated seconds saved per epoch.  Same RNG order as
+    the default timeline for fault-free swarms, so the loss trajectory is
+    asserted identical — only the clock model sees the overlap."""
+    from repro.api.phases import overlapped_phases
+
+    sw = SwarmConfig(n_stages=3, miners_per_stage=2, inner_steps=8, b_min=2,
+                     batch_size=2, seq_len=32, validators=1, seed=4)
+    epochs = 2
+    results = {}
+    for name, phases in (("sequential", None), ("overlapped",
+                                                overlapped_phases())):
+        transport = SimulatedNetworkTransport(NetworkModel.consumer())
+        swarm = Swarm.create(_mcfg(), sw, transport=transport, phases=phases)
+        stats = swarm.run(epochs)
+        results[name] = (transport.elapsed_seconds(), stats[-1].mean_loss)
+    assert results["sequential"][1] == results["overlapped"][1], results
+    saved = results["sequential"][0] - results["overlapped"][0]
+    emit("swarm_overlap/training+sharing", 0.0,
+         f"seq={results['sequential'][0]:.2f}s;"
+         f"overlap={results['overlapped'][0]:.2f}s;"
+         f"saved_per_epoch={saved / epochs:.2f}s;"
+         f"loss_equal={results['sequential'][1]:.4f}")
+
+
 def run() -> None:
     _beff_section()
     _traffic_section()
     _transport_section()
+    _overlap_section()
 
 
 if __name__ == "__main__":

@@ -1,6 +1,8 @@
 """Benchmark harness entry point: one module per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit).
+Modules may additionally write machine-readable artifacts (tracked across
+PRs): ``bench_pipeline`` writes ``BENCH_pipeline.json`` at the repo root.
 
   fig5   bench_convergence        — bottleneck compression vs baseline
   fig7   bench_butterfly          — agreement matrix, resilience, §5.3 bytes
@@ -9,10 +11,17 @@ Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit).
   §2     bench_codecs             — compressed-sharing codec table
   §2.1   bench_swarm              — B_eff / straggler / store traffic
   kernels bench_kernels           — VMEM working sets + oracle throughput
+  §4     bench_pipeline           — schedules x wire codecs -> BENCH_pipeline.json
   §Roofline bench_roofline        — dry-run roofline table
+
+Usage:
+  python -m benchmarks.run [module-substring]
+  python -m benchmarks.run --quick    # pipeline bench only, reduced budget,
+                                      # then validate the JSON artifact schema
 """
 from __future__ import annotations
 
+import os
 import sys
 import time
 import traceback
@@ -25,14 +34,30 @@ MODULES = [
     "benchmarks.bench_codecs",
     "benchmarks.bench_swarm",
     "benchmarks.bench_kernels",
+    "benchmarks.bench_pipeline",
     "benchmarks.bench_roofline",
 ]
 
 
 def main() -> None:
-    only = sys.argv[1] if len(sys.argv) > 1 else None
+    args = sys.argv[1:]
+    quick = "--quick" in args
+    args = [a for a in args if a != "--quick"]
+    only = args[0] if args else None
+    modules = MODULES
+    if quick:
+        # the fast CI gate: exercise the pipeline grid at a reduced budget
+        # and hard-validate the artifact schema.  A module filter would
+        # skip the bench and then validate a stale/missing artifact, so
+        # it is ignored here.
+        if only:
+            print(f"# --quick runs only the pipeline gate; "
+                  f"ignoring filter {only!r}", flush=True)
+            only = None
+        os.environ["BENCH_QUICK"] = "1"
+        modules = ["benchmarks.bench_pipeline"]
     failures = 0
-    for mod_name in MODULES:
+    for mod_name in modules:
         if only and only not in mod_name:
             continue
         t0 = time.time()
@@ -44,6 +69,11 @@ def main() -> None:
             traceback.print_exc()
             failures += 1
         print(f"# {mod_name} done in {time.time()-t0:.1f}s", flush=True)
+    if quick and not failures:
+        from benchmarks.bench_pipeline import validate_artifact
+        art = validate_artifact()
+        print(f"# BENCH_pipeline.json schema OK "
+              f"({len(art['benchmarks'])} records)", flush=True)
     if failures:
         raise SystemExit(f"{failures} benchmark modules failed")
 

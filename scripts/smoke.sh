@@ -1,22 +1,26 @@
 #!/usr/bin/env bash
-# Pre-commit smoke check: fast test subset + the quickstart example.
+# Pre-commit smoke check: fast test subset + the quickstart example +
+# a 1F1B pipeline-engine quickstart + the benchmark-artifact schema gate.
 #
 #   scripts/smoke.sh            # from the repo root
 #
 # Runs everything except tests marked `slow` (marker registered in
 # pyproject.toml, which also sets pythonpath=src — no PYTHONPATH needed),
-# then drives examples/quickstart.py end to end at a reduced step count.
+# then drives examples/quickstart.py end to end at a reduced step count,
+# a short 1F1B+int8 pipelined training run (launch/train.py --strategy
+# pipeline), and `benchmarks/run.py --quick` (reduced pipeline bench that
+# hard-validates the BENCH_pipeline.json schema).
 # This is the documented check to run before every commit; the full suite
 # is `python -m pytest -q`.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 # Excluded from the smoke gate (run them via the full suite when relevant):
-#   test_kernels.py / test_multidevice.py — need accelerator hardware; red
-#     on CPU-only containers since the seed
+#   test_kernels.py      — interpret-mode Pallas sweeps, ~70s (green on CPU)
+#   test_multidevice.py  — slow-marked subprocess suite (green on CPU)
 #   test_system.py::test_claim_c3_...     — known-red since the seed
 #     (baseline fails its own learning threshold at 60 steps)
-echo "== smoke: fast test subset (excluding -m slow + hardware suites) =="
+echo "== smoke: fast test subset (excluding -m slow + kernel sweeps) =="
 python -m pytest -q -m "not slow" \
     --ignore=tests/test_kernels.py \
     --ignore=tests/test_multidevice.py \
@@ -26,6 +30,19 @@ python -m pytest -q -m "not slow" \
 echo
 echo "== smoke: quickstart example (reduced steps) =="
 QUICKSTART_STEPS="${QUICKSTART_STEPS:-60}" python examples/quickstart.py
+
+echo
+echo "== smoke: 1F1B pipeline quickstart (2 stages, int8 wire) =="
+XLA_FLAGS=--xla_force_host_platform_device_count=2 \
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+python -m repro.launch.train --arch llama3.2-1b --smoke \
+    --strategy pipeline --pipeline-schedule 1f1b --wire-codec int8 \
+    --pipeline-microbatches 4 --steps 6 --batch-size 4 --seq-len 16 \
+    --log-every 3
+
+echo
+echo "== smoke: pipeline benchmark artifact schema (--quick) =="
+python -m benchmarks.run --quick
 
 echo
 echo "smoke OK"

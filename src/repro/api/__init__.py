@@ -19,12 +19,14 @@ from repro.api.messages import (  # noqa: F401
 from repro.api.phases import (  # noqa: F401
     EpochDriver,
     EpochState,
+    OverlappedTrainingSharing,
     Phase,
     SharingPhase,
     SyncPhase,
     TrainingPhase,
     ValidationPhase,
     default_phases,
+    overlapped_phases,
 )
 from repro.api.swarm import Swarm  # noqa: F401
 from repro.api.transport import (  # noqa: F401

@@ -26,6 +26,15 @@ class SwarmConfig:
     compress: bool = True
     bottleneck_dim: int = 16
     share_codec: str = "int8"         # compressed-sharing stage codec
+    # backward-wire codec for TrainingPhase gradient hand-offs: "none" keeps
+    # the seed trajectory bit-exact; "int8" ships blockwise-int8 gradient
+    # codes through the store (paper's symmetric compression — a *different*
+    # scenario, the dequantized codes are what miners train on)
+    wire_codec: str = "none"
+    # on-mesh pipeline-engine knobs, surfaced so scenarios/benches mint
+    # their PipelineSpec from the swarm config (see pipeline_spec())
+    pipeline_schedule: str = "gpipe"  # "gpipe" | "1f1b"
+    pipeline_microbatches: int = 8
     outer_lr: float = 0.7
     outer_momentum: float = 0.9
     gamma_hours: float = 10.0         # score decay
@@ -33,6 +42,27 @@ class SwarmConfig:
     validators: int = 1
     validate_max_items: Optional[int] = None
     seed: int = 0
+
+    def __post_init__(self):
+        # a typo'd codec would silently fall through to the uncompressed
+        # gradient wire (TrainingPhase gates on the exact string) — fail loud
+        assert self.wire_codec in ("none", "int8"), self.wire_codec
+        assert self.pipeline_schedule in ("gpipe", "1f1b"), \
+            self.pipeline_schedule
+
+    def pipeline_spec(self):
+        """Mint the on-mesh ``PipelineSpec`` these knobs describe (schedule,
+        wire codec, bottleneck) — the bridge between the swarm-level config
+        and ``repro.core.pipeline``'s shard_map engine."""
+        from repro.core.pipeline import PipelineSpec
+        return PipelineSpec(
+            n_stages=self.n_stages,
+            n_microbatches=self.pipeline_microbatches,
+            compress=self.compress,
+            bottleneck_dim=self.bottleneck_dim,
+            schedule=self.pipeline_schedule,
+            wire_codec=self.wire_codec,
+        )
 
 
 @dataclasses.dataclass

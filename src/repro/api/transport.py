@@ -83,7 +83,8 @@ class InProcessTransport:
     def put(self, key: str, value: Any, actor: str = "?",
             codec: Optional[str] = None,
             meta: Optional[dict] = None) -> str:
-        return self.store.put(key, value, actor=actor, codec=codec, meta=meta)
+        return self.store.put(key, value, actor=actor, codec=codec,
+                              meta=meta).digest
 
     def get(self, key: str, actor: str = "?") -> Any:
         return self.store.get(key, actor=actor)
@@ -210,16 +211,18 @@ class SimulatedNetworkTransport(InProcessTransport):
         return {actor: dataclasses.asdict(s)
                 for actor, s in sorted(self.links.items())}
 
-    # -- raw plane (timed) -----------------------------------------------
+    # -- raw plane (timed; one store lookup per op — StateStore.put/
+    # fetch_entry return the entry, so the hot loop never re-reads) --------
 
     def put(self, key: str, value: Any, actor: str = "?",
             codec: Optional[str] = None,
             meta: Optional[dict] = None) -> str:
-        digest = super().put(key, value, actor=actor, codec=codec, meta=meta)
-        self._charge(actor, self.store.get_entry(key).nbytes, up=True)
-        return digest
+        entry = self.store.put(key, value, actor=actor, codec=codec,
+                               meta=meta)
+        self._charge(actor, entry.nbytes, up=True)
+        return entry.digest
 
     def get(self, key: str, actor: str = "?") -> Any:
-        payload = super().get(key, actor=actor)
-        self._charge(actor, self.store.get_entry(key).nbytes, up=False)
-        return payload
+        entry = self.store.fetch_entry(key, actor=actor)
+        self._charge(actor, entry.nbytes, up=False)
+        return entry.payload

@@ -34,7 +34,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.common import cdiv
+from repro.common import cdiv, shard_map_unchecked
 from repro.kernels import ops
 
 try:
@@ -248,8 +248,7 @@ def butterfly_all_reduce_mesh(x: jax.Array, axis: str, mesh,
         merged = merged[:size].reshape(v.shape)
         return merged, agree
 
-    return shard_map(
-        body, mesh=mesh, in_specs=(in_spec,),
-        out_specs=(in_spec, jax.sharding.PartitionSpec()),
-        check_vma=False,
+    return shard_map_unchecked(
+        body, mesh, (in_spec,),
+        (in_spec, jax.sharding.PartitionSpec()),
     )(x)

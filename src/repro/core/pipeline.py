@@ -1,10 +1,12 @@
-"""Pipeline-parallel engine (paper C1 + C3 on-mesh): GPipe-style schedule in
+"""Pipeline-parallel engine (paper C1 + C3 on-mesh): GPipe and 1F1B
 
-``shard_map`` with the ``model`` mesh axis as the stage axis, streaming
-microbatch activations stage-to-stage via ``ppermute`` — and, when
+schedules in ``shard_map`` with the ``model`` mesh axis as the stage axis,
+streaming microbatch activations stage-to-stage via ``ppermute`` — and, when
 ``compress=True``, streaming the paper's *bottleneck codes* (width d_b)
 instead of full-width activations, cutting inter-stage bytes by
-d_model/d_b (64x for the paper's 2048->32).
+d_model/d_b (64x for the paper's 2048->32).  ``wire_codec="int8"`` quantizes
+the codes on the wire (per-block symmetric int8, one fp32 scale per block),
+doubling 64x to the paper's headline 128x.
 
 Faithfulness map:
   miners on one layer-slice   -> devices in one model-axis row
@@ -14,26 +16,54 @@ Faithfulness map:
                                  the previous boundary)
   DP across pipeline replicas -> ``data`` (x ``pod``) axes
 
-The schedule is plain GPipe: T = n_micro + n_stages - 1 ticks; autodiff
-through the tick scan gives the backward pipeline automatically (transpose
-of ppermute = reverse-direction ppermute), so gradients of the wire codes
-are compressed exactly like activations — the paper's symmetrical 128x.
+Schedules (``PipelineSpec.schedule``):
+  * ``"gpipe"``  — the golden reference: T = n_micro + n_stages - 1 ticks;
+    autodiff through the tick scan gives the backward pipeline automatically
+    (transpose of ppermute = reverse-direction ppermute), so gradients of
+    the wire codes are compressed exactly like activations — the paper's
+    symmetrical 128x.  The checkpointed tick body stashes one wire code per
+    tick: stash ~ (n_micro + n_stages - 1) codes.
+  * ``"1f1b"``   — one-forward-one-backward: an explicit-backward slot loop
+    (``jax.vjp`` per stage inside the scan, ``jax.custom_vjp`` over the
+    whole step so ``jax.grad`` still works) that caps in-flight microbatches
+    at ``n_stages - stage``, shrinking the activation stash to a
+    min(n_stages, n_micro)-slot ring of wire codes.  Slot timetable
+    (equal F/B cost, slot granularity; stage s of P, micro m of M):
+        f(s, m) = s + m              for m <  P - s   (warmup)
+        f(s, m) = 2m + s             for m >= P - s   (steady: F paired
+                                                       with B(s, m-(P-s)))
+        b(s, m) = 2P - 1 - s + 2m
+    Forward sends are consumed exactly one slot later (f(s+1,m) = f(s,m)+1),
+    likewise backward sends, so each slot is one ppermute in each direction.
+    F and B slots never collide on a stage (disjoint parity), matching the
+    real schedule's one-unit-of-work-per-slot; in the lockstep SPMD body
+    both paths are computed and mask-selected, which is the usual price of
+    expressing an asymmetric schedule as one SPMD program.
 
-Used by ``--strategy pipeline`` for dense-family archs and by the §Perf
-paper-representative hillclimb cell.
+Boundary codecs: the stage-exit encode (RMSNorm -> W_down -> wire cast) and
+stage-entry decode (alpha * (z @ W_up)) run as fused Pallas kernels
+(``kernels/bottleneck_fused.py``): one HBM read of the full-width x, one
+write of the 64x-smaller code.  Dispatch follows the ``kernels/ops.py``
+policy — compiled Pallas on TPU, the identical-math ref.py oracle on other
+backends, the kernel bodies under interpret=True when
+``REPRO_FORCE_PALLAS_INTERPRET=1`` (how the CPU equivalence suite pins
+kernel == oracle).
+
+Used by ``--strategy pipeline`` in launch/train.py + launch/dryrun.py and by
+benchmarks/bench_pipeline.py (BENCH_pipeline.json).
 """
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Any, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
-from repro.configs.base import ArchConfig, ModelConfig
+from repro.configs.base import ModelConfig
+from repro.kernels import ops, quant_stream as qs
 from repro.models import blocks as blk
 from repro.models.layers import (
     dense_init,
@@ -45,10 +75,11 @@ from repro.models.layers import (
 from repro.models.layers import embed as embed_fn
 from repro.models.layers import logits as logits_fn
 
-try:
-    shard_map = jax.shard_map
-except AttributeError:  # pragma: no cover
-    from jax.experimental.shard_map import shard_map  # type: ignore
+from repro.common import shard_map_unchecked as _shard_map
+
+
+SCHEDULES = ("gpipe", "1f1b")
+WIRE_CODECS = ("none", "int8")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -58,9 +89,24 @@ class PipelineSpec:
     compress: bool = True            # stream bottleneck codes, not residuals
     bottleneck_dim: int = 32
     wire_dtype: Any = jnp.bfloat16
+    schedule: str = "gpipe"          # "gpipe" (golden) | "1f1b"
+    wire_codec: str = "none"         # "none" | "int8" (quantized codes)
+    fuse_boundary: bool = True       # fused Pallas boundary encode/decode
+
+    def __post_init__(self):
+        assert self.schedule in SCHEDULES, self.schedule
+        assert self.wire_codec in WIRE_CODECS, self.wire_codec
+        assert self.wire_codec == "none" or self.compress, \
+            "int8 wire codec quantizes bottleneck codes; needs compress=True"
 
     def wire_width(self, cfg: ModelConfig) -> int:
         return self.bottleneck_dim if self.compress else cfg.d_model
+
+    def carry_dtype(self):
+        """On-device dtype of the wire carry.  int8 codes dequantize to
+        exact f32 products (q * scale), so the carry holds f32; the on-wire
+        bytes are what ``wire_bytes_per_hop`` accounts."""
+        return jnp.float32 if self.wire_codec == "int8" else self.wire_dtype
 
 
 # ---------------------------------------------------------------------------
@@ -111,7 +157,57 @@ def init_pipeline_params(key, cfg: ModelConfig, spec: PipelineSpec) -> dict:
 
 
 # ---------------------------------------------------------------------------
-# The pipelined forward
+# Boundary codecs (fused Pallas hot path, jnp fallback kept as oracle path)
+# ---------------------------------------------------------------------------
+
+
+def _encode_boundary(x, stages, cfg: ModelConfig, spec: PipelineSpec,
+                     codec: bool = True):
+    """Stage exit: RMSNorm -> W_down -> wire cast, one fused kernel (one HBM
+    read of full-width x, one write of the d_model/d_b-smaller code); then
+    the optional differentiable int8 wire roundtrip.  Kernel dispatch
+    follows the ops.py policy: compiled Pallas on TPU, the identical-math
+    oracle elsewhere (REPRO_FORCE_PALLAS_INTERPRET=1 forces the kernel
+    bodies under interpret, as the equivalence suite does)."""
+    if not spec.compress:
+        z = x.astype(spec.wire_dtype)
+    elif spec.fuse_boundary:
+        z = ops.bottleneck_encode(x, stages["enc_norm"], stages["w_down"],
+                                  eps=cfg.norm_eps,
+                                  wire_dtype=spec.carry_dtype())
+    else:
+        xn = rmsnorm(x, stages["enc_norm"], cfg.norm_eps)
+        z = (xn.astype(jnp.float32) @ stages["w_down"].astype(jnp.float32)
+             ).astype(spec.carry_dtype())
+    if codec and spec.wire_codec == "int8":
+        z = ops.int8_wire_roundtrip(z)
+    return z
+
+
+def _decode_boundary(z, stages, spec: PipelineSpec, compute_dtype):
+    """Stage entry: alpha * (z @ W_up) — fused gated decode (one full-width
+    write instead of matmul write + scale pass)."""
+    if not spec.compress:
+        return z.astype(compute_dtype)
+    if spec.fuse_boundary:
+        return ops.bottleneck_decode_gated(z, stages["w_up_prev"],
+                                           stages["alpha_dec"],
+                                           out_dtype=compute_dtype)
+    r = (z.astype(jnp.float32) @ stages["w_up_prev"].astype(jnp.float32)
+         ).astype(compute_dtype)
+    return stages["alpha_dec"].astype(compute_dtype) * r
+
+
+def _traced_zero(x) -> jax.Array:
+    """A scalar f32 zero derived from a traced array.  Rank-0 *constants*
+    inside a shard_map body break its transpose on jax<=0.4.x (the const is
+    promoted to a body output whose P() spec fails _check_names), so scan
+    carries must originate from traced values."""
+    return x.ravel()[0].astype(jnp.float32) * 0.0
+
+
+# ---------------------------------------------------------------------------
+# The pipelined forward (GPipe)
 # ---------------------------------------------------------------------------
 
 
@@ -151,7 +247,7 @@ def pipeline_apply(params, x_micro, cfg: ModelConfig, spec: PipelineSpec,
         pos = jnp.broadcast_to(positions, (B_loc, S))
         compute_dtype = x_all.dtype
 
-        z0 = jnp.zeros((B_loc, S, d_wire), spec.wire_dtype)
+        z0 = jnp.zeros((B_loc, S, d_wire), spec.carry_dtype())
         out0 = jnp.zeros_like(x_all)
 
         def tick(carry, t):
@@ -159,22 +255,12 @@ def pipeline_apply(params, x_micro, cfg: ModelConfig, spec: PipelineSpec,
             # ---- stage entry: ingest (stage 0) or decode the wire code ----
             x_in = jax.lax.dynamic_index_in_dim(
                 x_all, jnp.clip(t, 0, n_micro - 1), 0, keepdims=False)
-            if spec.compress:
-                r = (z.astype(jnp.float32) @ stages["w_up_prev"].astype(jnp.float32)
-                     ).astype(compute_dtype)
-                r = stages["alpha_dec"].astype(compute_dtype) * r
-            else:
-                r = z.astype(compute_dtype)
+            r = _decode_boundary(z, stages, spec, compute_dtype)
             x = jnp.where(stage == 0, x_in, r)
             # ---- stage compute ----
             x = _stage_forward(stages["blocks"], x, cfg, kind, pos, remat)
             # ---- stage exit: encode the wire code ----
-            if spec.compress:
-                xn = rmsnorm(x, stages["enc_norm"], cfg.norm_eps)
-                z_out = (xn.astype(jnp.float32) @ stages["w_down"].astype(jnp.float32)
-                         ).astype(spec.wire_dtype)
-            else:
-                z_out = x.astype(spec.wire_dtype)
+            z_out = _encode_boundary(x, stages, cfg, spec)
             # ---- collect finished microbatches on the last stage ----
             out_idx = jnp.clip(t - (n_stages - 1), 0, n_micro - 1)
             is_out = ((stage == n_stages - 1) & (t >= n_stages - 1)
@@ -198,11 +284,10 @@ def pipeline_apply(params, x_micro, cfg: ModelConfig, spec: PipelineSpec,
         return outputs
 
     stage_specs = jax.tree.map(lambda _: P("model"), params["stages"])
-    return shard_map(
-        body, mesh=mesh,
-        in_specs=(P(None, batch_axes, None, None), stage_specs),
-        out_specs=P(None, batch_axes, None, None),
-        check_vma=False,
+    return _shard_map(
+        body, mesh,
+        (P(None, batch_axes, None, None), stage_specs),
+        P(None, batch_axes, None, None),
     )(x_micro, params["stages"])
 
 
@@ -242,10 +327,60 @@ def pipeline_loss(params, batch, cfg: ModelConfig, spec: PipelineSpec, mesh,
 
 
 def wire_bytes_per_hop(cfg: ModelConfig, spec: PipelineSpec,
-                       global_batch: int, seq: int) -> int:
-    """On-wire bytes for one full microbatch sweep across one boundary."""
+                       global_batch: int, seq: int,
+                       data_shards: int = 1) -> int:
+    """On-wire bytes for one full microbatch sweep across one boundary.
+
+    For the int8 codec this accounts the fp32 scales honestly: one per
+    quantization block of the per-device per-microbatch code tensor — the
+    block the runtime codec actually quantizes (``data_shards`` matters:
+    a sharded microbatch can fall back to per-row scales)."""
     width = spec.wire_width(cfg)
-    return global_batch * seq * width * jnp.dtype(spec.wire_dtype).itemsize
+    n = global_batch * seq * width
+    if spec.wire_codec == "int8":
+        micro_elems = (max(global_batch // spec.n_microbatches // data_shards,
+                           1) * seq * width)
+        block = qs.wire_block(micro_elems, width)
+        return n + (n // block) * 4
+    return n * jnp.dtype(spec.wire_dtype).itemsize
+
+
+def schedule_stats(cfg: ModelConfig, spec: PipelineSpec, global_batch: int,
+                   seq: int, data_shards: int = 1) -> dict:
+    """Static schedule accounting, derived from the real carry structures:
+
+    * ``bubble_fraction``   — idle fraction of the tick/slot loop
+    * ``stash_bytes``       — per-device activation stash: GPipe saves the
+      checkpointed tick carry's wire code once per tick (T codes); 1F1B
+      allocates a min(n_stages, n_micro)-slot ring of codes in the carry
+    * ``carry_code_bytes``  — one in-flight wire code (B_loc, S, d_wire)
+    * ``wire_bytes_per_hop``— on-wire bytes per boundary per sweep
+    """
+    Pn, M = spec.n_stages, spec.n_microbatches
+    width = spec.wire_width(cfg)
+    B_loc = max(global_batch // M // data_shards, 1)
+    code_bytes = (B_loc * seq * width
+                  * jnp.dtype(spec.carry_dtype()).itemsize)
+    ticks = M + Pn - 1
+    if spec.schedule == "1f1b":
+        loop_len = 2 * ticks
+        stash_codes = min(Pn, M)
+    else:
+        loop_len = ticks
+        stash_codes = ticks
+    return {
+        "schedule": spec.schedule,
+        "n_stages": Pn,
+        "n_microbatches": M,
+        "loop_length": loop_len,
+        "bubble_fraction": (Pn - 1) / ticks,
+        "carry_code_bytes": int(code_bytes),
+        "stash_codes": int(stash_codes),
+        "stash_bytes": int(stash_codes * code_bytes),
+        "wire_bytes_per_hop": int(
+            wire_bytes_per_hop(cfg, spec, global_batch, seq,
+                               data_shards=data_shards)),
+    }
 
 
 # ---------------------------------------------------------------------------
@@ -284,7 +419,7 @@ def pipeline_loss_fused(params, batch, cfg: ModelConfig, spec: PipelineSpec,
         pos = jnp.broadcast_to(positions, (B_loc, S))
         last = n_stages - 1
 
-        z0 = jnp.zeros((B_loc, S, d_wire), spec.wire_dtype)
+        z0 = jnp.zeros((B_loc, S, d_wire), spec.carry_dtype())
         out0 = jnp.zeros((n_micro, B_loc, S, cfg.d_model), compute_dtype)
 
         # §Perf cell C iteration 7 (winner of 6/7/8 — see EXPERIMENTS.md):
@@ -301,22 +436,10 @@ def pipeline_loss_fused(params, batch, cfg: ModelConfig, spec: PipelineSpec,
             # stage 0 ingests tokens (paper: first-layer miners tokenize);
             # the embedding gather is tiny next to a full-width activation
             x_in = jnp.take(embed_tbl, t_in, axis=0).astype(compute_dtype)
-            if spec.compress:
-                r = (z.astype(jnp.float32)
-                     @ stages["w_up_prev"].astype(jnp.float32)
-                     ).astype(compute_dtype)
-                r = stages["alpha_dec"].astype(compute_dtype) * r
-            else:
-                r = z.astype(compute_dtype)
+            r = _decode_boundary(z, stages, spec, compute_dtype)
             x = jnp.where(stage == 0, x_in, r)
             x = _stage_forward(stages["blocks"], x, cfg, kind, pos, True)
-            if spec.compress:
-                xn = rmsnorm(x, stages["enc_norm"], cfg.norm_eps)
-                z_out = (xn.astype(jnp.float32)
-                         @ stages["w_down"].astype(jnp.float32)
-                         ).astype(spec.wire_dtype)
-            else:
-                z_out = x.astype(spec.wire_dtype)
+            z_out = _encode_boundary(x, stages, cfg, spec)
             out_idx = jnp.clip(t - last, 0, n_micro - 1)
             is_out = (stage == last) & (t >= last) & (t - last < n_micro)
             cur = jax.lax.dynamic_index_in_dim(outputs, out_idx, 0,
@@ -350,7 +473,7 @@ def pipeline_loss_fused(params, batch, cfg: ModelConfig, spec: PipelineSpec,
             y_mb, lab_mb = xs
             return acc + head(y_mb, lab_mb), None
 
-        local_loss, _ = jax.lax.scan(loss_body, jnp.zeros((), jnp.float32),
+        local_loss, _ = jax.lax.scan(loss_body, _traced_zero(outputs),
                                      (outputs, labs))
         loss = jax.lax.psum(
             jnp.where(stage == last, local_loss, 0.0), "model") / n_micro
@@ -358,11 +481,230 @@ def pipeline_loss_fused(params, batch, cfg: ModelConfig, spec: PipelineSpec,
 
     stage_specs = jax.tree.map(lambda _: P("model"), params["stages"])
     unembed = params["embeds"].get("unembed", params["embeds"]["embed"])
-    return shard_map(
-        body, mesh=mesh,
-        in_specs=(P(None, batch_axes, None), P(None, batch_axes, None),
-                  P(None, None), P(None, None), P(None), stage_specs),
-        out_specs=P(),
-        check_vma=False,
+    return _shard_map(
+        body, mesh,
+        (P(None, batch_axes, None), P(None, batch_axes, None),
+         P(None, None), P(None, None), P(None), stage_specs),
+        P(),
     )(tokens_m, labels_m, params["embeds"]["embed"], unembed,
       params["final_norm"], params["stages"])
+
+
+# ---------------------------------------------------------------------------
+# 1F1B: explicit-backward slot loop (loss AND grads in one shard_map)
+# ---------------------------------------------------------------------------
+
+
+def pipeline_1f1b_grads(params, batch, cfg: ModelConfig, spec: PipelineSpec,
+                        mesh, batch_axes: tuple[str, ...] = ("data",),
+                        z_loss: float = 1e-4, compute_dtype=jnp.bfloat16):
+    """One shard_map computing ``(loss, grads)`` under the 1F1B timetable
+
+    (module docstring).  Per slot each stage re-runs its forward from the
+    stashed *wire code* under ``jax.vjp`` (decode -> blocks -> encode +
+    loss head), seeds the cotangent from the incoming backward wire code
+    (or 1.0 for the last stage's loss), and accumulates param grads; F and
+    B slots share the single vjp call (the primal serves forward slots).
+    The activation stash is a min(n_stages, n_micro)-slot ring of codes —
+    the 1F1B memory claim, vs GPipe's one code per tick.
+
+    Returns grads matching ``jax.grad(pipeline_loss_fused)``: per-stage
+    params stay per-stage, shared params (embeddings, final norm) are
+    psum'd over stages and pmean'd over the batch axes.
+    """
+    kind = blk.period_kinds(cfg)[0]
+    tokens, labels = batch["tokens"], batch["labels"]
+    B, S = tokens.shape
+    Pn, M = spec.n_stages, spec.n_microbatches
+    assert B % M == 0
+    d_wire = spec.wire_width(cfg)
+    Bm = B // M
+    tokens_m = tokens.reshape(M, Bm, S)
+    labels_m = labels.reshape(M, Bm, S)
+    positions = jnp.arange(S, dtype=jnp.int32)[None]
+    R = min(Pn, M)                       # stash ring slots (in-flight cap)
+    K = 2 * (M + Pn - 1)                 # total schedule slots
+
+    def body(toks, labs, embed_tbl, unembed_tbl, final_gamma, stages):
+        stages = jax.tree.map(lambda a: a[0], stages)
+        B_loc = toks.shape[1]
+        stage = jax.lax.axis_index("model")
+        pos = jnp.broadcast_to(positions, (B_loc, S))
+        last = Pn - 1
+        pad_mask = (jnp.arange(unembed_tbl.shape[0]) >= cfg.vocab_size
+                    ) * (-1e9)
+
+        def stage_fn(stage_p, z_in, emb, unemb, fgamma, toks_t, labs_t):
+            """This stage's forward from its received wire code (or tokens
+            on stage 0), through its blocks, to its exit code AND the loss
+            head — one function so one vjp yields every cotangent; the
+            where() gates route grads to the right owners (embed on stage
+            0, head params on the last stage) automatically."""
+            x_e = jnp.take(emb, toks_t, axis=0).astype(compute_dtype)
+            r = _decode_boundary(z_in, stage_p, spec, compute_dtype)
+            x = jnp.where(stage == 0, x_e, r)
+            x = _stage_forward(stage_p["blocks"], x, cfg, kind, pos, False)
+            z_out = _encode_boundary(x, stage_p, cfg, spec, codec=False)
+            h = rmsnorm(x, fgamma, cfg.norm_eps)
+            lgts = jnp.einsum("bsd,vd->bsv", h.astype(jnp.float32),
+                              unemb.astype(jnp.float32)) + pad_mask
+            loss_t = next_token_loss(lgts, labs_t, z_loss)
+            return z_out, loss_t
+
+        def fwd_sched(t, s):
+            """(valid, micro) the stage-s forward timetable assigns slot t:
+            f(s,m) = s + m while m < P - s (warmup), else 2m + s (steady,
+            throttled so in-flight microbatches stay capped at P - s)."""
+            w_cap = jnp.minimum(Pn - s, M)
+            warm_m = t - s
+            warm_ok = (warm_m >= 0) & (warm_m < w_cap)
+            steady_m = (t - s) // 2
+            steady_ok = (((t - s) % 2 == 0) & (steady_m >= Pn - s)
+                         & (steady_m < M))
+            m = jnp.clip(jnp.where(warm_ok, warm_m, steady_m), 0, M - 1)
+            return warm_ok | steady_ok, m
+
+        def slot(carry, t):
+            z_wire, g_wire, stash, grads, loss_acc = carry
+            # ---- arrival: a code sent by stage-1 last slot enters the ring
+            # (at the warmup->steady seam a code arrives up to P - s slots
+            # before its forward slot, so it must be stashed on arrival —
+            # the single-slot z_wire register would lose it)
+            a_ok, ma = fwd_sched(t - 1, stage - 1)
+            a_ok = a_ok & (stage > 0)
+            a_idx = ma % R
+            cur = jax.lax.dynamic_index_in_dim(stash, a_idx, 0,
+                                               keepdims=False)
+            stash = jax.lax.dynamic_update_index_in_dim(
+                stash, jnp.where(a_ok, z_wire, cur), a_idx, 0)
+            # ---- timetable: which (if any) micro this stage works on ----
+            f_ok, mf = fwd_sched(t, stage)
+            bn = t - (2 * Pn - 1 - stage)
+            mb = jnp.clip(bn // 2, 0, M - 1)
+            b_ok = (bn >= 0) & (bn % 2 == 0) & (bn // 2 < M)
+            # F and B slots are disjoint by parity, so one stage_fn vjp per
+            # slot serves both: primal -> forward slot, pullback -> backward.
+            # Both read the stash ring: the forward its just-arrived code,
+            # the backward the code stashed at its forward slot (entries
+            # live from arrival to b(s,m); ring reuse starts strictly later)
+            m_idx = jnp.where(f_ok, mf, mb)
+            z_src = jax.lax.dynamic_index_in_dim(stash, m_idx % R, 0,
+                                                 keepdims=False)
+            toks_t = jax.lax.dynamic_index_in_dim(toks, m_idx, 0,
+                                                  keepdims=False)
+            labs_t = jax.lax.dynamic_index_in_dim(labs, m_idx, 0,
+                                                  keepdims=False)
+            (z_out, loss_t), vjp = jax.vjp(
+                lambda sp, z, e, u, f: stage_fn(sp, z, e, u, f,
+                                                toks_t, labs_t),
+                stages, z_src, embed_tbl, unembed_tbl, final_gamma)
+            z_send = z_out
+            if spec.wire_codec == "int8":
+                z_send = ops.int8_wire_roundtrip(z_send)
+            z_send = jnp.where(f_ok, z_send, jnp.zeros_like(z_out))
+            # ---- backward slot: seed cotangents, accumulate grads --------
+            ct_z = jnp.where(stage == last, jnp.zeros_like(z_out),
+                             g_wire.astype(z_out.dtype))
+            ct_loss = jnp.where(stage == last, jnp.ones_like(loss_t),
+                                jnp.zeros_like(loss_t))
+            g_stages, g_z, g_emb, g_unemb, g_fg = vjp((ct_z, ct_loss))
+            bmask = b_ok.astype(jnp.float32)
+            grads = jax.tree.map(
+                lambda acc, g: acc + bmask * g.astype(jnp.float32),
+                grads, (g_stages, g_emb, g_unemb, g_fg))
+            g_send = g_z.astype(spec.carry_dtype())
+            if spec.wire_codec == "int8":
+                g_send = ops.int8_wire_roundtrip(g_send)
+            g_send = jnp.where(b_ok & (stage > 0), g_send,
+                               jnp.zeros_like(g_send))
+            loss_acc = loss_acc + jnp.where(b_ok & (stage == last),
+                                            loss_t, jnp.zeros_like(loss_t))
+            # ---- hand-offs: consumed exactly one slot later --------------
+            z_wire = jax.lax.ppermute(
+                z_send, "model", [(i, i + 1) for i in range(Pn - 1)])
+            g_wire = jax.lax.ppermute(
+                g_send, "model", [(i + 1, i) for i in range(Pn - 1)])
+            return (z_wire, g_wire, stash, grads, loss_acc), None
+
+        z0 = jnp.zeros((B_loc, S, d_wire), spec.carry_dtype())
+        stash0 = jnp.zeros((R, B_loc, S, d_wire), spec.carry_dtype())
+        grads0 = jax.tree.map(lambda a: jnp.zeros(a.shape, jnp.float32),
+                              (stages, embed_tbl, unembed_tbl, final_gamma))
+        carry0 = (z0, jnp.zeros_like(z0), stash0, grads0, _traced_zero(toks))
+        (_, _, _, grads, loss_acc), _ = jax.lax.scan(
+            slot, carry0, jnp.arange(K, dtype=jnp.int32))
+
+        g_stages, g_emb, g_unemb, g_fg = grads
+        scale = 1.0 / M
+        loss = jax.lax.pmean(
+            jax.lax.psum(jnp.where(stage == last, loss_acc, 0.0 * loss_acc),
+                         "model") * scale, batch_axes)
+        # stage params: per-stage owner; shared params: sum over stages
+        g_stages = jax.tree.map(
+            lambda a: jax.lax.pmean(a * scale, batch_axes)[None], g_stages)
+        shared = jax.tree.map(
+            lambda a: jax.lax.pmean(jax.lax.psum(a * scale, "model"),
+                                    batch_axes),
+            (g_emb, g_unemb, g_fg))
+        return loss, g_stages, *shared
+
+    stage_specs = jax.tree.map(lambda _: P("model"), params["stages"])
+    tied = "unembed" not in params["embeds"]
+    unembed = params["embeds"].get("unembed", params["embeds"]["embed"])
+    loss, g_stages, g_emb, g_unemb, g_fg = _shard_map(
+        body, mesh,
+        (P(None, batch_axes, None), P(None, batch_axes, None),
+         P(None, None), P(None, None), P(None), stage_specs),
+        (P(), stage_specs, P(), P(), P()),
+    )(tokens_m, labels_m, params["embeds"]["embed"], unembed,
+      params["final_norm"], params["stages"])
+
+    embeds_g = {"embed": g_emb + g_unemb if tied else g_emb}
+    if not tied:
+        embeds_g["unembed"] = g_unemb
+    grads = {"embeds": embeds_g, "final_norm": g_fg, "stages": g_stages}
+    return loss, grads
+
+
+def pipeline_loss_1f1b(params, batch, cfg: ModelConfig, spec: PipelineSpec,
+                       mesh, batch_axes: tuple[str, ...] = ("data",),
+                       z_loss: float = 1e-4, compute_dtype=jnp.bfloat16):
+    """`jax.grad`-compatible 1F1B loss: the explicit schedule computes the
+
+    gradients in its own forward pass, so the custom_vjp backward just hands
+    them to autodiff (scaled by the incoming cotangent)."""
+
+    @jax.custom_vjp
+    def run(p):
+        loss, _ = pipeline_1f1b_grads(p, batch, cfg, spec, mesh, batch_axes,
+                                      z_loss, compute_dtype)
+        return loss
+
+    def fwd(p):
+        loss, grads = pipeline_1f1b_grads(p, batch, cfg, spec, mesh,
+                                          batch_axes, z_loss, compute_dtype)
+        return loss, (grads, p)
+
+    def bwd(res, g):
+        grads, p = res
+        return (jax.tree.map(
+            lambda gr, pp: (g * gr.astype(jnp.float32)).astype(pp.dtype),
+            grads, p),)
+
+    run.defvjp(fwd, bwd)
+    return run(params)
+
+
+def pipeline_loss_and_grads(params, batch, cfg: ModelConfig,
+                            spec: PipelineSpec, mesh,
+                            batch_axes: tuple[str, ...] = ("data",),
+                            z_loss: float = 1e-4,
+                            compute_dtype=jnp.bfloat16):
+    """Schedule dispatcher for the training hot path: GPipe differentiates
+    the tick scan; 1F1B computes grads explicitly in one pass."""
+    if spec.schedule == "1f1b":
+        return pipeline_1f1b_grads(params, batch, cfg, spec, mesh,
+                                   batch_axes, z_loss, compute_dtype)
+    return jax.value_and_grad(
+        lambda p: pipeline_loss_fused(p, batch, cfg, spec, mesh, batch_axes,
+                                      z_loss, compute_dtype))(params)

@@ -157,3 +157,66 @@ def bottleneck_decode(z, w_up, residual, alpha, *, out_dtype=jnp.bfloat16,
         z.reshape(-1, db), w_up, residual.reshape(-1, d),
         jnp.asarray(alpha, jnp.float32))
     return y.reshape(*lead, d)
+
+
+# ---------------------------------------------------------------------------
+# gated decode: rows x d_b --alpha * (@ W_up)--> rows x d_model
+# (pipeline stage entry — no residual crosses the wire, only the gate)
+# ---------------------------------------------------------------------------
+
+
+def _decode_gated_kernel(z_ref, w_ref, alpha_ref, o_ref):
+    z = z_ref[...].astype(jnp.float32)
+    y = z @ w_ref[...].astype(jnp.float32)
+    o_ref[...] = (alpha_ref[0].astype(jnp.float32) * y).astype(o_ref.dtype)
+
+
+def _decode_gated_call(z2d, w_up, alpha, out_dtype, interpret,
+                       block_rows=DEFAULT_BLOCK_ROWS):
+    R, db = z2d.shape
+    d = w_up.shape[1]
+    br = min(block_rows, R)
+    grid = (cdiv(R, br),)
+    return pl.pallas_call(
+        _decode_gated_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((br, db), lambda i: (i, 0)),
+            pl.BlockSpec((db, d), lambda i: (0, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((br, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((R, d), out_dtype),
+        interpret=interpret,
+    )(z2d, w_up, alpha)
+
+
+@functools.lru_cache(maxsize=None)
+def _decode_gated_fn(out_dtype_name: str, interpret: bool):
+    out_dtype = jnp.dtype(out_dtype_name)
+
+    @jax.custom_vjp
+    def f(z2d, w_up, alpha):
+        return _decode_gated_call(z2d, w_up, alpha.reshape(1), out_dtype,
+                                  interpret)
+
+    def fwd(z2d, w_up, alpha):
+        return f(z2d, w_up, alpha), (z2d, w_up, alpha)
+
+    def bwd(res, g):
+        _, vjp = jax.vjp(
+            lambda z, w, a: ref.bottleneck_decode_gated(
+                z, w, a, out_dtype=out_dtype), *res)
+        return vjp(g)
+
+    f.defvjp(fwd, bwd)
+    return f
+
+
+def bottleneck_decode_gated(z, w_up, alpha, *, out_dtype=jnp.bfloat16,
+                            interpret=False):
+    lead = z.shape[:-1]
+    db = z.shape[-1]
+    y = _decode_gated_fn(jnp.dtype(out_dtype).name, bool(interpret))(
+        z.reshape(-1, db), w_up, jnp.asarray(alpha, jnp.float32))
+    return y.reshape(*lead, w_up.shape[1])

@@ -89,9 +89,12 @@ def _flash_call(q, k, v, *, causal, q_offset, scale, interpret,
         scratch = [pltpu.VMEM((bq,), jnp.float32),
                    pltpu.VMEM((bq,), jnp.float32),
                    pltpu.VMEM((bq, D), jnp.float32)]
-        compiler_params = pltpu.CompilerParams(
+        # CompilerParams (new jax) vs TPUCompilerParams (<= 0.4.x)
+        cp_cls = getattr(pltpu, "CompilerParams", None) \
+            or getattr(pltpu, "TPUCompilerParams", None)
+        compiler_params = cp_cls(
             dimension_semantics=("parallel", "parallel", "parallel",
-                                 "arbitrary"))
+                                 "arbitrary")) if cp_cls else None
     except ImportError:  # pragma: no cover
         scratch, compiler_params = [], None
 

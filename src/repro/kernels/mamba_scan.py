@@ -81,8 +81,10 @@ def mamba_scan(delta, x, b_ssm, c_ssm, a, *, interpret: bool = False,
         from jax.experimental.pallas import tpu as pltpu
         scratch = [pltpu.VMEM((bd_, ds), jnp.float32)]
         kwargs = {}
-        if not interpret:
-            kwargs["compiler_params"] = pltpu.CompilerParams(
+        cp_cls = getattr(pltpu, "CompilerParams", None) \
+            or getattr(pltpu, "TPUCompilerParams", None)
+        if not interpret and cp_cls:
+            kwargs["compiler_params"] = cp_cls(
                 dimension_semantics=("parallel", "parallel", "arbitrary"))
     except ImportError:  # pragma: no cover
         scratch, kwargs = [], {}

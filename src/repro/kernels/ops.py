@@ -92,6 +92,16 @@ def bottleneck_decode(z, w_up, residual, alpha, *, out_dtype=jnp.bfloat16):
     return ref.bottleneck_decode(z, w_up, residual, alpha, out_dtype=out_dtype)
 
 
+def bottleneck_decode_gated(z, w_up, alpha, *, out_dtype=jnp.bfloat16):
+    """Pipeline stage-entry decode: alpha * (z @ W_up), fused on TPU."""
+    if _use_pallas():
+        from repro.kernels import bottleneck_fused as bf
+        return bf.bottleneck_decode_gated(z, w_up, alpha,
+                                          out_dtype=out_dtype,
+                                          interpret=_interpret())
+    return ref.bottleneck_decode_gated(z, w_up, alpha, out_dtype=out_dtype)
+
+
 # ---------------------------------------------------------------------------
 # int8 stream codec
 # ---------------------------------------------------------------------------
@@ -109,6 +119,33 @@ def dequantize_int8(q, scales, block: int = 256):
         from repro.kernels import quant_stream as qs
         return qs.dequantize_int8(q, scales, block=block, interpret=_interpret())
     return ref.dequantize_int8(q, scales, block=block)
+
+
+@jax.custom_vjp
+def _ref_wire_roundtrip(z):
+    return ref.int8_wire_roundtrip(z)
+
+
+def _ref_wire_fwd(z):
+    return _ref_wire_roundtrip(z), None
+
+
+def _ref_wire_bwd(_, g):
+    # backward wire codes quantize symmetrically (straight-through)
+    return (ref.int8_wire_roundtrip(g),)
+
+
+_ref_wire_roundtrip.defvjp(_ref_wire_fwd, _ref_wire_bwd)
+
+
+def int8_wire_roundtrip(z):
+    """Differentiable int8 fake-quant of the pipeline wire (see
+    quant_stream.int8_wire_roundtrip); kernel on TPU, oracle elsewhere —
+    both quantize the cotangent on the way back."""
+    if _use_pallas():
+        from repro.kernels import quant_stream as qs
+        return qs.int8_wire_roundtrip(z, interpret=_interpret())
+    return _ref_wire_roundtrip(z)
 
 
 # ---------------------------------------------------------------------------

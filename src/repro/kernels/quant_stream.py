@@ -67,3 +67,74 @@ def dequantize_int8(q, scales, block: int = BLOCK, interpret: bool = False):
         interpret=interpret,
     )(q.reshape(rows, block), scales)
     return out.reshape(n)
+
+
+# ---------------------------------------------------------------------------
+# int8 pipeline wire codec (paper §4: 128x on-wire = 64x bottleneck x 2x
+# int8-vs-bf16).  Bottleneck codes are quantized at stage exit and
+# dequantized at stage entry; gradients crossing the wire backward are
+# quantized symmetrically (the straight-through custom_vjp below), so the
+# compression is the paper's symmetrical headline number.
+# ---------------------------------------------------------------------------
+
+
+def wire_block(n: int, last_dim: int) -> int:
+    """Block size for an n-element code tensor (mirrors ref.wire_code_block):
+    the standard 256-element block when it divides, else one scale per code
+    row — the trailing bottleneck dim always divides the element count."""
+    return BLOCK if n % BLOCK == 0 else last_dim
+
+
+def quantize_wire(z, interpret: bool = False):
+    """(..., d_b) code tensor -> (q int8 same-shape, scales f32, block)."""
+    n = z.size
+    blk = wire_block(n, z.shape[-1])
+    q, s = quantize_int8(z.astype(jnp.float32).reshape(-1), block=blk,
+                         interpret=interpret)
+    return q.reshape(z.shape), s, blk
+
+
+def dequantize_wire(q, scales, block: int, interpret: bool = False):
+    out = dequantize_int8(q.reshape(-1), scales, block=block,
+                          interpret=interpret)
+    return out.reshape(q.shape)
+
+
+def wire_nbytes(shape, block: int | None = None) -> int:
+    """Honest on-wire bytes for an int8-coded tensor: int8 payload + one
+    fp32 scale per block."""
+    n = 1
+    for dim in shape:
+        n *= dim
+    blk = block or wire_block(n, shape[-1])
+    return n + (n // blk) * 4
+
+
+@functools.lru_cache(maxsize=None)
+def _roundtrip_fn(interpret: bool):
+    def rt(z):
+        q, s, blk = quantize_wire(z, interpret=interpret)
+        return dequantize_wire(q, s, blk, interpret=interpret).astype(z.dtype)
+
+    @jax.custom_vjp
+    def f(z):
+        return rt(z)
+
+    def fwd(z):
+        return f(z), None
+
+    def bwd(_, g):
+        # backward wire codes are int8 too (paper's symmetric compression);
+        # the quantizer itself is straight-through
+        return (rt(g),)
+
+    f.defvjp(fwd, bwd)
+    return f
+
+
+def int8_wire_roundtrip(z, interpret: bool = False):
+    """Differentiable fake-quant of the pipeline wire: forward sees exactly
+    the dequantized int8 code the receiving stage would see; the cotangent
+    is quantized the same way on the way back.  Numerically identical to
+    physically shipping (int8, scales) in both directions."""
+    return _roundtrip_fn(bool(interpret))(z)

@@ -191,6 +191,21 @@ def bottleneck_decode(
     return (y + alpha.astype(jnp.float32) * residual.astype(jnp.float32)).astype(out_dtype)
 
 
+def bottleneck_decode_gated(
+    z: jax.Array,            # (..., d_bottleneck) wire code
+    w_up: jax.Array,         # (d_bottleneck, d_model)
+    alpha: jax.Array,        # scalar: learned decode gate
+    *,
+    out_dtype=jnp.bfloat16,
+) -> jax.Array:
+    """Pipeline-boundary decode (stage entry, no residual crosses the wire):
+
+    y = alpha * (z @ w_up).  The fused kernel writes the full-width output
+    exactly once instead of a matmul write + a separate scale pass."""
+    y = z.astype(jnp.float32) @ w_up.astype(jnp.float32)
+    return (alpha.astype(jnp.float32) * y).astype(out_dtype)
+
+
 # ---------------------------------------------------------------------------
 # int8 blockwise stream codec (compressed sharing, paper §2 stage 2) oracles
 # ---------------------------------------------------------------------------
@@ -214,6 +229,22 @@ def dequantize_int8(q: jax.Array, scales: jax.Array, block: int = 256) -> jax.Ar
     (n,) = q.shape
     qb = q.astype(jnp.float32).reshape(n // block, block)
     return (qb * scales[:, None]).reshape(n)
+
+
+def wire_code_block(n: int, last_dim: int) -> int:
+    """Quantization block for an n-element wire-code tensor: the standard
+    256-element block when it divides, else one scale per code row (the
+    trailing bottleneck dim always divides)."""
+    return 256 if n % 256 == 0 else last_dim
+
+
+def int8_wire_roundtrip(z: jax.Array, block: int | None = None) -> jax.Array:
+    """Oracle for the int8 pipeline wire: what the receiving stage sees after
+    quantize -> (wire) -> dequantize of a bottleneck-code tensor."""
+    n = z.size
+    blk = block or wire_code_block(n, z.shape[-1])
+    q, s = quantize_int8(z.astype(jnp.float32).reshape(-1), block=blk)
+    return dequantize_int8(q, s, block=blk).reshape(z.shape).astype(z.dtype)
 
 
 # ---------------------------------------------------------------------------

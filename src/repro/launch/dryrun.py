@@ -178,6 +178,7 @@ def _lower_pipeline(cfg, model, shape, mesh, ma):
         PipelineSpec,
         init_pipeline_params,
         pipeline_loss,
+        pipeline_loss_and_grads,
         pipeline_loss_fused,
     )
     assert shape.kind == "train", "pipeline strategy lowers train_step"
@@ -190,6 +191,8 @@ def _lower_pipeline(cfg, model, shape, mesh, ma):
             str(cfg.parallel.pipeline_microbatches))),
         compress=compress,
         bottleneck_dim=max(cfg.model.bottleneck.bottleneck_dim, 32),
+        schedule=os.environ.get("REPRO_PIPELINE_SCHEDULE", "gpipe"),
+        wire_codec=os.environ.get("REPRO_PIPELINE_WIRE_CODEC", "none"),
     )
     params_shapes = jax.eval_shape(
         lambda k: init_pipeline_params(k, cfg.model, spec), jax.random.key(0))
@@ -210,21 +213,29 @@ def _lower_pipeline(cfg, model, shape, mesh, ma):
     batch_in = _shape_structs(batch_shapes, b_specs, mesh)
 
     fused = os.environ.get("REPRO_PIPELINE_FUSED", "1") == "1"
-    loss_impl = pipeline_loss_fused if fused else pipeline_loss
 
-    def loss_fn(params, batch):
-        return loss_impl(params, batch, cfg.model, spec, mesh,
-                         batch_axes=ma.batch)
-
-    def step(params, batch):
-        return jax.grad(loss_fn)(params, batch)
+    if spec.schedule == "1f1b" or fused:
+        # the dispatcher pairs each schedule with its grad path (autodiff
+        # for GPipe, the explicit-backward slot loop for 1F1B)
+        def step(params, batch):
+            _, grads = pipeline_loss_and_grads(params, batch, cfg.model,
+                                               spec, mesh,
+                                               batch_axes=ma.batch)
+            return grads
+    else:
+        def step(params, batch):
+            return jax.grad(lambda p, b: pipeline_loss(
+                p, b, cfg.model, spec, mesh, batch_axes=ma.batch))(
+                    params, batch)
 
     lowered = jax.jit(step).lower(params_in, batch_in)
     return lowered.compile(), {
         "pipeline": {"n_stages": spec.n_stages,
                      "n_microbatches": spec.n_microbatches,
                      "compress": spec.compress,
-                     "bottleneck_dim": spec.bottleneck_dim}}
+                     "bottleneck_dim": spec.bottleneck_dim,
+                     "schedule": spec.schedule,
+                     "wire_codec": spec.wire_codec}}
 
 
 def run_outer_merge(arch_id: str) -> dict:

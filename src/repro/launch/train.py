@@ -11,9 +11,20 @@ On a real pod the same ``Model.train_step`` lowers under the production
 mesh (see dryrun.py); this driver is the CPU-scale harness used by the
 examples and integration tests.
 
+``--strategy pipeline`` drives the ``repro.core.pipeline`` engine instead:
+stages shard over the devices' ``model`` axis (forced host devices work —
+set XLA_FLAGS=--xla_force_host_platform_device_count=N *before* launch),
+with the schedule (``gpipe``/``1f1b``) and wire codec (``none``/``int8``)
+selectable per docs/PERF.md.  The first metrics record carries the static
+schedule accounting (wire bytes per hop, bubble fraction, stash bytes).
+
 Usage:
   PYTHONPATH=src python -m repro.launch.train --arch llama3.2-1b --smoke \
       --steps 200 --batch-size 8 --seq-len 128 --ckpt-dir /tmp/ckpt --resume
+  XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+  PYTHONPATH=src python -m repro.launch.train --arch llama3.2-1b --smoke \
+      --strategy pipeline --pipeline-schedule 1f1b --wire-codec int8 \
+      --steps 40 --batch-size 8 --seq-len 32
 """
 from __future__ import annotations
 
@@ -48,11 +59,27 @@ def main(argv=None) -> dict:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--metrics-out", default=None)
+    # --strategy pipeline knobs (repro.core.pipeline engine)
+    ap.add_argument("--strategy", default="tensor",
+                    choices=["tensor", "pipeline"])
+    ap.add_argument("--pipeline-stages", type=int, default=None,
+                    help="stage count (default: all visible devices)")
+    ap.add_argument("--pipeline-microbatches", type=int, default=None)
+    ap.add_argument("--pipeline-schedule", default="gpipe",
+                    choices=["gpipe", "1f1b"])
+    ap.add_argument("--wire-codec", default="none", choices=["none", "int8"])
+    ap.add_argument("--bottleneck-dim", type=int, default=None)
+    ap.add_argument("--no-compress", action="store_true",
+                    help="stream full-width activations, not codes")
+    ap.add_argument("--lr", type=float, default=0.1,
+                    help="SGD lr for the pipeline strategy loop")
     args = ap.parse_args(argv)
 
     cfg = configs.get(args.arch)
     if args.smoke:
         cfg = configs.smoke_variant(cfg)
+    if args.strategy == "pipeline":
+        return _pipeline_main(args, cfg)
     model = build_model(cfg)
 
     corpus = SyntheticCorpus(DataConfig(
@@ -110,6 +137,89 @@ def main(argv=None) -> dict:
             for m in metrics_log:
                 f.write(json.dumps(m) + "\n")
     return metrics_log[-1] if metrics_log else {}
+
+
+def _pipeline_main(args, cfg) -> dict:
+    """Pipelined training loop: schedule + wire codec selectable, SGD on
+    the stage-stacked param tree, static schedule stats in the first
+    metrics record (benchmarks/bench_pipeline.py parses these)."""
+    from repro.core.pipeline import (
+        PipelineSpec,
+        init_pipeline_params,
+        pipeline_loss_and_grads,
+        schedule_stats,
+    )
+    assert not (args.ckpt_dir or args.resume
+                or args.kill_at_step is not None), \
+        "--strategy pipeline does not support checkpoint/preemption flags yet"
+    mcfg = cfg.model
+    n_dev = jax.device_count()
+    n_stages = args.pipeline_stages or n_dev
+    assert n_dev % n_stages == 0, (n_dev, n_stages)
+    assert mcfg.n_layers % n_stages == 0, \
+        f"{mcfg.n_layers} layers cannot split into {n_stages} stages"
+    data_shards = n_dev // n_stages
+    spec = PipelineSpec(
+        n_stages=n_stages,
+        n_microbatches=(args.pipeline_microbatches
+                        or min(cfg.parallel.pipeline_microbatches,
+                               args.batch_size)),
+        compress=not args.no_compress,
+        bottleneck_dim=(args.bottleneck_dim
+                        or max(mcfg.bottleneck.bottleneck_dim // 2, 8)),
+        schedule=args.pipeline_schedule,
+        wire_codec=args.wire_codec,
+    )
+    assert args.batch_size % (spec.n_microbatches * data_shards) == 0, \
+        (args.batch_size, spec.n_microbatches, data_shards)
+    mesh = jax.make_mesh((data_shards, n_stages), ("data", "model"))
+    corpus = SyntheticCorpus(DataConfig(
+        vocab_size=mcfg.vocab_size, seq_len=args.seq_len,
+        batch_size=args.batch_size, seed=args.seed))
+    params = init_pipeline_params(jax.random.key(args.seed), mcfg, spec)
+    stats = schedule_stats(mcfg, spec, args.batch_size, args.seq_len,
+                           data_shards=data_shards)
+
+    @jax.jit
+    def step_fn(params, batch):
+        loss, grads = pipeline_loss_and_grads(params, batch, mcfg, spec,
+                                              mesh)
+        new_params = jax.tree.map(
+            lambda p, g: (p - args.lr * g.astype(jnp.float32)
+                          ).astype(p.dtype), params, grads)
+        gnorm = jnp.sqrt(sum(
+            jnp.sum(jnp.square(g.astype(jnp.float32)))
+            for g in jax.tree.leaves(grads)))
+        return new_params, {"loss": loss, "grad_norm": gnorm}
+
+    metrics_log = [dict(stats, step=0)]
+    print(json.dumps(metrics_log[0]), flush=True)
+    t0 = time.time()
+    step_seconds = []
+    with mesh:
+        for step in range(args.steps):
+            batch = {k: jnp.asarray(v)
+                     for k, v in corpus.batch(step).items()}
+            ts = time.time()
+            params, metrics = step_fn(params, batch)
+            metrics = {k: float(v) for k, v in metrics.items()}
+            step_seconds.append(time.time() - ts)
+            if (step + 1) % args.log_every == 0 or step == args.steps - 1:
+                m = dict(metrics, step=step + 1,
+                         sps=round((step + 1) / (time.time() - t0), 3))
+                metrics_log.append(m)
+                print(json.dumps(m), flush=True)
+    # median post-warmup step time — the bench's us_per_step
+    tail = sorted(step_seconds[1:]) or step_seconds
+    if tail:
+        metrics_log[-1]["us_per_step"] = round(
+            tail[len(tail) // 2] * 1e6, 1)
+    if args.metrics_out:
+        with open(args.metrics_out, "w") as f:
+            for m in metrics_log:
+                f.write(json.dumps(m) + "\n")
+    print(json.dumps({"final": metrics_log[-1]}), flush=True)
+    return metrics_log[-1]
 
 
 if __name__ == "__main__":

@@ -82,17 +82,22 @@ class StateStore:
         return key.split("/", 1)[0]
 
     def put(self, key: str, value: Any, actor: str = "?",
-            codec: Optional[str] = None, meta: Optional[dict] = None) -> str:
+            codec: Optional[str] = None,
+            meta: Optional[dict] = None) -> StoreEntry:
+        """Store ``value``; returns the full ``StoreEntry`` so callers that
+        need the byte count (the simulated-network hot loop) don't pay a
+        second lookup.  The entry carries the digest for tamper evidence."""
         if codec and codec != "none":
             flat, _ = ravel_pytree(value)
             value = compression.encode(flat, codec)
         nbytes = _nbytes(value)
         digest = _digest(value)
-        self._data[key] = StoreEntry(value, nbytes, digest,
-                                     dict(meta or {}, codec=codec or "none"))
+        entry = StoreEntry(value, nbytes, digest,
+                           dict(meta or {}, codec=codec or "none"))
+        self._data[key] = entry
         self.uploaded[self._ns(key)] += nbytes
         self.uploads_by_actor[actor] += nbytes
-        return digest
+        return entry
 
     def _nearest_prefix(self, key: str) -> tuple[str, int]:
         """Longest '/'-segment prefix of ``key`` under which keys exist."""
@@ -109,12 +114,17 @@ class StateStore:
         return StoreKeyError(key, actor, prefix, count)
 
     def get(self, key: str, actor: str = "?") -> Any:
+        return self.fetch_entry(key, actor).payload
+
+    def fetch_entry(self, key: str, actor: str = "?") -> StoreEntry:
+        """Accounted read returning the full entry (payload + nbytes +
+        digest) — one dict lookup for callers that also need the size."""
         entry = self._data.get(key)
         if entry is None:
             raise self._missing(key, actor)
         self.downloaded[self._ns(key)] += entry.nbytes
         self.downloads_by_actor[actor] += entry.nbytes
-        return entry.payload
+        return entry
 
     def get_entry(self, key: str) -> StoreEntry:
         entry = self._data.get(key)

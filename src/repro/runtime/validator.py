@@ -92,6 +92,12 @@ class Validator:
                 if not self.transport.exists(g_out_key):
                     continue
                 g_out = self.transport.get(g_out_key, actor=self.actor)
+                if isinstance(g_out, dict) and g_out.get("codec"):
+                    # int8 gradient wire (SwarmConfig.wire_codec): replay
+                    # with the same dequantized codes the miner trained on
+                    from repro.core import compression
+                    g_out = jnp.reshape(compression.decode(g_out),
+                                        g_out["shape"])
                 g_params, _ = sm.stage_backward(params, x_in, g_out, spec, role)
             params, opt_state = opt.update(g_params, opt_state, params,
                                            inner_step)

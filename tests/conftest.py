@@ -1,14 +1,47 @@
-"""Shared fixtures.  NOTE: no XLA_FLAGS here — smoke tests and benches must
+"""Shared fixtures + the multi-device subprocess harness.  NOTE: no
 
-see 1 device (only launch/dryrun.py forces 512 host devices, and the
-multi-device tests spawn subprocesses that set their own flags)."""
+XLA_FLAGS here — smoke tests and benches must see 1 device (only
+launch/dryrun.py forces 512 host devices, and the multi-device tests
+spawn subprocesses that set their own flags)."""
 import os
+import subprocess
 import sys
+import textwrap
 
 import numpy as np
 import pytest
 
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, SRC)
+
+# prepended to every multi-device subprocess: jax<=0.4.x has no
+# jax.sharding.AxisType — fall back to the positional mesh (explicit axis
+# types are an optimisation hint here, not semantics)
+MESH_COMPAT = """
+import jax
+
+
+def make_mesh(shape, names):
+    try:
+        return jax.make_mesh(shape, names,
+                             axis_types=(jax.sharding.AxisType.Auto,)
+                             * len(names))
+    except AttributeError:
+        return jax.make_mesh(shape, names)
+"""
+
+
+def run_py(code: str, devices: int = 8) -> str:
+    """Run ``code`` in a fresh interpreter with ``devices`` forced host
+    devices (the count must be fixed before jax initialises)."""
+    env = dict(os.environ,
+               XLA_FLAGS=f"--xla_force_host_platform_device_count={devices}",
+               PYTHONPATH=SRC)
+    proc = subprocess.run(
+        [sys.executable, "-c", MESH_COMPAT + textwrap.dedent(code)],
+        capture_output=True, text=True, env=env, timeout=900)
+    assert proc.returncode == 0, proc.stderr[-4000:]
+    return proc.stdout
 
 
 @pytest.fixture(scope="session")

@@ -3,25 +3,9 @@
 count must be fixed before jax initialises): pipeline-engine equivalence,
 butterfly mesh all-reduce, DiLoCo outer merge, MoE EP vs local path.
 """
-import os
-import subprocess
-import sys
-import textwrap
-
 import pytest
 
-SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
-
-
-def run_py(code: str, devices: int = 8) -> str:
-    env = dict(os.environ,
-               XLA_FLAGS=f"--xla_force_host_platform_device_count={devices}",
-               PYTHONPATH=SRC)
-    proc = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
-                          capture_output=True, text=True, env=env,
-                          timeout=900)
-    assert proc.returncode == 0, proc.stderr[-4000:]
-    return proc.stdout
+from conftest import run_py
 
 
 @pytest.mark.slow
@@ -38,8 +22,7 @@ def test_pipeline_matches_sequential_when_uncompressed():
 
         cfg = dataclasses.replace(smoke_variant(get('llama3.2-1b')).model,
                                   n_layers=4)
-        mesh = jax.make_mesh((2, 4), ('data', 'model'),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh = make_mesh((2, 4), ('data', 'model'))
         spec = PipelineSpec(n_stages=4, n_microbatches=2, compress=False)
         params = init_pipeline_params(jax.random.key(0), cfg, spec)
         x = jax.random.normal(jax.random.key(1), (2, 4, 16, cfg.d_model),
@@ -76,8 +59,7 @@ def test_butterfly_mesh_allreduce_and_diloco():
         from repro.core.butterfly import butterfly_all_reduce_mesh
         from repro.core import diloco
 
-        mesh = jax.make_mesh((2, 4), ('pod', 'data'),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh = make_mesh((2, 4), ('pod', 'data'))
         x = jnp.arange(103, dtype=jnp.float32)        # odd length: padding
         with mesh:
             m, a = jax.jit(lambda x: butterfly_all_reduce_mesh(
@@ -112,8 +94,7 @@ def test_moe_ep_matches_local_path():
                               jnp.float32)
         y_local, aux_local = moe.moe_ffn(params, x, mcfg, None)
 
-        mesh = jax.make_mesh((2, 4), ('data', 'model'),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh = make_mesh((2, 4), ('data', 'model'))
         ma = make_mesh_axes(mesh, mcfg, cfg.parallel)
         with mesh:
             y_ep, aux_ep = jax.jit(lambda p, x: moe.moe_ffn(
@@ -142,8 +123,7 @@ def test_sharded_train_step_matches_single_device():
         batch = model.synth_batch(jax.random.key(1), 8, 32)
         _, m1 = jax.jit(lambda s, b: model.train_step(s, b))(state, batch)
 
-        mesh = jax.make_mesh((2, 4), ('data', 'model'),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh = make_mesh((2, 4), ('data', 'model'))
         ma = make_mesh_axes(mesh, cfg.model, cfg.parallel)
         with mesh:
             _, m2 = jax.jit(lambda s, b: model.train_step(s, b, ma))(
