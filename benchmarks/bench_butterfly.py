@@ -1,13 +1,45 @@
 """Paper Fig 7a/7b + §5.3: agreement matrix, failure resilience, transfer
 
-volume of Butterfly All-Reduce."""
+volume of Butterfly All-Reduce — plus the *measured* store-and-forward
+numbers, written to ``BENCH_butterfly.json`` (tracked across PRs):
+
+  * per-miner bytes of a real ``ButterflyExecutor`` sync over
+    ``SimulatedNetworkTransport`` vs the 4W + 2W/N closed form, N ∈ {4,6,8}
+  * dense vs sharded ``SyncPhase`` on a tiny swarm: merged-anchor parity
+    and wall-clock (host + simulated)
+
+``BENCH_QUICK=1`` shrinks sizes and validates a scratch artifact
+(the smoke.sh / ``run.py --quick`` schema gate).
+"""
 from __future__ import annotations
+
+import json
+import os
+import tempfile
+import time
 
 import numpy as np
 
 from benchmarks.common import emit, time_call
 from repro.common import human_bytes
 from repro.core import butterfly
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+ARTIFACT = os.path.join(ROOT, "BENCH_butterfly.json")
+QUICK_ARTIFACT = os.path.join(tempfile.gettempdir(),
+                              "BENCH_butterfly.quick.json")
+
+
+def artifact_path() -> str:
+    return QUICK_ARTIFACT if os.environ.get("BENCH_QUICK", "0") == "1" \
+        else ARTIFACT
+
+
+SCHEMA_KEYS = {"schema", "config", "benchmarks", "sync", "derived"}
+BENCH_KEYS = {"name", "n_miners", "w_bytes", "per_miner_bytes_mean",
+              "per_miner_bytes_max", "closed_form_bytes", "rel_err_max"}
+SYNC_KEYS = {"dense_sim_seconds", "sharded_sim_seconds", "dense_wall_us",
+             "sharded_wall_us", "anchor_max_delta"}
 
 
 def fig7a_agreement_matrix() -> None:
@@ -76,11 +108,151 @@ def merge_throughput() -> None:
     emit("butterfly_merge_16x1M", us, f"{16*(1<<20)*4/us*1e6/2**30:.1f}GiB/s")
 
 
+def store_and_forward_bytes(quick: bool) -> list[dict]:
+    """Measured per-miner bytes of a full executor sync (shard uploads +
+    reduce + reduced re-uploads + anchor download) vs 4W + 2W/N.
+
+    Runs fp32 payloads (codec "none") so W is unambiguous — the closed
+    form's units; the int8 sharing codec shrinks the upload/reduce legs by
+    its ratio without changing the shape of the accounting."""
+    from repro.api import KeySchema, NetworkModel, SimulatedNetworkTransport
+
+    L = 50_000 if quick else 400_000
+    records = []
+    for n in ((4,) if quick else (4, 6, 8)):
+        tp = SimulatedNetworkTransport(NetworkModel.consumer(),
+                                       schema=KeySchema(version=2))
+        plan = butterfly.make_plan(n, L, seed=0)
+        ex = butterfly.ButterflyExecutor(plan, tp, epoch=0, stage=0,
+                                         uids=list(range(n)), codec="none")
+        vecs = {i: np.random.RandomState(i).randn(L).astype(np.float32)
+                for i in range(n)}
+        for i in range(n):
+            ex.upload_vector(i, vecs[i], actor=f"miner{i}")
+        for i in range(n):
+            ex.run_reducer(i, actor=f"miner{i}")
+        merged, valid, _ = ex.collect(actor="orchestrator")
+        assert valid.all()
+        np.testing.assert_allclose(
+            merged, np.mean([vecs[i] for i in range(n)], axis=0), atol=1e-5)
+        anchor_key = tp.schema.anchor(0, 0)
+        tp.put(anchor_key, merged, actor="orchestrator")
+        for i in range(n):
+            tp.get(anchor_key, actor=f"miner{i}")
+
+        w = L * 4
+        closed = 4 * w + 2 * w / n
+        rep = tp.link_report()
+        per = [rep[f"miner{i}"]["up_bytes"] + rep[f"miner{i}"]["down_bytes"]
+               for i in range(n)]
+        rel = max(abs(p - closed) / closed for p in per)
+        records.append({
+            "name": f"store_forward_n{n}",
+            "n_miners": n,
+            "w_bytes": w,
+            "per_miner_bytes_mean": float(np.mean(per)),
+            "per_miner_bytes_max": float(max(per)),
+            "closed_form_bytes": closed,
+            "rel_err_max": round(rel, 6),
+        })
+        emit(f"sec53_measured/n{n}", 0.0,
+             f"measured={human_bytes(float(np.mean(per)))};"
+             f"closed_form={human_bytes(closed)};rel_err={rel:.4f}")
+    return records
+
+
+def dense_vs_sharded_sync(quick: bool) -> dict:
+    """Tiny swarm, identical seeds: the sharded store-and-forward sync must
+    reproduce the dense oracle's anchors; report both clocks."""
+    import dataclasses as dc
+
+    import jax
+    import jax.numpy as jnp
+    from jax.flatten_util import ravel_pytree
+
+    from repro.api import (KeySchema, NetworkModel, SimulatedNetworkTransport,
+                           Swarm, SwarmConfig)
+    from repro.configs import get, smoke_variant
+
+    mcfg = dc.replace(smoke_variant(get("llama3.2-1b")).model,
+                      n_layers=2 if quick else 4)
+    base = SwarmConfig(seed=0, n_stages=2, miners_per_stage=4,
+                       inner_steps=2 if quick else 4, b_min=1, validators=1)
+    out = {}
+    anchors = {}
+    for mode in ("dense", "sharded"):
+        cfg = dc.replace(base, sync_mode=mode)
+        tp = SimulatedNetworkTransport(
+            NetworkModel.consumer(),
+            schema=KeySchema(version=2 if mode == "sharded" else 1))
+        sw = Swarm.create(mcfg, cfg, transport=tp)
+        t0 = time.perf_counter()
+        sw.run(1)
+        out[f"{mode}_wall_us"] = round((time.perf_counter() - t0) * 1e6)
+        out[f"{mode}_sim_seconds"] = round(tp.elapsed_seconds(), 4)
+        anchors[mode] = [
+            np.asarray(ravel_pytree(jax.tree.map(
+                lambda x: x.astype(jnp.float32), a))[0])
+            for a in sw.anchors]
+    out["anchor_max_delta"] = float(max(
+        np.abs(d - s).max() for d, s in zip(anchors["dense"],
+                                            anchors["sharded"])))
+    emit("sync_dense_vs_sharded", out["sharded_wall_us"],
+         f"anchor_delta={out['anchor_max_delta']:.2e};"
+         f"sim_s_dense={out['dense_sim_seconds']};"
+         f"sim_s_sharded={out['sharded_sim_seconds']}")
+    return out
+
+
+def write_artifact(quick: bool) -> None:
+    records = store_and_forward_bytes(quick)
+    sync = dense_vs_sharded_sync(quick)
+    art = {
+        "schema": "bench_butterfly/v1",
+        "config": {"quick": quick, "codec": "none",
+                   "ns": [r["n_miners"] for r in records]},
+        "benchmarks": records,
+        "sync": sync,
+        "derived": {
+            "max_rel_err": max(r["rel_err_max"] for r in records),
+            "o1_bandwidth_ok": all(r["rel_err_max"] < 0.05
+                                   for r in records),
+            "anchor_parity_ok": sync["anchor_max_delta"] <= 1e-6,
+        },
+    }
+    path = artifact_path()
+    with open(path, "w") as f:
+        json.dump(art, f, indent=1, sort_keys=True)
+    validate_artifact(path)
+    emit("butterfly_artifact", 0.0,
+         f"{os.path.basename(path)};rel_err={art['derived']['max_rel_err']}")
+
+
+def validate_artifact(path: str | None = None) -> dict:
+    path = path or artifact_path()
+    with open(path) as f:
+        art = json.load(f)
+    assert art["schema"] == "bench_butterfly/v1", art["schema"]
+    assert set(art) == SCHEMA_KEYS, set(art) ^ SCHEMA_KEYS
+    assert art["benchmarks"], "no benchmark records"
+    for rec in art["benchmarks"]:
+        assert set(rec) == BENCH_KEYS, set(rec) ^ BENCH_KEYS
+    assert set(art["sync"]) == SYNC_KEYS, set(art["sync"]) ^ SYNC_KEYS
+    assert art["derived"]["o1_bandwidth_ok"], \
+        f"per-miner bytes off the 4W+2W/N closed form: {art['derived']}"
+    assert art["derived"]["anchor_parity_ok"], \
+        f"sharded anchors diverged from dense oracle: {art['derived']}"
+    return art
+
+
 def run() -> None:
-    fig7a_agreement_matrix()
-    fig7b_failure_resilience()
-    sec53_transfer_volume()
-    merge_throughput()
+    quick = os.environ.get("BENCH_QUICK", "0") == "1"
+    if not quick:
+        fig7a_agreement_matrix()
+        fig7b_failure_resilience()
+        sec53_transfer_volume()
+        merge_throughput()
+    write_artifact(quick)
 
 
 if __name__ == "__main__":

@@ -2,7 +2,8 @@
 
 Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit).
 Modules may additionally write machine-readable artifacts (tracked across
-PRs): ``bench_pipeline`` writes ``BENCH_pipeline.json`` at the repo root.
+PRs): ``bench_pipeline`` writes ``BENCH_pipeline.json`` and
+``bench_butterfly`` writes ``BENCH_butterfly.json`` at the repo root.
 
   fig5   bench_convergence        — bottleneck compression vs baseline
   fig7   bench_butterfly          — agreement matrix, resilience, §5.3 bytes
@@ -16,8 +17,9 @@ PRs): ``bench_pipeline`` writes ``BENCH_pipeline.json`` at the repo root.
 
 Usage:
   python -m benchmarks.run [module-substring]
-  python -m benchmarks.run --quick    # pipeline bench only, reduced budget,
-                                      # then validate the JSON artifact schema
+  python -m benchmarks.run --quick    # pipeline + butterfly benches only,
+                                      # reduced budget, then validate the
+                                      # JSON artifact schemas
 """
 from __future__ import annotations
 
@@ -46,16 +48,17 @@ def main() -> None:
     only = args[0] if args else None
     modules = MODULES
     if quick:
-        # the fast CI gate: exercise the pipeline grid at a reduced budget
-        # and hard-validate the artifact schema.  A module filter would
-        # skip the bench and then validate a stale/missing artifact, so
+        # the fast CI gate: exercise the pipeline grid and the
+        # store-and-forward butterfly sync at a reduced budget and
+        # hard-validate both artifact schemas.  A module filter would
+        # skip the benches and then validate stale/missing artifacts, so
         # it is ignored here.
         if only:
-            print(f"# --quick runs only the pipeline gate; "
+            print(f"# --quick runs only the artifact gates; "
                   f"ignoring filter {only!r}", flush=True)
             only = None
         os.environ["BENCH_QUICK"] = "1"
-        modules = ["benchmarks.bench_pipeline"]
+        modules = ["benchmarks.bench_pipeline", "benchmarks.bench_butterfly"]
     failures = 0
     for mod_name in modules:
         if only and only not in mod_name:
@@ -70,10 +73,16 @@ def main() -> None:
             failures += 1
         print(f"# {mod_name} done in {time.time()-t0:.1f}s", flush=True)
     if quick and not failures:
+        from benchmarks.bench_butterfly import (
+            validate_artifact as validate_butterfly)
         from benchmarks.bench_pipeline import validate_artifact
         art = validate_artifact()
         print(f"# BENCH_pipeline.json schema OK "
               f"({len(art['benchmarks'])} records)", flush=True)
+        art = validate_butterfly()
+        print(f"# BENCH_butterfly.json schema OK "
+              f"({len(art['benchmarks'])} records, "
+              f"rel_err={art['derived']['max_rel_err']})", flush=True)
     if failures:
         raise SystemExit(f"{failures} benchmark modules failed")
 

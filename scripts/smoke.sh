@@ -7,9 +7,12 @@
 # Runs everything except tests marked `slow` (marker registered in
 # pyproject.toml, which also sets pythonpath=src — no PYTHONPATH needed),
 # then drives examples/quickstart.py end to end at a reduced step count,
-# a short 1F1B+int8 pipelined training run (launch/train.py --strategy
-# pipeline), and `benchmarks/run.py --quick` (reduced pipeline bench that
-# hard-validates the BENCH_pipeline.json schema).
+# the sharded store-and-forward sync quickstart (examples/sharded_sync.py:
+# tiny N=4 swarm over SimulatedNetworkTransport, asserts merged-anchor
+# parity with the dense path), a short 1F1B+int8 pipelined training run
+# (launch/train.py --strategy pipeline), and `benchmarks/run.py --quick`
+# (reduced pipeline + butterfly benches that hard-validate the
+# BENCH_pipeline.json / BENCH_butterfly.json schemas).
 # This is the documented check to run before every commit; the full suite
 # is `python -m pytest -q`.
 set -euo pipefail
@@ -30,6 +33,10 @@ python -m pytest -q -m "not slow" \
 echo
 echo "== smoke: quickstart example (reduced steps) =="
 QUICKSTART_STEPS="${QUICKSTART_STEPS:-60}" python examples/quickstart.py
+
+echo
+echo "== smoke: sharded store-and-forward sync (N=4, simulated network) =="
+python examples/sharded_sync.py
 
 echo
 echo "== smoke: 1F1B pipeline quickstart (2 stages, int8 wire) =="

@@ -13,6 +13,8 @@ from repro.api.messages import (  # noqa: F401
     Message,
     MESSAGE_TYPES,
     ScoreMsg,
+    ShardReducedMsg,
+    ShardUploadMsg,
     WeightUploadMsg,
     message_for_key,
 )
@@ -21,12 +23,14 @@ from repro.api.phases import (  # noqa: F401
     EpochState,
     OverlappedTrainingSharing,
     Phase,
+    ReduceAuditPhase,
     SharingPhase,
     SyncPhase,
     TrainingPhase,
     ValidationPhase,
     default_phases,
     overlapped_phases,
+    sharded_phases,
 )
 from repro.api.swarm import Swarm  # noqa: F401
 from repro.api.transport import (  # noqa: F401

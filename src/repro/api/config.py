@@ -26,6 +26,12 @@ class SwarmConfig:
     compress: bool = True
     bottleneck_dim: int = 16
     share_codec: str = "int8"         # compressed-sharing stage codec
+    # weight-exchange path for sharing+sync: "dense" is the seed-exact
+    # golden oracle (full vectors through the store, butterfly reduced
+    # centrally in-process); "sharded" runs the reduce as per-miner
+    # store-and-forward shard exchanges over the transport (§5.1-5.3,
+    # KeySchema v2) — same merged anchors, honest per-link bytes
+    sync_mode: str = "dense"
     # backward-wire codec for TrainingPhase gradient hand-offs: "none" keeps
     # the seed trajectory bit-exact; "int8" ships blockwise-int8 gradient
     # codes through the store (paper's symmetric compression — a *different*
@@ -49,6 +55,15 @@ class SwarmConfig:
         assert self.wire_codec in ("none", "int8"), self.wire_codec
         assert self.pipeline_schedule in ("gpipe", "1f1b"), \
             self.pipeline_schedule
+        assert self.sync_mode in ("dense", "sharded"), self.sync_mode
+        # sharded sync needs a codec whose encode commutes with
+        # block-aligned slicing (topk is global over the vector) — fail at
+        # construction, not mid-epoch in SharingPhase
+        if self.sync_mode == "sharded":
+            from repro.core.compression import SLICEABLE_CODECS
+            assert self.share_codec in SLICEABLE_CODECS, \
+                (f"share_codec {self.share_codec!r} cannot shard "
+                 f"losslessly under sync_mode='sharded'")
 
     def pipeline_spec(self):
         """Mint the on-mesh ``PipelineSpec`` these knobs describe (schedule,
@@ -77,3 +92,5 @@ class EpochStats:
     clasp: Optional[clasp.ClaspReport]
     validation: list
     emissions: dict[int, float]
+    # store-side reduce audits (sharded sync only; ReduceAuditPhase)
+    reduce_audits: list = dataclasses.field(default_factory=list)

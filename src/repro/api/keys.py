@@ -16,10 +16,26 @@ byte accounting and garbage-collection prefixes are unchanged):
   weights/ep{E}/s{S}/merged              post-butterfly DiLoCo anchor
   scores/ep{E}/v{V}/m{U}                 validator V's score for miner U
 
+Version 2 — sharded butterfly sync (§5.1): adds shard-level keys so the
+butterfly reduce runs as per-miner store-and-forward actions instead of a
+central in-process loop.  Every v1 key is still minted byte-identically and
+still parses; the additions are
+
+  weights/ep{E}/s{S}/m{U}/shard{K}            miner U's upload of shard K
+  weights/ep{E}/s{S}/shard{K}/reduced/m{R}    reducer R's reduced copy of
+                                              shard K (two per shard: the
+                                              §5.2 redundancy)
+
+The two new kinds cannot collide with v1: the v1 weight-upload pattern is
+anchored (`m{U}$`), and the reduced-copy key's second-to-last segment is
+``shard{K}``/``reduced``, never ``m{U}``.
+
 Versioning: a ``KeySchema`` is constructed at a pinned ``version``; bumping
 the layout means adding a new version branch here (and a migration note in
 docs/API.md) — never editing v1 in place, because validator replay and the
 §5.3 transfer analysis both depend on historical keys staying parseable.
+Minting a v2-only kind from a v1 schema raises ``ValueError`` (a sharded
+run against a v1 store is a config error, not a silent new layout).
 """
 from __future__ import annotations
 
@@ -27,7 +43,7 @@ import dataclasses
 import re
 
 SCHEMA_VERSION = 1
-SUPPORTED_VERSIONS = (1,)
+SUPPORTED_VERSIONS = (1, 2)
 
 # namespaces (the first path segment; StateStore accounts bytes per namespace)
 NS_ACTIVATIONS = "activations"
@@ -47,6 +63,17 @@ _V1_PATTERNS = (
         r"^weights/ep(?P<epoch>\d+)/s(?P<stage>\d+)/m(?P<uid>\d+)$")),
     ("score", re.compile(
         r"^scores/ep(?P<epoch>\d+)/v(?P<validator>\d+)/m(?P<uid>\d+)$")),
+)
+
+# v2 additions are tried before the v1 patterns (they are strictly more
+# specific — extra path segments — so order only matters for error text)
+_V2_PATTERNS = (
+    ("shard_upload", re.compile(
+        r"^weights/ep(?P<epoch>\d+)/s(?P<stage>\d+)/m(?P<uid>\d+)"
+        r"/shard(?P<shard>\d+)$")),
+    ("shard_reduced", re.compile(
+        r"^weights/ep(?P<epoch>\d+)/s(?P<stage>\d+)/shard(?P<shard>\d+)"
+        r"/reduced/m(?P<reducer>\d+)$")),
 )
 
 
@@ -90,6 +117,26 @@ class KeySchema:
     def anchor(self, epoch: int, stage: int) -> str:
         return f"weights/ep{epoch}/s{stage}/merged"
 
+    # -- weight plane, shard-level (version 2, §5.1 sharded uploads) -----
+
+    def _require_v2(self, kind: str) -> None:
+        if self.version < 2:
+            raise ValueError(
+                f"{kind} keys need KeySchema version >= 2 "
+                f"(this schema is v{self.version}); construct the "
+                f"transport with KeySchema(version=2) for sharded sync")
+
+    def shard_upload(self, epoch: int, stage: int, uid: int,
+                     shard: int) -> str:
+        self._require_v2("shard_upload")
+        return f"weights/ep{epoch}/s{stage}/m{uid}/shard{shard}"
+
+    def shard_reduced(self, epoch: int, stage: int, shard: int,
+                      reducer_uid: int) -> str:
+        self._require_v2("shard_reduced")
+        return (f"weights/ep{epoch}/s{stage}/shard{shard}"
+                f"/reduced/m{reducer_uid}")
+
     # -- score plane -----------------------------------------------------
 
     def score(self, epoch: int, validator_uid: int, miner_uid: int) -> str:
@@ -103,12 +150,21 @@ class KeySchema:
     def weights_prefix(self, epoch: int) -> str:
         return f"weights/ep{epoch}"
 
+    def stage_weights_prefix(self, epoch: int, stage: int) -> str:
+        """All weight-plane keys of one (epoch, stage) — the store-side
+        reduce audit walks this prefix."""
+        return f"weights/ep{epoch}/s{stage}"
+
     # -- parsing ---------------------------------------------------------
 
     def parse(self, key: str) -> ParsedKey:
-        """Invert a v1 key back to (kind, fields); raises ValueError on
-        keys outside the schema — audit tooling uses this to walk a store."""
-        for kind, pat in _V1_PATTERNS:
+        """Invert a key back to (kind, fields); raises ValueError on keys
+        outside the schema — audit tooling uses this to walk a store.  A v2
+        schema parses v1 keys unchanged (historical stores stay walkable);
+        a v1 schema rejects v2 shard keys."""
+        patterns = _V1_PATTERNS if self.version < 2 \
+            else _V2_PATTERNS + _V1_PATTERNS
+        for kind, pat in patterns:
             m = pat.match(key)
             if m:
                 return ParsedKey(kind, {k: int(v)

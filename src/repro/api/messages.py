@@ -10,6 +10,10 @@ The set mirrors the paper's traffic planes:
   ActivationMsg    forward wire codes (plus pipeline-entry tokens)
   GradientMsg      backward wire gradients
   WeightUploadMsg  compressed weight uploads (sharing stage, §2.1)
+  ShardUploadMsg   one shard of a miner's weight vector (§5.1 sharded
+                   sharing; KeySchema v2)
+  ShardReducedMsg  one reducer's reduced copy of a shard (§5.2 redundancy;
+                   KeySchema v2)
   AnchorMsg        merged per-stage anchor after butterfly + DiLoCo outer
   ScoreMsg         validator scores feeding the incentive ledger (§3)
 """
@@ -79,6 +83,41 @@ class WeightUploadMsg:
 
 
 @dataclasses.dataclass(frozen=True)
+class ShardUploadMsg:
+    """One contiguous shard of a qualifying miner's flattened weight vector
+    (sharded sharing, §5.1).  Shard bounds are plan-determined, not part of
+    the key: the butterfly plan is reconstructible from (epoch, stage,
+    swarm seed), and the store-side audit only needs shard *identity*."""
+    epoch: int
+    stage: int
+    miner_uid: int
+    shard: int
+    codec: str = dataclasses.field(default="int8", compare=False)
+
+    def key(self, schema: KeySchema) -> str:
+        return schema.shard_upload(self.epoch, self.stage, self.miner_uid,
+                                   self.shard)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardReducedMsg:
+    """Reducer ``reducer_uid``'s masked-mean copy of shard ``shard`` —
+    each shard gets two of these (the §5.2 redundancy the agreement
+    matrix cross-checks).  Reduced copies always ride fp32 (codec
+    "none"): they are the consensus artifact the anchor is assembled
+    from, and quantizing them a second time would compound codec error."""
+    epoch: int
+    stage: int
+    shard: int
+    reducer_uid: int
+    codec: str = dataclasses.field(default="none", compare=False)
+
+    def key(self, schema: KeySchema) -> str:
+        return schema.shard_reduced(self.epoch, self.stage, self.shard,
+                                    self.reducer_uid)
+
+
+@dataclasses.dataclass(frozen=True)
 class AnchorMsg:
     """The merged per-stage anchor every miner downloads at full sync."""
     epoch: int
@@ -99,11 +138,11 @@ class ScoreMsg:
         return schema.score(self.epoch, self.validator_uid, self.miner_uid)
 
 
-Message = Union[ActivationMsg, GradientMsg, WeightUploadMsg, AnchorMsg,
-                ScoreMsg]
+Message = Union[ActivationMsg, GradientMsg, WeightUploadMsg, ShardUploadMsg,
+                ShardReducedMsg, AnchorMsg, ScoreMsg]
 
-MESSAGE_TYPES = (ActivationMsg, GradientMsg, WeightUploadMsg, AnchorMsg,
-                 ScoreMsg)
+MESSAGE_TYPES = (ActivationMsg, GradientMsg, WeightUploadMsg, ShardUploadMsg,
+                 ShardReducedMsg, AnchorMsg, ScoreMsg)
 
 
 def message_for_key(key: str, schema: KeySchema) -> Message:
@@ -118,6 +157,11 @@ def message_for_key(key: str, schema: KeySchema) -> Message:
         return GradientMsg(f["epoch"], f["tick"], f["stage"], f["uid"])
     if parsed.kind == "weights":
         return WeightUploadMsg(f["epoch"], f["stage"], f["uid"])
+    if parsed.kind == "shard_upload":
+        return ShardUploadMsg(f["epoch"], f["stage"], f["uid"], f["shard"])
+    if parsed.kind == "shard_reduced":
+        return ShardReducedMsg(f["epoch"], f["stage"], f["shard"],
+                               f["reducer"])
     if parsed.kind == "anchor":
         return AnchorMsg(f["epoch"], f["stage"])
     if parsed.kind == "score":

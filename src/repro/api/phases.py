@@ -10,9 +10,19 @@ panels, partition faults) without touching the core loop:
   ValidationPhase  validators replay tracked miners from their sync
                    snapshots (runs *before* merge: replay starts from the
                    pre-merge snapshot, exactly as the seed did)
-  SharingPhase     qualifying miners upload codec-compressed weights
+  SharingPhase     qualifying miners upload codec-compressed weights —
+                   dense full vectors, or per-shard payloads when
+                   ``SwarmConfig.sync_mode == "sharded"`` (§5.1)
   SyncPhase        butterfly all-reduce + DiLoCo outer step + anchor
-                   download for everyone (incl. joiners)
+                   download for everyone (incl. joiners).  Dense mode
+                   reduces centrally in-process (the golden oracle);
+                   sharded mode runs the reduce as per-miner
+                   store-and-forward actions over the transport
+                   (``ButterflyExecutor``), so per-link byte accounting
+                   reproduces the §5.3 closed form 4W + 2W/N
+  ReduceAuditPhase sharded only: validators rebuild the agreement matrix
+                   from the store's redundant reduced copies (trustless
+                   tamper detection from wire artifacts alone)
 
 Determinism contract: with ``InProcessTransport`` the default timeline
 reproduces the seed trajectory bit-exactly — every RNG draw (pathway
@@ -58,8 +68,12 @@ class EpochState:
     qualified: dict[int, list] = dataclasses.field(default_factory=dict)
     uploads: dict[int, dict[int, np.ndarray]] = dataclasses.field(
         default_factory=dict)
+    # sharded-sync handoff: stage -> store-and-forward executor (the plan
+    # rides on it); dense runs leave this empty
+    executors: dict[int, Any] = dataclasses.field(default_factory=dict)
     merged_stages: int = 0
     agreement: dict[int, np.ndarray] = dataclasses.field(default_factory=dict)
+    reduce_audits: list = dataclasses.field(default_factory=list)
 
 
 @runtime_checkable
@@ -171,7 +185,14 @@ class ValidationPhase:
 
 class SharingPhase:
     """Compressed sharing (§2.1): qualifying miners (B_m >= B_min, quorum)
-    upload codec-compressed weight vectors within their layer."""
+    upload codec-compressed weight vectors within their layer.
+
+    ``sync_mode="sharded"`` uploads per-shard payloads on the butterfly
+    plan's (block-aligned) bounds instead of one dense vector — same bytes
+    on the wire, but addressable at shard granularity so the reduce can be
+    store-and-forward.  RNG order matches the dense branch (weights read,
+    then fault corruption, in qualifying order), so fault-free trajectories
+    are unchanged."""
     name = "sharing"
 
     def run(self, swarm, state: EpochState) -> None:
@@ -188,70 +209,148 @@ class SharingPhase:
                     if m.batches_done >= S.b_min]
             if len(qual) < 2:
                 continue
-            uploads: dict[int, np.ndarray] = {}
-            with swarm.transport.parallel():   # distinct links: overlap
-                for idx, m in enumerate(qual):
-                    vec = m.weights_vector()
-                    vec = swarm.faults.corrupt_weights(m.uid, vec)
-                    payload = compression.encode(jnp.asarray(vec),
-                                                 S.share_codec)
-                    swarm.transport.publish(
-                        WeightUploadMsg(state.epoch, s, m.uid,
-                                        codec=S.share_codec),
-                        payload, actor=m.actor)
-                    uploads[idx] = np.asarray(
-                        compression.decode(payload, vec.shape[0]))
-            state.qualified[s] = qual
-            state.uploads[s] = uploads
+            if S.sync_mode == "sharded":
+                self._share_sharded(swarm, state, s, qual)
+            else:
+                self._share_dense(swarm, state, s, qual)
+
+    def _share_dense(self, swarm, state: EpochState, s: int,
+                     qual: list) -> None:
+        S = swarm.config
+        uploads: dict[int, np.ndarray] = {}
+        with swarm.transport.parallel():   # distinct links: overlap
+            for idx, m in enumerate(qual):
+                vec = m.weights_vector()
+                vec = swarm.faults.corrupt_weights(m.uid, vec)
+                payload = compression.encode(jnp.asarray(vec),
+                                             S.share_codec)
+                swarm.transport.publish(
+                    WeightUploadMsg(state.epoch, s, m.uid,
+                                    codec=S.share_codec),
+                    payload, actor=m.actor)
+                uploads[idx] = np.asarray(
+                    compression.decode(payload, vec.shape[0]))
+        state.qualified[s] = qual
+        state.uploads[s] = uploads
+
+    def _share_sharded(self, swarm, state: EpochState, s: int,
+                       qual: list) -> None:
+        S = swarm.config
+        assert S.share_codec in compression.SLICEABLE_CODECS, \
+            f"share_codec {S.share_codec!r} cannot shard losslessly"
+        vec0 = qual[0].weights_vector()
+        align = compression.INT8_BLOCK if S.share_codec == "int8" else 1
+        plan = butterfly.make_plan(len(qual), int(vec0.shape[0]),
+                                   seed=S.seed + state.epoch * 131 + s,
+                                   align=align)
+        ex = butterfly.ButterflyExecutor(
+            plan, swarm.transport, epoch=state.epoch, stage=s,
+            uids=[m.uid for m in qual], codec=S.share_codec)
+        with swarm.transport.parallel():   # distinct links: overlap
+            for idx, m in enumerate(qual):
+                vec = vec0 if idx == 0 else m.weights_vector()
+                vec = swarm.faults.corrupt_weights(m.uid, vec)
+                ex.upload_vector(idx, vec, actor=m.actor)
+        state.qualified[s] = qual
+        state.executors[s] = ex
 
 
 class SyncPhase:
     """Butterfly all-reduce per layer (agreement matrix exposes tamperers),
     DiLoCo outer Nesterov step on the per-stage anchor, then everyone —
-    stragglers and joiners included — downloads the anchor."""
+    stragglers and joiners included — downloads the anchor.
+
+    Dense mode reduces the decoded uploads centrally in-process (the
+    golden oracle).  Sharded mode executes the same reduce as per-miner
+    store-and-forward actions: each qualifying miner downloads all N
+    copies of its assigned shards, masked-merges them and re-uploads its
+    reduced copy — then the anchor is assembled from the redundant copies
+    in the store.  Anchors match the dense oracle to float equality
+    (block-aligned shard codes), and per-miner link bytes reproduce the
+    §5.3 closed form 4W + 2W/N."""
     name = "sync"
 
     def run(self, swarm, state: EpochState) -> None:
-        S = swarm.config
         if not state.merge_quorum:
             return
         for s, qual in state.qualified.items():
-            uploads = state.uploads[s]
-            plan = butterfly.make_plan(len(qual), uploads[0].shape[0],
-                                       seed=S.seed + state.epoch * 131 + s)
-            # a weight-tampering miner also reduces dishonestly: its merged
-            # shard copies deviate, which is what the agreement matrix
-            # exposes (paper Fig 7a)
-            tamper = {idx: swarm.faults.behavior(m.uid).tamper_weights
-                      for idx, m in enumerate(qual)
-                      if swarm.faults.behavior(m.uid).tamper_weights > 0}
-            copies = butterfly.reduce_with_copies(plan, uploads,
-                                                  tamper=tamper or None)
-            state.agreement[s] = butterfly.agreement_matrix(plan, copies)
-            merged, _, _ = butterfly.reduce_shards(plan, uploads)
-            # --- DiLoCo outer step on the per-stage anchor ---
-            _, unravel = ravel_pytree(
-                jax.tree.map(lambda x: x.astype(jnp.float32),
-                             swarm.anchors[s]))
-            avg = unravel(jnp.asarray(merged))
-            swarm.outer[s] = diloco.outer_update(
-                swarm.outer[s], avg, outer_lr=S.outer_lr,
-                outer_momentum=S.outer_momentum)
-            swarm.anchors[s] = jax.tree.map(
-                lambda a, p: a.astype(p.dtype), swarm.outer[s].anchor,
-                swarm.anchors[s])
-            # --- full sync: every miner (incl. stragglers/joiners) downloads
-            anchor_vec, _ = ravel_pytree(
-                jax.tree.map(lambda x: x.astype(jnp.float32),
-                             swarm.anchors[s]))
-            msg = AnchorMsg(state.epoch, s)
-            swarm.transport.publish(msg, np.asarray(anchor_vec),
-                                    actor="orchestrator")
-            with swarm.transport.parallel():
-                for m in swarm.stage_miners(s):
-                    vec = swarm.transport.fetch(msg, actor=m.actor)
-                    m.load_weights_vector(vec)
-            state.merged_stages += 1
+            if s in state.executors:
+                merged = self._reduce_sharded(swarm, state, s, qual)
+            else:
+                merged = self._reduce_dense(swarm, state, s, qual)
+            self._outer_step_and_full_sync(swarm, state, s, merged)
+
+    def _reduce_dense(self, swarm, state: EpochState, s: int,
+                      qual: list) -> np.ndarray:
+        S = swarm.config
+        uploads = state.uploads[s]
+        plan = butterfly.make_plan(len(qual), uploads[0].shape[0],
+                                   seed=S.seed + state.epoch * 131 + s)
+        # a weight-tampering miner also reduces dishonestly: its merged
+        # shard copies deviate, which is what the agreement matrix
+        # exposes (paper Fig 7a)
+        tamper = {idx: swarm.faults.behavior(m.uid).tamper_weights
+                  for idx, m in enumerate(qual)
+                  if swarm.faults.behavior(m.uid).tamper_weights > 0}
+        copies = butterfly.reduce_with_copies(plan, uploads,
+                                              tamper=tamper or None)
+        state.agreement[s] = butterfly.agreement_matrix(plan, copies)
+        merged, _, _ = butterfly.reduce_shards(plan, uploads)
+        return merged
+
+    def _reduce_sharded(self, swarm, state: EpochState, s: int,
+                        qual: list) -> np.ndarray:
+        ex = state.executors[s]
+        # every reducer's download->merge->re-upload rides its own link;
+        # distinct links overlap on the simulated clock
+        with swarm.transport.parallel():
+            for idx, m in enumerate(qual):
+                tamper = swarm.faults.behavior(m.uid).tamper_weights
+                m.run_reduce(ex, idx, tamper=tamper if tamper > 0 else 0.0)
+        merged, _, _ = ex.collect(actor="orchestrator")
+        state.agreement[s] = ex.last_agreement   # computed inside collect
+        return merged
+
+    def _outer_step_and_full_sync(self, swarm, state: EpochState, s: int,
+                                  merged: np.ndarray) -> None:
+        S = swarm.config
+        # --- DiLoCo outer step on the per-stage anchor ---
+        _, unravel = ravel_pytree(
+            jax.tree.map(lambda x: x.astype(jnp.float32),
+                         swarm.anchors[s]))
+        avg = unravel(jnp.asarray(merged))
+        swarm.outer[s] = diloco.outer_update(
+            swarm.outer[s], avg, outer_lr=S.outer_lr,
+            outer_momentum=S.outer_momentum)
+        swarm.anchors[s] = jax.tree.map(
+            lambda a, p: a.astype(p.dtype), swarm.outer[s].anchor,
+            swarm.anchors[s])
+        # --- full sync: every miner (incl. stragglers/joiners) downloads
+        anchor_vec, _ = ravel_pytree(
+            jax.tree.map(lambda x: x.astype(jnp.float32),
+                         swarm.anchors[s]))
+        msg = AnchorMsg(state.epoch, s)
+        swarm.transport.publish(msg, np.asarray(anchor_vec),
+                                actor="orchestrator")
+        with swarm.transport.parallel():
+            for m in swarm.stage_miners(s):
+                vec = swarm.transport.fetch(msg, actor=m.actor)
+                m.load_weights_vector(vec)
+        state.merged_stages += 1
+
+
+class ReduceAuditPhase:
+    """Sharded-sync audit (runs after the merge): each validator rebuilds
+    the shard agreement matrix from the store's redundant reduced copies —
+    tampering reducers are flagged from wire artifacts alone, no miner
+    state or plan reconstruction needed (§5.2, Fig 7a)."""
+    name = "reduce_audit"
+
+    def run(self, swarm, state: EpochState) -> None:
+        for s in sorted(state.executors):
+            for v in swarm.validators:
+                state.reduce_audits.append(
+                    v.audit_reduce(state.epoch, s))
 
 
 class OverlappedTrainingSharing:
@@ -291,6 +390,14 @@ def overlapped_phases() -> list[Phase]:
     """Async scenario: training + sharing overlap on the simulated clock;
     validation still precedes the merge (SyncPhase applies the uploads)."""
     return [OverlappedTrainingSharing(), ValidationPhase(), SyncPhase()]
+
+
+def sharded_phases() -> list[Phase]:
+    """Store-and-forward timeline (``sync_mode="sharded"``): the default
+    timeline plus the post-merge store-side reduce audit.  Sharing/Sync
+    branch on the config, so the phase objects themselves are the same."""
+    return [TrainingPhase(), ValidationPhase(), SharingPhase(), SyncPhase(),
+            ReduceAuditPhase()]
 
 
 class EpochDriver:
@@ -338,6 +445,7 @@ class EpochDriver:
             clasp=report,
             validation=state.validation,
             emissions=emissions,
+            reduce_audits=state.reduce_audits,
         )
         swarm.history.append(stats)
         swarm.epoch += 1

@@ -23,7 +23,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.api.config import EpochStats, SwarmConfig
-from repro.api.phases import EpochDriver, Phase
+from repro.api.keys import KeySchema
+from repro.api.phases import EpochDriver, Phase, sharded_phases
 from repro.api.transport import InProcessTransport, Transport
 from repro.configs.base import ModelConfig, TrainConfig
 from repro.core import diloco
@@ -43,7 +44,17 @@ class Swarm:
                  driver: Optional[EpochDriver] = None):
         self.cfg = model_cfg
         self.config = config
-        self.transport = transport or InProcessTransport()
+        if transport is None:
+            # sharded sync mints shard-level keys: needs KeySchema v2
+            schema = KeySchema(version=2) \
+                if config.sync_mode == "sharded" else KeySchema()
+            transport = InProcessTransport(schema=schema)
+        elif config.sync_mode == "sharded" and transport.schema.version < 2:
+            raise ValueError(
+                "sync_mode='sharded' needs a KeySchema v2 transport "
+                f"(got v{transport.schema.version}); construct it with "
+                "schema=KeySchema(version=2)")
+        self.transport = transport
         self.faults = faults or FaultModel({}, seed=config.seed)
         self.spec = sm.SwarmModelSpec(model_cfg, config.n_stages,
                                       config.compress, config.bottleneck_dim)
@@ -53,7 +64,11 @@ class Swarm:
         self.corpus = SyntheticCorpus(DataConfig(
             vocab_size=model_cfg.vocab_size, seq_len=config.seq_len,
             batch_size=config.batch_size, seed=config.seed))
-        self.driver = driver or EpochDriver()
+        if driver is None:
+            # the sharded timeline appends the store-side reduce audit
+            driver = EpochDriver(sharded_phases()) \
+                if config.sync_mode == "sharded" else EpochDriver()
+        self.driver = driver
         self.global_tick = 0
         self.epoch = 0
 

@@ -29,6 +29,10 @@ from repro.kernels import ops
 
 CODECS = ("none", "bf16", "int8", "topk")
 INT8_BLOCK = 256
+# codecs whose encode commutes with INT8_BLOCK-aligned slicing (per-shard
+# codes bit-equal slices of a whole-vector encode) — the sharded butterfly
+# sync's parity precondition; topk is global over the vector
+SLICEABLE_CODECS = ("none", "bf16", "int8")
 
 
 def encode(vec: jax.Array, codec: str, topk_frac: float = 1 / 64) -> dict:

@@ -153,11 +153,23 @@ def int8_wire_roundtrip(z):
 # ---------------------------------------------------------------------------
 
 
-def shard_merge(shards, valid):
-    if _use_pallas():
+@functools.lru_cache(maxsize=None)
+def _shard_merge_fn(use_pallas: bool, interpret: bool):
+    if use_pallas:
         from repro.kernels import shard_merge as sm
-        return sm.shard_merge(shards, valid, interpret=_interpret())
-    return ref.shard_merge(shards, valid)
+        return jax.jit(functools.partial(sm.shard_merge,
+                                         interpret=interpret))
+    return jax.jit(ref.shard_merge)
+
+
+def shard_merge(shards, valid):
+    """Masked shard mean — the butterfly reduce inner loop.  Jit-cached:
+    the store-and-forward executor calls this once per shard, and a plan's
+    near-equal bounds produce at most two distinct shard widths, so every
+    reduce after the first two hits the compile cache."""
+    if _use_pallas():
+        return _shard_merge_fn(True, _interpret())(shards, valid)
+    return _shard_merge_fn(False, False)(shards, valid)
 
 
 # ---------------------------------------------------------------------------

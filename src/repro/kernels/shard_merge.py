@@ -5,6 +5,11 @@ miners whose upload is missing/invalid (paper §5.2 failure handling).  The
 kernel tiles the shard into VMEM panels and computes the masked mean in one
 pass: sum over the miner axis with a fp32 validity mask, divided by the
 valid count.  Not differentiated (merge runs outside the autodiff graph).
+
+Callers go through the ``kernels.ops.shard_merge`` dispatch (compiled here
+on TPU, ``ref.shard_merge`` oracle on CPU, ``REPRO_FORCE_PALLAS_INTERPRET=1``
+honored); the ``interpret`` flag below exists for the kernel equivalence
+suite only, like every other kernel module.
 """
 from __future__ import annotations
 

@@ -33,6 +33,18 @@ class WorkItem:
     did_backward: bool = False
 
 
+@dataclasses.dataclass
+class ReduceWorkItem:
+    """One butterfly reduce unit (sharded sync): the shard-upload keys this
+    miner downloaded and the reduced-copy key it re-uploaded.  Logged so
+    CLASP/replay cover reduce work the same way forward/backward work is
+    covered — a validator recomputes the masked merge from the same store
+    inputs and compares against the uploaded copy."""
+    shard: int
+    in_keys: tuple[str, ...]
+    out_key: str
+
+
 class Miner:
     def __init__(self, uid: int, stage: int, spec: sm.SwarmModelSpec,
                  params: Any, transport: "Transport",
@@ -51,6 +63,7 @@ class Miner:
         self.inner_step = jnp.zeros((), jnp.int32)
         self.batches_done = 0
         self.work_log: list[WorkItem] = []
+        self.reduce_log: list[ReduceWorkItem] = []
         self._pending: dict[str, Any] = {}     # sample_key -> input (for bwd)
 
     # ------------------------------------------------------------------
@@ -101,6 +114,18 @@ class Miner:
             jax.tree.map(lambda x: x.astype(jnp.float32), self.params))
         return np.asarray(flat)
 
+    def run_reduce(self, executor, idx: int, tamper: float = 0.0) -> int:
+        """Perform this miner's assigned butterfly reduce work through the
+        store (``executor`` is a ``core.butterfly.ButterflyExecutor``; this
+        miner is plan index ``idx``).  Every download/upload is charged to
+        this miner's link.  ``tamper`` is the fault-injection hook (a
+        deceptive reducer offsets its copies).  Returns shards reduced."""
+        done = executor.run_reducer(idx, actor=self.actor, tamper=tamper)
+        self.reduce_log.extend(
+            ReduceWorkItem(a.shard, a.upload_keys, a.reduced_key)
+            for a in done)
+        return len(done)
+
     def load_weights_vector(self, vec: np.ndarray) -> None:
         flat, unravel = ravel_pytree(
             jax.tree.map(lambda x: x.astype(jnp.float32), self.params))
@@ -111,6 +136,7 @@ class Miner:
     def reset_epoch(self) -> None:
         self.batches_done = 0
         self.work_log = []
+        self.reduce_log = []
         self._pending = {}
 
     def snapshot(self) -> dict:

@@ -6,6 +6,16 @@ inputs, backward with the same gradients), comparing its own outputs to the
 miner's uploads by cosine similarity.  Deviation below threshold => the
 work is rejected; the epoch score S_m^n is the count of *validated*
 backward passes.  Miners never know when they are tracked.
+
+Sharded sync (§5.1-5.3, KeySchema v2) adds two reduce-audit paths:
+
+  * ``audit_reduce``  — trustless: rebuilds the Fig 7a agreement matrix
+    purely from the store's redundant reduced copies (shard identity and
+    reducer uids are in the keys), flagging any reducer out of consensus
+    with its partners.  No miner state or plan needed.
+  * ``replay_reduce`` — replays a tracked miner's ``reduce_log`` the same
+    way forward/backward work is replayed: recompute the masked merge from
+    the logged store inputs, compare to the uploaded reduced copy.
 """
 from __future__ import annotations
 
@@ -17,7 +27,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.common import cosine_similarity
+from repro.core import butterfly, compression
 from repro.core.incentives import IncentiveLedger
+from repro.kernels import ops
 from repro.runtime import stage_model as sm
 from repro.runtime.miner import Miner
 
@@ -25,6 +37,20 @@ if TYPE_CHECKING:
     from repro.api.transport import Transport
 
 COSINE_THRESHOLD = 0.99
+
+
+@dataclasses.dataclass
+class ReduceAuditResult:
+    """Store-side audit of one (epoch, stage) butterfly reduce."""
+    epoch: int
+    stage: int
+    uids: list          # reducer uids seen in the store, sorted
+    agreement: np.ndarray          # (len(uids), len(uids)), NaN = no shared shard
+    flagged: list       # uids whose mean partner agreement < 0.5
+
+    @property
+    def clean(self) -> bool:
+        return not self.flagged
 
 
 @dataclasses.dataclass
@@ -110,3 +136,59 @@ class Validator:
         self.results.append(result)
         self.ledger.record(miner.uid, epoch, result.score, t_now)
         return result
+
+    # ------------------------------------------------------------------
+    # sharded-sync reduce audits (§5.2 agreement, from wire artifacts)
+    # ------------------------------------------------------------------
+
+    def audit_reduce(self, epoch: int, stage: int) -> ReduceAuditResult:
+        """Flag tampering reducers from the store's redundant copies alone:
+        every shard has two independent reduced copies, so a deceptive
+        reducer disagrees with *all* of its partners (Fig 7a) — visible to
+        anyone who can read the store, which is the §5 trustless claim."""
+        uids, agree = butterfly.store_agreement(self.transport, epoch,
+                                                stage, actor=self.actor)
+        flagged = []
+        for i, uid in enumerate(uids):
+            others = agree[i][np.arange(len(uids)) != i]
+            if others.size and np.nanmean(others) < 0.5:
+                flagged.append(uid)
+        return ReduceAuditResult(epoch, stage, uids, agree, flagged)
+
+    def replay_reduce(self, miner: Miner) -> tuple[int, int, float]:
+        """Replay ``miner``'s logged reduce work: recompute each masked
+        merge from the same shard uploads and compare (cosine) to the
+        reduced copy the miner put on the wire.  Returns (checked, passed,
+        min_cosine) — the reduce-work analogue of ``validate_epoch``."""
+        checked = passed = 0
+        min_cos = 1.0
+        for item in miner.reduce_log:
+            blocks, valid = [], []
+            for key in item.in_keys:
+                if not self.transport.exists(key):
+                    blocks.append(None)
+                    valid.append(False)
+                    continue
+                payload = self.transport.get(key, actor=self.actor)
+                blocks.append(np.asarray(compression.decode(payload)))
+                valid.append(True)
+            if not any(valid):
+                # nothing to recompute from (inputs GC'd or fabricated):
+                # the work is unverifiable — score it as failed, don't crash
+                checked += 1
+                min_cos = -1.0
+                continue
+            width = next(b.shape[0] for b in blocks if b is not None)
+            stacked = np.stack([b if b is not None
+                                else np.zeros(width, np.float32)
+                                for b in blocks])
+            mine = np.asarray(ops.shard_merge(
+                jnp.asarray(stacked), jnp.asarray(np.array(valid))))
+            theirs = np.asarray(compression.decode(
+                self.transport.get(item.out_key, actor=self.actor)))
+            cos = float(cosine_similarity(jnp.asarray(mine),
+                                          jnp.asarray(theirs)))
+            checked += 1
+            min_cos = min(min_cos, cos)
+            passed += int(cos >= COSINE_THRESHOLD)
+        return checked, passed, min_cos

@@ -1,0 +1,377 @@
+"""Store-and-forward sharded butterfly sync (§5.1-5.3, KeySchema v2):
+
+key schema round-trips, shard-coverage properties, executor correctness,
+§5.3 byte accounting over SimulatedNetworkTransport, dense-vs-sharded
+anchor parity, and store-side tamper detection."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+try:        # the hypothesis property test skips alone, not the module
+    from hypothesis import given, settings, strategies as st
+except ImportError:                                   # pragma: no cover
+    given = None
+
+from repro.api import (
+    KeySchema,
+    NetworkModel,
+    ShardReducedMsg,
+    ShardUploadMsg,
+    SimulatedNetworkTransport,
+    Swarm,
+    SwarmConfig,
+    message_for_key,
+)
+from repro.configs import get, smoke_variant
+from repro.core import butterfly
+from repro.core.incentives import IncentiveLedger
+from repro.runtime.network import FaultModel, MinerBehavior
+from repro.runtime.validator import Validator
+
+
+# ---------------------------------------------------------------------------
+# KeySchema v2
+# ---------------------------------------------------------------------------
+
+V2_MESSAGES = [
+    ShardUploadMsg(3, stage=1, miner_uid=7, shard=12),
+    ShardReducedMsg(3, stage=1, shard=12, reducer_uid=5),
+]
+
+
+def test_v2_keys_layout():
+    ks = KeySchema(version=2)
+    assert ks.shard_upload(3, 1, 7, 12) == "weights/ep3/s1/m7/shard12"
+    assert ks.shard_reduced(3, 1, 12, 5) == \
+        "weights/ep3/s1/shard12/reduced/m5"
+    assert ks.stage_weights_prefix(3, 1) == "weights/ep3/s1"
+
+
+@pytest.mark.parametrize("msg", V2_MESSAGES, ids=lambda m: type(m).__name__)
+def test_v2_key_parse_inverts_mint(msg):
+    ks = KeySchema(version=2)
+    assert message_for_key(msg.key(ks), ks) == msg
+
+
+def test_v2_schema_still_mints_and_parses_v1_keys():
+    v1, v2 = KeySchema(version=1), KeySchema(version=2)
+    v1_keys = [v1.tokens(0, 2), v1.activation(0, 2, 1, 4),
+               v1.gradient(0, 2, 1, 4), v1.weight_upload(1, 0, 3),
+               v1.anchor(1, 0), v1.score(2, 1, 9)]
+    for key in v1_keys:
+        assert v2.parse(key) == v1.parse(key)
+    # v1 minting methods produce byte-identical keys under v2
+    assert v2.weight_upload(1, 0, 3) == v1.weight_upload(1, 0, 3)
+    assert v2.anchor(1, 0) == v1.anchor(1, 0)
+
+
+def test_v1_schema_rejects_v2_keys_and_minting():
+    v1 = KeySchema(version=1)
+    with pytest.raises(ValueError):
+        v1.shard_upload(0, 0, 0, 0)
+    with pytest.raises(ValueError):
+        v1.shard_reduced(0, 0, 0, 0)
+    with pytest.raises(ValueError):
+        v1.parse("weights/ep0/s0/m1/shard2")
+    with pytest.raises(ValueError):
+        v1.parse("weights/ep0/s0/shard2/reduced/m1")
+
+
+def test_shard_keys_cannot_shadow_v1_weight_upload():
+    # the v1 weights pattern is anchored: shard keys never parse as it
+    v2 = KeySchema(version=2)
+    assert v2.parse("weights/ep0/s0/m1").kind == "weights"
+    assert v2.parse("weights/ep0/s0/m1/shard2").kind == "shard_upload"
+
+
+def _assert_covers_once_per_copy(n, length, align):
+    """Every parameter index lands in exactly one shard, and every shard
+    is assigned to exactly the two miners of its pair — i.e. the shard
+    keys cover the vector once per redundant copy."""
+    plan = butterfly.make_plan(n, length, seed=0, align=align)
+    seen = np.zeros(length, np.int32)
+    for s in range(plan.n_shards):
+        lo, hi = plan.shard_bounds(s)
+        assert 0 <= lo <= hi <= length
+        if align > 1 and hi < length:
+            assert lo % align == 0 and hi % align == 0
+        seen[lo:hi] += 1
+    assert (seen == 1).all()
+    assignments = sum(len(plan.shards_of(m)) for m in range(n))
+    assert assignments == 2 * plan.n_shards
+
+
+@pytest.mark.parametrize("n,length,align", [
+    (2, 1, 1), (4, 997, 1), (5, 4096, 256), (6, 1000, 256),
+    (8, 300, 64), (3, 256, 256), (10, 5000, 256),
+])
+def test_shards_cover_vector_once_per_copy_sweep(n, length, align):
+    _assert_covers_once_per_copy(n, length, align)
+
+
+if given is not None:
+    @given(n=st.integers(2, 10), length=st.integers(1, 5000),
+           align=st.sampled_from([1, 64, 256]))
+    @settings(max_examples=60, deadline=None)
+    def test_shards_cover_vector_once_per_copy_property(n, length, align):
+        _assert_covers_once_per_copy(n, length, align)
+
+
+# ---------------------------------------------------------------------------
+# executor: correctness + §5.3 byte accounting
+# ---------------------------------------------------------------------------
+
+
+def _run_executor(n, length, codec="none", tamper=None, skip_upload=()):
+    tp = SimulatedNetworkTransport(NetworkModel.consumer(),
+                                   schema=KeySchema(version=2))
+    align = 256 if codec == "int8" else 1
+    plan = butterfly.make_plan(n, length, seed=0, align=align)
+    ex = butterfly.ButterflyExecutor(plan, tp, epoch=0, stage=0,
+                                     uids=list(range(n)), codec=codec)
+    vecs = {i: np.random.RandomState(i).randn(length).astype(np.float32)
+            for i in range(n)}
+    for i in range(n):
+        if i not in skip_upload:
+            ex.upload_vector(i, vecs[i], actor=f"miner{i}")
+    for i in range(n):
+        ex.run_reducer(i, actor=f"miner{i}",
+                       tamper=(tamper or {}).get(i, 0.0))
+    return tp, ex, vecs
+
+
+def test_executor_reproduces_central_reduce():
+    n, length = 5, 3000
+    tp, ex, vecs = _run_executor(n, length)
+    merged, valid, copies = ex.collect()
+    assert valid.all()
+    np.testing.assert_allclose(
+        merged, np.mean([vecs[i] for i in range(n)], axis=0), atol=1e-5)
+    # every shard has both redundant copies, and they agree
+    assert len(copies) == 2 * ex.plan.n_shards
+    agree = butterfly.agreement_matrix(ex.plan, copies)
+    assert np.nanmin(agree) == 1.0
+
+
+def test_executor_masks_missing_upload():
+    n, length = 4, 1000
+    tp, ex, vecs = _run_executor(n, length, skip_upload={2})
+    merged, valid, _ = ex.collect()
+    assert valid.all()                       # reducers alive: nothing lost
+    want = np.mean([vecs[i] for i in range(n) if i != 2], axis=0)
+    np.testing.assert_allclose(merged, want, atol=1e-5)
+
+
+@pytest.mark.parametrize("n", [4, 6, 8])
+def test_per_miner_bytes_match_closed_form(n):
+    """SimulatedNetworkTransport per-miner accounted bytes = 4W + 2W/N
+    within 5% (§5.3), fp32 payloads so W is unambiguous."""
+    length = 100_000
+    tp, ex, _ = _run_executor(n, length)
+    merged, _, _ = ex.collect(actor="orchestrator")
+    anchor_key = tp.schema.anchor(0, 0)
+    tp.put(anchor_key, merged, actor="orchestrator")
+    for i in range(n):
+        tp.get(anchor_key, actor=f"miner{i}")
+    w = length * 4
+    closed = 4 * w + 2 * w / n
+    rep = tp.link_report()
+    for i in range(n):
+        per = rep[f"miner{i}"]["up_bytes"] + rep[f"miner{i}"]["down_bytes"]
+        assert abs(per - closed) / closed < 0.05, (n, i, per, closed)
+
+
+def test_tampered_copy_does_not_poison_anchor():
+    """Consensus-weighted assembly: when a shard's two copies disagree,
+    collect() takes the copy from the reducer in better consensus, so a
+    single tamperer cannot poison the merged anchor — it still equals the
+    honest mean (= the dense oracle's merged vector)."""
+    n, length = 6, 1200
+    tp, ex, vecs = _run_executor(n, length, tamper={2: 0.5})
+    merged, valid, _ = ex.collect()
+    assert valid.all()
+    np.testing.assert_allclose(
+        merged, np.mean([vecs[i] for i in range(n)], axis=0), atol=1e-5)
+
+
+def test_store_agreement_flags_tampering_reducer():
+    n, length = 6, 1200
+    tp, ex, _ = _run_executor(n, length, tamper={2: 0.5})
+    uids, agree = butterfly.store_agreement(tp, 0, 0)
+    assert uids == list(range(n))
+    off = agree[2][np.arange(n) != 2]
+    assert np.nanmax(off) == 0.0             # disagrees with every partner
+    honest = [i for i in range(n) if i != 2]
+    sub = agree[np.ix_(honest, honest)]
+    assert np.nanmin(sub[~np.eye(n - 1, dtype=bool)]) == 1.0
+
+
+def test_store_agreement_isolates_stage_prefix():
+    """'weights/ep0/s1' is a plain string prefix of stage-12 keys: the
+    audit must filter on the parsed stage, not just the prefix walk."""
+    n, length = 4, 400
+    tp = SimulatedNetworkTransport(NetworkModel.consumer(),
+                                   schema=KeySchema(version=2))
+    for stage, tamper in ((1, {2: 0.5}), (12, None)):
+        plan = butterfly.make_plan(n, length, seed=0)
+        ex = butterfly.ButterflyExecutor(plan, tp, epoch=0, stage=stage,
+                                         uids=list(range(n)), codec="none")
+        for i in range(n):
+            ex.upload_vector(
+                i, np.random.RandomState(i).randn(length).astype(np.float32),
+                actor=f"miner{i}")
+        for i in range(n):
+            ex.run_reducer(i, actor=f"miner{i}",
+                           tamper=(tamper or {}).get(i, 0.0))
+    uids, agree = butterfly.store_agreement(tp, 0, 1)
+    assert uids == list(range(n))
+    assert np.nanmax(agree[2][np.arange(n) != 2]) == 0.0   # stage-1 tamperer
+    uids12, agree12 = butterfly.store_agreement(tp, 0, 12)
+    assert uids12 == list(range(n))
+    assert np.nanmin(agree12) == 1.0                       # stage 12 clean
+
+
+def test_replay_reduce_scores_missing_inputs_as_failed():
+    """A reduce item whose inputs vanished from the store (GC'd or
+    fabricated keys) is unverifiable — scored failed, never a crash."""
+    from repro.runtime.miner import ReduceWorkItem
+
+    tp = SimulatedNetworkTransport(NetworkModel.consumer(),
+                                   schema=KeySchema(version=2))
+
+    class _M:
+        reduce_log = [ReduceWorkItem(
+            0, ("weights/ep9/s0/m0/shard0", "weights/ep9/s0/m1/shard0"),
+            "weights/ep9/s0/shard0/reduced/m0")]
+
+    v = Validator(0, tp, IncentiveLedger(10.0))
+    checked, passed, min_cos = v.replay_reduce(_M())
+    assert (checked, passed) == (1, 0) and min_cos < 0.99
+
+
+def test_validator_replay_reduce_catches_tamper():
+    """Replaying the reduce log from store inputs: honest copies match,
+    a tampered copy misses the cosine threshold."""
+    from repro.runtime import stage_model as sm  # noqa: F401 (import check)
+
+    class _FakeMiner:
+        def __init__(self, uid, actor):
+            self.uid, self.actor = uid, actor
+            self.reduce_log = []
+
+        def run_reduce(self, executor, idx, tamper=0.0):
+            from repro.runtime.miner import ReduceWorkItem
+            done = executor.run_reducer(idx, actor=self.actor, tamper=tamper)
+            self.reduce_log.extend(
+                ReduceWorkItem(a.shard, a.upload_keys, a.reduced_key)
+                for a in done)
+
+    n, length = 4, 800
+    tp = SimulatedNetworkTransport(NetworkModel.consumer(),
+                                   schema=KeySchema(version=2))
+    plan = butterfly.make_plan(n, length, seed=0)
+    ex = butterfly.ButterflyExecutor(plan, tp, epoch=0, stage=0,
+                                     uids=list(range(n)), codec="none")
+    for i in range(n):
+        vec = np.random.RandomState(i).randn(length).astype(np.float32)
+        ex.upload_vector(i, vec, actor=f"miner{i}")
+    miners = [_FakeMiner(i, f"miner{i}") for i in range(n)]
+    for i, m in enumerate(miners):
+        m.run_reduce(ex, i, tamper=0.7 if i == 1 else 0.0)
+    v = Validator(0, tp, IncentiveLedger(10.0))
+    checked, passed, min_cos = v.replay_reduce(miners[0])
+    assert checked == n - 1 and passed == checked and min_cos > 0.99
+    checked, passed, min_cos = v.replay_reduce(miners[1])
+    assert checked == n - 1 and passed == 0 and min_cos < 0.99
+
+
+# ---------------------------------------------------------------------------
+# swarm-level: dense oracle parity + scenario audit
+# ---------------------------------------------------------------------------
+
+
+def _mcfg():
+    return dataclasses.replace(smoke_variant(get("llama3.2-1b")).model,
+                               n_layers=2)
+
+
+def _anchor_vecs(swarm):
+    import jax
+    import jax.numpy as jnp
+    from jax.flatten_util import ravel_pytree
+    return [np.asarray(ravel_pytree(jax.tree.map(
+        lambda x: x.astype(jnp.float32), a))[0]) for a in swarm.anchors]
+
+
+_BASE = dict(seed=0, n_stages=2, miners_per_stage=3, inner_steps=2,
+             b_min=0, validators=1)
+
+
+@pytest.fixture(scope="module")
+def parity_runs():
+    dense = Swarm.create(_mcfg(), SwarmConfig(**_BASE))
+    dense_stats = dense.run(2)
+    sharded = Swarm.create(_mcfg(),
+                           SwarmConfig(**_BASE, sync_mode="sharded"))
+    sharded_stats = sharded.run(2)
+    return dense, dense_stats, sharded, sharded_stats
+
+
+def test_sharded_anchors_match_dense_oracle(parity_runs):
+    """Acceptance: store-and-forward sync reproduces the dense merged
+    anchors to <= 1e-6 per stage (int8 share codec, block-aligned)."""
+    dense, dense_stats, sharded, sharded_stats = parity_runs
+    assert [s.merged_stages for s in sharded_stats] == \
+        [s.merged_stages for s in dense_stats]
+    assert sharded_stats[-1].merged_stages == 2
+    for d, s in zip(_anchor_vecs(dense), _anchor_vecs(sharded)):
+        assert np.abs(d - s).max() <= 1e-6
+
+
+def test_sharded_trajectory_matches_dense(parity_runs):
+    _, dense_stats, _, sharded_stats = parity_runs
+    assert [s.mean_loss for s in sharded_stats] == \
+        [s.mean_loss for s in dense_stats]
+    assert [s.b_eff for s in sharded_stats] == \
+        [s.b_eff for s in dense_stats]
+
+
+def test_sharded_sync_populates_store_and_logs(parity_runs):
+    _, _, sharded, sharded_stats = parity_runs
+    schema = sharded.transport.schema
+    kinds = {schema.parse(k).kind
+             for k in sharded.transport.keys("weights/")}
+    assert {"shard_upload", "shard_reduced", "anchor"} <= kinds
+    # no dense weight uploads in sharded mode
+    assert "weights" not in kinds
+    # reducers logged their work for replay
+    assert any(m.reduce_log for m in sharded.miners.values())
+    # clean audit: every stage audited, nobody flagged
+    audits = sharded_stats[-1].reduce_audits
+    assert {a.stage for a in audits} == {0, 1}
+    assert all(a.clean for a in audits)
+    # agreement matrices ride EpochStats exactly like the dense path
+    assert set(sharded_stats[-1].agreement) == {0, 1}
+
+
+def test_scenario_tampering_reducer_flagged_by_validator():
+    """Acceptance: a weight-tampering miner is flagged from the store's
+    redundant reduced copies alone (ReduceAuditPhase -> audit_reduce)."""
+    bad_uid = 1
+    faults = FaultModel({bad_uid: MinerBehavior(tamper_weights=0.5)}, seed=0)
+    swarm = Swarm.create(_mcfg(),
+                         SwarmConfig(**_BASE, sync_mode="sharded"),
+                         faults=faults)
+    stats = swarm.run(1)
+    audits = [a for a in stats[-1].reduce_audits if a.stage == 0]
+    assert audits and all(bad_uid in a.flagged for a in audits)
+    honest = [u for a in audits for u in a.uids if u != bad_uid]
+    assert all(u not in a.flagged for a in audits for u in honest)
+
+
+def test_sharded_swarm_rejects_v1_transport():
+    tp = SimulatedNetworkTransport(NetworkModel.consumer())   # v1 schema
+    with pytest.raises(ValueError, match="KeySchema v2"):
+        Swarm.create(_mcfg(), SwarmConfig(**_BASE, sync_mode="sharded"),
+                     transport=tp)
