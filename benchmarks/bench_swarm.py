@@ -1,6 +1,6 @@
 """§2.1 B_min/B_eff behaviour + §5.3 transfer analysis: swarm benchmark.
 
-Three sections:
+Four sections:
   * swarm_beff:      effective batch / stall rate as stragglers grow
                      (the orchestrator's robustness claim)
   * swarm_traffic:   store bytes per namespace for a reference run
@@ -8,6 +8,10 @@ Three sections:
     the in-process baseline, then simulated datacenter and consumer
     links, reporting simulated wall-clock, time-to-loss and per-link
     bytes (scenario-parameterised §5.3 transfer analysis)
+  * swarm_socket:    the reference swarm over a REAL socket (StoreServer
+    + SocketTransport, serde wire format), asserting the server-side
+    per-actor byte accounting equals the simulated transport's link
+    accounting and the trajectory is unchanged
 """
 from __future__ import annotations
 
@@ -118,11 +122,56 @@ def _overlap_section() -> None:
          f"loss_equal={results['sequential'][1]:.4f}")
 
 
+def _socket_section() -> None:
+    """Real sockets next to the simulated rows: same swarm, same seed, the
+    store behind a StoreServer (threaded here — identical wire format to
+    the separate-process deployment).  The §5.3 accounting parity is a
+    hard assertion: server-side per-actor bytes == simulated per-link
+    bytes, because both count StoreEntry.nbytes on the same calls."""
+    from repro.api import SocketTransport
+    from repro.runtime.store_server import StoreServer
+
+    sw = SwarmConfig(n_stages=3, miners_per_stage=2, inner_steps=8, b_min=2,
+                     batch_size=2, seq_len=32, validators=1, seed=4)
+    sim_tp = SimulatedNetworkTransport(NetworkModel.consumer())
+    sim_stats = Swarm.create(_mcfg(), sw, transport=sim_tp).run(2)
+
+    server = StoreServer().start()
+    try:
+        tp = SocketTransport(server.address)
+        sock_stats = Swarm.create(_mcfg(), sw, transport=tp).run(2)
+        report = tp.traffic_report()
+        wire = tp.wire_report()
+        real_clock = tp.elapsed_seconds()
+        tp.close()
+    finally:
+        server.stop()
+
+    # trajectory is transport-invariant, accounting is parity-exact
+    assert [s.mean_loss for s in sock_stats] == \
+        [s.mean_loss for s in sim_stats]
+    for actor, s in sim_tp.link_report().items():
+        assert s["up_bytes"] == report["by_actor_up"].get(actor, 0), actor
+        assert s["down_bytes"] == report["by_actor_down"].get(actor, 0), actor
+
+    payload = sum(report["by_actor_up"].values()) + \
+        sum(report["by_actor_down"].values())
+    on_wire = wire["up_bytes"] + wire["down_bytes"]
+    emit("swarm_socket/real_tcp", real_clock,
+         f"loss={sock_stats[-1].mean_loss:.3f}(=sim);"
+         f"payload={human_bytes(payload)};"
+         f"wire={human_bytes(on_wire)}"
+         f"(+{100.0 * (on_wire - payload) / max(payload, 1):.1f}% framing);"
+         f"requests={wire['requests']};"
+         f"per_actor_bytes=match_simulated")
+
+
 def run() -> None:
     _beff_section()
     _traffic_section()
     _transport_section()
     _overlap_section()
+    _socket_section()
 
 
 if __name__ == "__main__":

@@ -28,6 +28,13 @@ import sys
 import time
 import traceback
 
+# examples self-insert src/; the harness does the same so the smoke gate
+# (`python -m benchmarks.run --quick`) works without PYTHONPATH=src
+_SRC = os.path.abspath(
+    os.path.join(os.path.dirname(os.path.abspath(__file__)), "..", "src"))
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)
+
 MODULES = [
     "benchmarks.bench_convergence",
     "benchmarks.bench_butterfly",

@@ -1,0 +1,89 @@
+"""Multi-process swarm: orchestrator and store in SEPARATE processes.
+
+The paper's hub-and-spoke deployment (§2, Fig 6) finally crosses a real
+process boundary: a ``StoreServer`` child process owns the authoritative
+``StateStore`` behind a length-prefixed TCP socket, and the epoch loop
+runs unchanged over ``SocketTransport`` — every token batch, activation,
+int8 gradient code, weight shard, reduced copy, anchor and score is a
+``repro.api.serde`` frame on the wire, digested server-side.
+
+For both ``sync_mode="dense"`` and ``"sharded"`` (the store-and-forward
+butterfly reduce, whose shard traffic now genuinely transits the hub),
+the run must reproduce the ``InProcessTransport`` loss trajectory at the
+same seed — asserted below; exits non-zero on any mismatch.  smoke.sh
+runs this as the socket-path gate.
+
+    PYTHONPATH=src python examples/multiprocess_swarm.py
+"""
+import dataclasses
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.common import human_bytes
+
+EPOCHS = int(os.environ.get("MP_SWARM_EPOCHS", "2"))
+
+
+def main():
+    from repro.api import (InProcessTransport, KeySchema, SocketTransport,
+                           Swarm, SwarmConfig)
+    from repro.configs import get, smoke_variant
+    from repro.runtime.store_server import spawn_store_server
+
+    mcfg = dataclasses.replace(smoke_variant(get("llama3.2-1b")).model,
+                               n_layers=2)
+    base = SwarmConfig(seed=0, n_stages=2, miners_per_stage=2, inner_steps=2,
+                       b_min=1, batch_size=2, seq_len=16, validators=1)
+
+    proc, addr = spawn_store_server()
+    print(f"store server: pid {proc.pid} listening on {addr[0]}:{addr[1]} "
+          f"(orchestrator pid {os.getpid()})")
+    try:
+        for mode in ("dense", "sharded"):
+            cfg = dataclasses.replace(base, sync_mode=mode)
+            schema = KeySchema(version=2 if mode == "sharded" else 1)
+
+            with SocketTransport(addr, schema=schema) as tp:
+                tp.reset_store()           # one server, independent runs
+                remote = Swarm.create(mcfg, cfg, transport=tp)
+                remote_stats = remote.run(EPOCHS)
+                report = tp.traffic_report()
+                wire = tp.wire_report()
+
+            local = Swarm.create(mcfg, cfg,
+                                 transport=InProcessTransport(schema=schema))
+            local_stats = local.run(EPOCHS)
+
+            remote_loss = [s.mean_loss for s in remote_stats]
+            local_loss = [s.mean_loss for s in local_stats]
+            assert remote_loss == local_loss, \
+                f"{mode}: socket trajectory diverged: " \
+                f"{remote_loss} != {local_loss}"
+            assert [s.merged_stages for s in remote_stats] == \
+                [s.merged_stages for s in local_stats], mode
+
+            busiest = max(report["by_actor_up"].items(), key=lambda kv: kv[1])
+            print(f"{mode:>7}: loss={remote_loss[-1]:.4f} "
+                  f"(== in-process at seed {cfg.seed}) | server bytes: "
+                  f"up={human_bytes(sum(report['by_actor_up'].values()))} "
+                  f"down={human_bytes(sum(report['by_actor_down'].values()))} "
+                  f"busiest={busiest[0]}@{human_bytes(busiest[1])} | "
+                  f"wire (incl. framing): "
+                  f"up={human_bytes(wire['up_bytes'])} "
+                  f"down={human_bytes(wire['down_bytes'])} "
+                  f"in {wire['requests']} requests")
+    finally:
+        with SocketTransport(addr) as tp:
+            try:
+                tp.stop_server()
+            except Exception:
+                proc.terminate()
+        proc.join(timeout=10.0)
+    print(f"\nstore server exited (code {proc.exitcode}); "
+          f"multiprocess swarm OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -9,7 +9,10 @@
 # then drives examples/quickstart.py end to end at a reduced step count,
 # the sharded store-and-forward sync quickstart (examples/sharded_sync.py:
 # tiny N=4 swarm over SimulatedNetworkTransport, asserts merged-anchor
-# parity with the dense path), a short 1F1B+int8 pipelined training run
+# parity with the dense path), the multi-process socket-transport gate
+# (examples/multiprocess_swarm.py: StoreServer child process + real TCP,
+# asserts dense AND sharded loss match the in-process transport at the
+# same seed), a short 1F1B+int8 pipelined training run
 # (launch/train.py --strategy pipeline), and `benchmarks/run.py --quick`
 # (reduced pipeline + butterfly benches that hard-validate the
 # BENCH_pipeline.json / BENCH_butterfly.json schemas).
@@ -37,6 +40,10 @@ QUICKSTART_STEPS="${QUICKSTART_STEPS:-60}" python examples/quickstart.py
 echo
 echo "== smoke: sharded store-and-forward sync (N=4, simulated network) =="
 python examples/sharded_sync.py
+
+echo
+echo "== smoke: multi-process socket transport (store in its own process) =="
+python examples/multiprocess_swarm.py
 
 echo
 echo "== smoke: 1F1B pipeline quickstart (2 stages, int8 wire) =="

@@ -38,6 +38,7 @@ from repro.api.transport import (  # noqa: F401
     LinkSpec,
     NetworkModel,
     SimulatedNetworkTransport,
+    SocketTransport,
     StoreKeyError,
     Transport,
 )

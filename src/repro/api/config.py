@@ -47,6 +47,12 @@ class SwarmConfig:
     sync_interval_hours: float = 0.5  # T_s
     validators: int = 1
     validate_max_items: Optional[int] = None
+    # store hygiene: keep only the last ``retain_epochs`` epochs of the
+    # weights/ and scores/ planes (activations are always GC'd at epoch
+    # end).  None keeps everything — the default, because replay/audit
+    # tooling reads historical epochs; long-running swarms should set a
+    # window or the store grows without bound
+    retain_epochs: Optional[int] = None
     seed: int = 0
 
     def __post_init__(self):
@@ -56,6 +62,8 @@ class SwarmConfig:
         assert self.pipeline_schedule in ("gpipe", "1f1b"), \
             self.pipeline_schedule
         assert self.sync_mode in ("dense", "sharded"), self.sync_mode
+        assert self.retain_epochs is None or self.retain_epochs >= 1, \
+            f"retain_epochs must be None or >= 1: {self.retain_epochs}"
         # sharded sync needs a codec whose encode commutes with
         # block-aligned slicing (topk is global over the vector) — fail at
         # construction, not mid-epoch in SharingPhase

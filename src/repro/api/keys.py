@@ -155,6 +155,11 @@ class KeySchema:
         reduce audit walks this prefix."""
         return f"weights/ep{epoch}/s{stage}"
 
+    def scores_prefix(self, epoch: int) -> str:
+        """All score keys of one epoch — the driver's retention-window GC
+        (``SwarmConfig.retain_epochs``) deletes whole epochs by prefix."""
+        return f"scores/ep{epoch}"
+
     # -- parsing ---------------------------------------------------------
 
     def parse(self, key: str) -> ParsedKey:

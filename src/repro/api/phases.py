@@ -163,12 +163,19 @@ class TrainingPhase:
 class ValidationPhase:
     """Each validator tracks a random miner (§3: random assignment) and
     publishes its verdict as a ``ScoreMsg`` so emissions are auditable
-    from the store alone."""
+    from the store alone.  Only snapshotted miners are assignable: an
+    async joiner registered mid-epoch has nothing to replay yet and is
+    tracked from its first full epoch."""
     name = "validation"
 
     def run(self, swarm, state: EpochState) -> None:
         t_now = state.epoch * swarm.config.sync_interval_hours
-        uids = sorted(swarm.miners.keys())
+        # a miner registered mid-epoch (async join, §2.2) has no epoch-start
+        # snapshot to replay from: it is skipped this epoch and becomes
+        # trackable from the next, after its first full sync
+        uids = sorted(u for u in swarm.miners if u in state.snapshots)
+        if not uids:
+            return
         for v in swarm.validators:
             uid = uids[swarm.rng.randint(len(uids))]
             m = swarm.miners[uid]
@@ -406,6 +413,7 @@ class EpochDriver:
 
     def __init__(self, phases: Optional[Iterable[Phase]] = None):
         self.phases: list[Phase] = list(phases or default_phases())
+        self._gc_floor = 0          # first epoch whose weights/scores remain
 
     def run_epoch(self, swarm) -> EpochStats:
         for m in swarm.miners.values():
@@ -450,6 +458,18 @@ class EpochDriver:
         swarm.history.append(stats)
         swarm.epoch += 1
         # activations from this epoch are garbage-collected from the store
+        schema = swarm.transport.schema
         swarm.transport.delete_prefix(
-            swarm.transport.schema.activations_prefix(stats.epoch))
+            schema.activations_prefix(stats.epoch))
+        # weight/score planes: retention-window GC.  The seed behaviour
+        # (keep everything, for replay/audit) is retain_epochs=None; with a
+        # window of K, only the last K epochs' weights/ and scores/ survive
+        # — long runs no longer grow the store without bound
+        retain = swarm.config.retain_epochs
+        if retain is not None:
+            while self._gc_floor <= stats.epoch - retain:
+                e = self._gc_floor
+                swarm.transport.delete_prefix(schema.weights_prefix(e))
+                swarm.transport.delete_prefix(schema.scores_prefix(e))
+                self._gc_floor += 1
         return stats

@@ -1,0 +1,243 @@
+"""Wire format for the socket transport: ``dumps``/``loads`` + framing.
+
+Everything the phases publish must cross a real process boundary
+bit-exactly (paper §2: all traffic transits the globally accessible
+store).  The payload zoo, concretely:
+
+  * jnp/np arrays of every runtime dtype — fp32 anchors and score
+    vectors, int32 token batches, bf16 activations, int8 quantized codes;
+  * codec payload dicts from ``core.compression`` (``{"codec", "data",
+    "scales", "n", ...}``, plus the gradient wire's ``"shape"`` tuple);
+  * plain Python scalars, strings, bytes, lists, tuples and (ordered)
+    dicts for request envelopes and store metadata.
+
+Digest contract: ``StateStore`` digests hash each tree leaf's raw bytes
+in ``jax.tree_util`` order.  ``loads(dumps(x))`` preserves every array's
+dtype, shape and buffer and every container's structure (tuples stay
+tuples, dict insertion order is kept), so a payload digested on either
+side of the wire yields the *same* digest — the end-to-end tamper
+evidence survives serialization.  jax arrays deserialize as numpy arrays
+(same bytes; all consumers go through ``jnp.asarray``/numpy anyway).
+
+The encoding is a deliberately boring tagged binary tree (one tag byte
+per node, big-endian fixed-width lengths) — no pickle (the store server
+must never execute peer-controlled bytecode) and no third-party
+dependency.  Frames on the socket are ``u64 length + body``.
+"""
+from __future__ import annotations
+
+import socket
+import struct
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# one tag byte per node
+_NONE, _TRUE, _FALSE = b"Z", b"T", b"F"
+_INT, _BIGINT, _FLOAT = b"i", b"I", b"f"
+_STR, _BYTES = b"s", b"y"
+_LIST, _TUPLE, _DICT = b"l", b"t", b"d"
+_ARRAY = b"a"
+
+_I64_MIN, _I64_MAX = -(2 ** 63), 2 ** 63 - 1
+
+_U32 = struct.Struct(">I")
+_U64 = struct.Struct(">Q")
+_I64 = struct.Struct(">q")
+_F64 = struct.Struct(">d")
+
+
+def _np_dtype(name: str) -> np.dtype:
+    """Resolve a dtype name, including the ml_dtypes extension types jax
+    uses on the wire (``bfloat16`` activations/codes)."""
+    try:
+        return np.dtype(name)
+    except TypeError:
+        return np.dtype(getattr(jnp, name))
+
+
+# ---------------------------------------------------------------------------
+# encode
+# ---------------------------------------------------------------------------
+
+
+def _enc_str(out: bytearray, s: str) -> None:
+    raw = s.encode("utf-8")
+    out += _U32.pack(len(raw))
+    out += raw
+
+
+def _enc(out: bytearray, obj: Any) -> None:
+    if obj is None:
+        out += _NONE
+    elif isinstance(obj, bool):               # before int: bool is an int
+        out += _TRUE if obj else _FALSE
+    elif isinstance(obj, int):
+        if _I64_MIN <= obj <= _I64_MAX:
+            out += _INT
+            out += _I64.pack(obj)
+        else:
+            out += _BIGINT                    # decimal string, length-prefixed
+            _enc_str(out, str(obj))
+    elif isinstance(obj, float):
+        out += _FLOAT
+        out += _F64.pack(obj)
+    elif isinstance(obj, str):
+        out += _STR
+        _enc_str(out, obj)
+    elif isinstance(obj, (bytes, bytearray, memoryview)):
+        raw = bytes(obj)
+        out += _BYTES
+        out += _U64.pack(len(raw))
+        out += raw
+    elif isinstance(obj, (np.ndarray, np.generic, jax.Array)):
+        # NOT ascontiguousarray: it promotes 0-d arrays to 1-d; tobytes()
+        # already yields a C-order copy for any layout
+        arr = np.asarray(obj)
+        if arr.dtype.hasobject:
+            # tobytes() on object arrays would serialize pointers
+            raise TypeError(
+                f"serde cannot encode object-dtype array: {obj!r}")
+        out += _ARRAY
+        _enc_str(out, arr.dtype.name)
+        out += _U32.pack(arr.ndim)
+        for d in arr.shape:
+            out += _U64.pack(d)
+        raw = arr.tobytes()
+        out += _U64.pack(len(raw))
+        out += raw
+    elif isinstance(obj, (list, tuple)):
+        out += _TUPLE if isinstance(obj, tuple) else _LIST
+        out += _U32.pack(len(obj))
+        for item in obj:
+            _enc(out, item)
+    elif isinstance(obj, dict):
+        out += _DICT
+        out += _U32.pack(len(obj))
+        for k, v in obj.items():              # insertion order preserved
+            _enc(out, k)
+            _enc(out, v)
+    else:
+        raise TypeError(
+            f"serde cannot encode {type(obj).__name__!r} "
+            f"(supported: None/bool/int/float/str/bytes/list/tuple/dict/"
+            f"ndarray): {obj!r}")
+
+
+def dumps(obj: Any) -> bytes:
+    out = bytearray()
+    _enc(out, obj)
+    return bytes(out)
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+
+class _Reader:
+    __slots__ = ("buf", "pos")
+
+    def __init__(self, buf: bytes):
+        self.buf = buf
+        self.pos = 0
+
+    def take(self, n: int) -> bytes:
+        end = self.pos + n
+        if end > len(self.buf):
+            raise ValueError("serde: truncated buffer")
+        chunk = self.buf[self.pos:end]
+        self.pos = end
+        return chunk
+
+    def u32(self) -> int:
+        return _U32.unpack(self.take(4))[0]
+
+    def u64(self) -> int:
+        return _U64.unpack(self.take(8))[0]
+
+    def str_(self) -> str:
+        return self.take(self.u32()).decode("utf-8")
+
+
+def _dec(r: _Reader) -> Any:
+    tag = r.take(1)
+    if tag == _NONE:
+        return None
+    if tag == _TRUE:
+        return True
+    if tag == _FALSE:
+        return False
+    if tag == _INT:
+        return _I64.unpack(r.take(8))[0]
+    if tag == _BIGINT:
+        return int(r.str_())
+    if tag == _FLOAT:
+        return _F64.unpack(r.take(8))[0]
+    if tag == _STR:
+        return r.str_()
+    if tag == _BYTES:
+        return r.take(r.u64())
+    if tag == _ARRAY:
+        dtype = _np_dtype(r.str_())
+        shape = tuple(r.u64() for _ in range(r.u32()))
+        raw = r.take(r.u64())
+        # copy: detaches from the request buffer and yields a writable array
+        return np.frombuffer(raw, dtype=dtype).reshape(shape).copy()
+    if tag in (_LIST, _TUPLE):
+        items = [_dec(r) for _ in range(r.u32())]
+        return tuple(items) if tag == _TUPLE else items
+    if tag == _DICT:
+        return {_dec(r): _dec(r) for _ in range(r.u32())}
+    raise ValueError(f"serde: unknown tag {tag!r} at offset {r.pos - 1}")
+
+
+def loads(buf: bytes) -> Any:
+    r = _Reader(buf)
+    obj = _dec(r)
+    if r.pos != len(buf):
+        raise ValueError(
+            f"serde: {len(buf) - r.pos} trailing bytes after decode")
+    return obj
+
+
+# ---------------------------------------------------------------------------
+# socket framing: u64 big-endian length + body
+# ---------------------------------------------------------------------------
+
+
+def send_frame(sock: socket.socket, body: bytes) -> int:
+    """Write one length-prefixed frame; returns bytes put on the wire."""
+    header = _U64.pack(len(body))
+    if len(body) < (1 << 16):
+        sock.sendall(header + body)   # one packet for small frames
+    else:
+        sock.sendall(header)          # no full copy of large payloads
+        sock.sendall(body)
+    return len(body) + 8
+
+
+def _recv_exact(sock: socket.socket, n: int) -> Optional[bytes]:
+    """Read exactly ``n`` bytes, or None on a clean EOF at a frame edge."""
+    chunks: list[bytes] = []
+    got = 0
+    while got < n:
+        chunk = sock.recv(min(n - got, 1 << 20))
+        if not chunk:
+            if got == 0:
+                return None
+            raise ConnectionError(
+                f"peer closed mid-frame ({got}/{n} bytes)")
+        chunks.append(chunk)
+        got += len(chunk)
+    return b"".join(chunks)
+
+
+def recv_frame(sock: socket.socket) -> Optional[bytes]:
+    """Read one frame; None when the peer closed the connection."""
+    header = _recv_exact(sock, 8)
+    if header is None:
+        return None
+    return _recv_exact(sock, _U64.unpack(header)[0])

@@ -13,6 +13,15 @@ subclasses this for backward compatibility.
                            NetworkModel.consumer()))
     net.run(3)
     net.transport.elapsed_seconds()   # simulated wall-clock
+
+    # the same timeline with the store in ANOTHER PROCESS (real sockets,
+    # serde wire format; examples/multiprocess_swarm.py is the runnable
+    # version) — the trajectory is transport-invariant:
+    proc, addr = spawn_store_server()
+    remote = Swarm.create(model_cfg, SwarmConfig(seed=0),
+                          transport=SocketTransport(addr))
+    remote.run(3)
+    remote.transport.traffic_report()  # server-side authoritative bytes
 """
 from __future__ import annotations
 

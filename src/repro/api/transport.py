@@ -11,6 +11,12 @@ actor's link, not of the algorithm.  The ``Transport`` protocol is the seam:
     latency/bandwidth model that accumulates *simulated* wall-clock, so
     benchmarks can report time-to-loss under realistic links (§5.3
     transfer analysis, scenario-parameterised).
+  * ``SocketTransport``           a real client of a ``StoreServer``
+    process (``repro.runtime.store_server``): every payload crosses a
+    length-prefixed TCP socket via the ``repro.api.serde`` wire format,
+    digests preserved end-to-end, ``StoreKeyError`` re-raised from the
+    server's response.  ``elapsed_seconds`` is *real* seconds spent
+    blocked on the wire.
 
 Clock model (documented, deliberately simple): every actor owns one full-
 duplex link to the hub.  Transfers on the same link serialize; transfers on
@@ -27,9 +33,12 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
+import socket
+import time
 from collections import defaultdict
 from typing import Any, Optional, Protocol, runtime_checkable
 
+from repro.api import serde
 from repro.api.keys import KeySchema
 from repro.api.messages import Message
 from repro.runtime.state_store import StateStore, StoreKeyError  # noqa: F401
@@ -226,3 +235,190 @@ class SimulatedNetworkTransport(InProcessTransport):
         entry = self.store.fetch_entry(key, actor=actor)
         self._charge(actor, entry.nbytes, up=False)
         return entry.payload
+
+
+class SocketTransport:
+    """Client of a real ``StoreServer`` (``repro.runtime.store_server``):
+    the store lives in another process (or host), every payload crosses a
+    length-prefixed TCP socket as a ``repro.api.serde`` frame.
+
+    Parity contract with the in-process transports:
+
+      * payloads round-trip bit-exactly and the server digests the *same*
+        bytes, so digests equal the in-process run's;
+      * the server's ``StateStore`` does the authoritative byte
+        accounting per actor — for the same run it matches
+        ``SimulatedNetworkTransport``'s link accounting by construction
+        (both count ``StoreEntry.nbytes`` on the same calls);
+      * a missing key raises the *same* ``StoreKeyError`` (key, actor,
+        nearest existing prefix), reconstructed from the server's error
+        response.
+
+    ``link_report`` mirrors the simulated transport's shape with
+    client-side counters (payload bytes per actor, *real* busy seconds);
+    ``wire_report`` additionally counts raw socket bytes including
+    framing/envelope overhead.  ``parallel()`` is a no-op: one TCP
+    connection serializes requests (per-actor connections are future
+    work), which is honest — ``elapsed_seconds`` is wall-clock actually
+    spent blocked on the wire.
+    """
+
+    def __init__(self, address: tuple, schema: Optional[KeySchema] = None,
+                 connect_timeout: float = 10.0):
+        self.address = (str(address[0]), int(address[1]))
+        self.schema = schema or KeySchema()
+        self.connect_timeout = connect_timeout
+        self._sock: Optional[socket.socket] = None
+        self.links: dict[str, LinkStats] = defaultdict(LinkStats)
+        self._elapsed = 0.0
+        self._wire_up = 0
+        self._wire_down = 0
+        self._requests = 0
+
+    # -- connection ------------------------------------------------------
+
+    def _connect(self) -> socket.socket:
+        """Dial with retries inside ``connect_timeout``: the server process
+        may still be binding when the first request goes out."""
+        deadline = time.monotonic() + self.connect_timeout
+        while True:
+            try:
+                sock = socket.create_connection(self.address, timeout=30.0)
+                sock.settimeout(None)   # the 30s covers dialing only: a
+                # large transfer on a slow link may legitimately take longer
+                sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+                return sock
+            except OSError:
+                if time.monotonic() >= deadline:
+                    raise
+                time.sleep(0.05)
+
+    def _request(self, req: dict) -> dict:
+        if self._sock is None:
+            self._sock = self._connect()
+        body = serde.dumps(req)
+        t0 = time.monotonic()
+        try:
+            self._wire_up += serde.send_frame(self._sock, body)
+            resp_body = serde.recv_frame(self._sock)
+        except OSError:
+            # a failed send/recv leaves the stream desynchronized: drop the
+            # connection so a retry dials fresh instead of pairing the next
+            # request with a stale half-read response
+            self.close()
+            raise
+        finally:
+            self._elapsed += time.monotonic() - t0
+        if resp_body is None:
+            self.close()
+            raise ConnectionError(
+                f"store server {self.address} closed the connection")
+        self._wire_down += len(resp_body) + 8
+        self._requests += 1
+        resp = serde.loads(resp_body)
+        if resp.get("ok"):
+            return resp
+        if resp.get("error") == "StoreKeyError":
+            raise StoreKeyError(resp["key"], resp["actor"],
+                                resp["nearest_prefix"],
+                                resp["nearest_count"])
+        raise RuntimeError(
+            f"store server error: {resp.get('error')}: "
+            f"{resp.get('message', '')}")
+
+    def _charge(self, actor: str, nbytes: int, seconds: float,
+                up: bool) -> None:
+        stats = self.links[actor]
+        stats.busy_seconds += seconds
+        stats.transfers += 1
+        if up:
+            stats.up_bytes += nbytes
+        else:
+            stats.down_bytes += nbytes
+
+    # -- typed plane -----------------------------------------------------
+
+    def publish(self, msg: Message, payload: Any, actor: str = "?",
+                meta: Optional[dict] = None) -> str:
+        return self.put(msg.key(self.schema), payload, actor=actor, meta=meta)
+
+    def fetch(self, msg: Message, actor: str = "?") -> Any:
+        return self.get(msg.key(self.schema), actor=actor)
+
+    # -- raw plane -------------------------------------------------------
+
+    def put(self, key: str, value: Any, actor: str = "?",
+            codec: Optional[str] = None,
+            meta: Optional[dict] = None) -> str:
+        t0 = time.monotonic()
+        resp = self._request({"op": "put", "key": key, "value": value,
+                              "actor": actor, "codec": codec, "meta": meta})
+        self._charge(actor, resp["nbytes"], time.monotonic() - t0, up=True)
+        return resp["digest"]
+
+    def get(self, key: str, actor: str = "?") -> Any:
+        t0 = time.monotonic()
+        resp = self._request({"op": "get", "key": key, "actor": actor})
+        self._charge(actor, resp["nbytes"], time.monotonic() - t0, up=False)
+        return resp["value"]
+
+    def exists(self, key: str) -> bool:
+        return self._request({"op": "exists", "key": key})["exists"]
+
+    def delete_prefix(self, prefix: str) -> int:
+        return self._request({"op": "delete_prefix",
+                              "prefix": prefix})["deleted"]
+
+    def keys(self, prefix: str = "") -> list[str]:
+        return list(self._request({"op": "keys", "prefix": prefix})["keys"])
+
+    # -- timing / accounting ---------------------------------------------
+
+    @contextlib.contextmanager
+    def parallel(self):
+        yield
+
+    def traffic_report(self) -> dict:
+        """The *server-side* authoritative accounting."""
+        return self._request({"op": "traffic_report"})["report"]
+
+    def link_report(self) -> dict:
+        return {actor: dataclasses.asdict(s)
+                for actor, s in sorted(self.links.items())}
+
+    def wire_report(self) -> dict:
+        """Raw socket bytes (payload + serde envelope + framing)."""
+        return {"up_bytes": self._wire_up, "down_bytes": self._wire_down,
+                "requests": self._requests}
+
+    def elapsed_seconds(self) -> float:
+        return self._elapsed
+
+    # -- lifecycle -------------------------------------------------------
+
+    def ping(self) -> dict:
+        return self._request({"op": "ping"})
+
+    def reset_store(self) -> None:
+        """Fresh server-side store + counters (one server, many runs)."""
+        self._request({"op": "reset"})
+
+    def stop_server(self) -> None:
+        """Ask the server process to exit, then drop the connection."""
+        try:
+            self._request({"op": "shutdown"})
+        finally:
+            self.close()
+
+    def close(self) -> None:
+        if self._sock is not None:
+            try:
+                self._sock.close()
+            finally:
+                self._sock = None
+
+    def __enter__(self) -> "SocketTransport":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

@@ -1,16 +1,24 @@
 from repro.runtime.network import FaultModel, MinerBehavior  # noqa: F401
 from repro.runtime.state_store import StateStore, StoreKeyError  # noqa: F401
 
-# Orchestrator/SwarmConfig re-export lazily (PEP 562): orchestrator.py sits
-# on top of repro.api, which itself imports runtime submodules — an eager
-# import here would make ``import repro.api`` hit this package mid-cycle.
-_LAZY = ("Orchestrator", "SwarmConfig", "EpochStats")
+# Orchestrator/SwarmConfig re-export lazily (PEP 562): orchestrator.py and
+# store_server.py sit on top of repro.api, which itself imports runtime
+# submodules — an eager import here would make ``import repro.api`` hit
+# this package mid-cycle.
+_LAZY = {
+    "Orchestrator": "orchestrator",
+    "SwarmConfig": "orchestrator",
+    "EpochStats": "orchestrator",
+    "StoreServer": "store_server",
+    "spawn_store_server": "store_server",
+}
 
 
 def __getattr__(name):
     if name in _LAZY:
-        from repro.runtime import orchestrator
-        return getattr(orchestrator, name)
+        import importlib
+        mod = importlib.import_module(f"repro.runtime.{_LAZY[name]}")
+        return getattr(mod, name)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 

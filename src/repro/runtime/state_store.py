@@ -81,6 +81,20 @@ class StateStore:
     def _ns(key: str) -> str:
         return key.split("/", 1)[0]
 
+    @staticmethod
+    def _under(key: str, prefix: str) -> bool:
+        """Segment-boundary prefix match: ``weights/ep1`` covers
+        ``weights/ep1/...`` and the exact key, but *not* ``weights/ep10/...``
+        (a raw ``startswith`` collided ep1 with ep10+ and s1 with s10+,
+        so epoch GC and stage-scoped audit walks leaked across segments).
+        A trailing-``/`` prefix keeps its literal meaning; the empty prefix
+        covers everything."""
+        if not prefix:
+            return True
+        if prefix.endswith("/"):
+            return key.startswith(prefix)
+        return key == prefix or key.startswith(prefix + "/")
+
     def put(self, key: str, value: Any, actor: str = "?",
             codec: Optional[str] = None,
             meta: Optional[dict] = None) -> StoreEntry:
@@ -104,7 +118,7 @@ class StateStore:
         parts = key.split("/")
         for i in range(len(parts), 0, -1):
             p = "/".join(parts[:i])
-            n = sum(1 for k in self._data if k == p or k.startswith(p + "/"))
+            n = sum(1 for k in self._data if self._under(k, p))
             if n:
                 return p, n
         return "", len(self._data)
@@ -136,13 +150,13 @@ class StateStore:
         return key in self._data
 
     def delete_prefix(self, prefix: str) -> int:
-        doomed = [k for k in self._data if k.startswith(prefix)]
+        doomed = [k for k in self._data if self._under(k, prefix)]
         for k in doomed:
             del self._data[k]
         return len(doomed)
 
     def keys(self, prefix: str = "") -> list[str]:
-        return sorted(k for k in self._data if k.startswith(prefix))
+        return sorted(k for k in self._data if self._under(k, prefix))
 
     def traffic_report(self) -> dict:
         return {

@@ -1,0 +1,217 @@
+"""``StoreServer``: the paper's globally accessible store as a real process.
+
+Everything before this module simulated the hub — ``InProcessTransport``
+is a dict lookup, ``SimulatedNetworkTransport`` only models links.  Here
+the authoritative ``StateStore`` lives behind a length-prefixed TCP
+socket, so miners/validators/orchestrator traffic genuinely crosses a
+process (or host) boundary, exactly the §2 hub-and-spoke deployment:
+the store is the only shared surface, and byte/digest accounting happens
+*server-side*, where peers cannot fudge it.
+
+Protocol: one ``serde`` frame per request/response (u64 length + tagged
+binary body; see ``repro.api.serde`` — no pickle, peers never ship
+bytecode).  Requests are dicts ``{"op": ..., ...}``; responses are
+``{"ok": True, ...}`` or ``{"ok": False, "error": ..., ...}``.  A missing
+key returns the full ``StoreKeyError`` context (key, actor, nearest
+existing prefix) so the client can re-raise the *same* exception the
+in-process transports raise — the failure surface is transport-invariant.
+
+Ops: ``put`` (value + optional server-side codec; returns digest+nbytes),
+``get`` (returns payload+nbytes+digest), ``exists``, ``delete_prefix``,
+``keys``, ``traffic_report``, ``ping``, ``reset`` (fresh store — lets one
+server host consecutive independent runs), ``shutdown``.
+
+Run it three ways:
+
+  * ``StoreServer().start()``      — daemon thread, same process (tests,
+                                     benchmarks: real sockets, no spawn
+                                     cost);
+  * ``spawn_store_server()``       — separate OS process via the
+                                     multiprocessing ``spawn`` context
+                                     (examples/multiprocess_swarm.py);
+  * ``python -m repro.runtime.store_server --port P`` — standalone
+                                     (multi-host; bind a routable host).
+"""
+from __future__ import annotations
+
+import argparse
+import socket
+import socketserver
+import threading
+from typing import Any, Optional
+
+from repro.api import serde
+from repro.runtime.state_store import StateStore, StoreKeyError
+
+
+class _Handler(socketserver.BaseRequestHandler):
+    """One peer connection: frames in, frames out, until EOF."""
+
+    def handle(self) -> None:  # pragma: no cover - exercised via sockets
+        self.request.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        while True:
+            body = serde.recv_frame(self.request)
+            if body is None:
+                return
+            try:
+                req = serde.loads(body)
+                resp = self.server.dispatch(req)
+            except StoreKeyError as e:
+                resp = {"ok": False, "error": "StoreKeyError", "key": e.key,
+                        "actor": e.actor, "nearest_prefix": e.nearest_prefix,
+                        "nearest_count": e.nearest_count}
+            except Exception as e:  # noqa: BLE001 - report, don't die
+                resp = {"ok": False, "error": type(e).__name__,
+                        "message": str(e)}
+            try:
+                frame = serde.dumps(resp)
+            except Exception as e:  # noqa: BLE001 - e.g. a shared in-process
+                # store holding a payload serde cannot encode: still reply
+                frame = serde.dumps({
+                    "ok": False, "error": type(e).__name__,
+                    "message": f"response serialization failed: {e}"})
+            serde.send_frame(self.request, frame)
+            if req_is_shutdown(resp):
+                # respond first, then stop the accept loop; shutdown() only
+                # signals serve_forever, so calling it from a handler thread
+                # cannot deadlock
+                self.server.shutdown()
+                return
+
+
+def req_is_shutdown(resp: dict) -> bool:
+    return bool(resp.get("ok")) and resp.get("op") == "shutdown"
+
+
+class StoreServer(socketserver.ThreadingTCPServer):
+    """Threaded TCP server owning the authoritative ``StateStore``.
+
+    One lock serializes store access (the store is a plain dict + counters;
+    requests are short).  ``address`` reports the actually-bound (host,
+    port) — construct with ``port=0`` to let the OS pick."""
+
+    daemon_threads = True
+    allow_reuse_address = True
+
+    def __init__(self, host: str = "127.0.0.1", port: int = 0,
+                 store: Optional[StateStore] = None):
+        super().__init__((host, port), _Handler)
+        self.store = store or StateStore()
+        self._lock = threading.Lock()
+        self._thread: Optional[threading.Thread] = None
+
+    @property
+    def address(self) -> tuple[str, int]:
+        host, port = self.server_address[:2]
+        return host, port
+
+    # -- request dispatch ------------------------------------------------
+
+    def dispatch(self, req: dict) -> dict:
+        op = req.get("op")
+        with self._lock:
+            if op == "put":
+                entry = self.store.put(
+                    req["key"], req["value"], actor=req.get("actor", "?"),
+                    codec=req.get("codec"), meta=req.get("meta"))
+                return {"ok": True, "digest": entry.digest,
+                        "nbytes": entry.nbytes}
+            if op == "get":
+                entry = self.store.fetch_entry(req["key"],
+                                               actor=req.get("actor", "?"))
+                return {"ok": True, "value": entry.payload,
+                        "nbytes": entry.nbytes, "digest": entry.digest}
+            if op == "exists":
+                return {"ok": True, "exists": self.store.exists(req["key"])}
+            if op == "delete_prefix":
+                return {"ok": True,
+                        "deleted": self.store.delete_prefix(req["prefix"])}
+            if op == "keys":
+                return {"ok": True,
+                        "keys": self.store.keys(req.get("prefix", ""))}
+            if op == "traffic_report":
+                return {"ok": True, "report": self.store.traffic_report()}
+            if op == "reset":
+                self.store = StateStore()
+                return {"ok": True}
+            if op == "ping":
+                import os
+                return {"ok": True, "pid": os.getpid(),
+                        "n_keys": len(self.store.keys())}
+            if op == "shutdown":
+                return {"ok": True, "op": "shutdown"}
+        return {"ok": False, "error": "UnknownOp", "message": repr(op)}
+
+    # -- lifecycle -------------------------------------------------------
+
+    def start(self) -> "StoreServer":
+        """Serve from a daemon thread (in-process tests/benchmarks)."""
+        self._thread = threading.Thread(target=self.serve_forever,
+                                        name="store-server", daemon=True)
+        self._thread.start()
+        return self
+
+    def stop(self) -> None:
+        self.shutdown()
+        self.server_close()
+        if self._thread is not None:
+            self._thread.join(timeout=5.0)
+            self._thread = None
+
+
+# ---------------------------------------------------------------------------
+# process entry points
+# ---------------------------------------------------------------------------
+
+
+def serve(host: str = "127.0.0.1", port: int = 0,
+          ready_queue: Any = None) -> None:
+    """Blocking entry point for a dedicated store process.  Puts the bound
+    (host, port) on ``ready_queue`` (if given) once accepting, so the
+    parent can pass ``port=0`` and still learn the address."""
+    server = StoreServer(host, port)
+    if ready_queue is not None:
+        ready_queue.put(server.address)
+    try:
+        server.serve_forever()
+    finally:
+        server.server_close()
+
+
+def spawn_store_server(host: str = "127.0.0.1"):
+    """Launch a store server in a separate OS process (``spawn`` context —
+    the child re-imports cleanly instead of forking a jax-initialized
+    interpreter).  Returns ``(process, (host, port))``; blocks until the
+    child is accepting connections.  Stop it with
+    ``SocketTransport.stop_server()`` or ``process.terminate()``."""
+    import multiprocessing as mp
+    import queue as queue_mod
+
+    ctx = mp.get_context("spawn")
+    queue = ctx.Queue()
+    proc = ctx.Process(target=serve, args=(host, 0, queue), daemon=True,
+                       name="store-server")
+    proc.start()
+    while True:          # a crashed child would otherwise hang .get() forever
+        try:
+            address = queue.get(timeout=0.5)
+            break
+        except queue_mod.Empty:
+            if not proc.is_alive():
+                raise RuntimeError(
+                    f"store server process died before binding "
+                    f"(exit code {proc.exitcode})") from None
+    return proc, address
+
+
+def main(argv: Optional[list] = None) -> None:  # pragma: no cover - CLI
+    p = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    p.add_argument("--host", default="127.0.0.1")
+    p.add_argument("--port", type=int, default=8799)
+    args = p.parse_args(argv)
+    print(f"store server listening on {args.host}:{args.port}", flush=True)
+    serve(args.host, args.port)
+
+
+if __name__ == "__main__":  # pragma: no cover
+    main()

@@ -1,0 +1,279 @@
+"""Real-socket transport: StoreServer + SocketTransport end to end.
+
+The store lives behind a genuine TCP socket (threaded server here — same
+wire format and failure surface as the separate-process deployment, which
+``examples/multiprocess_swarm.py`` and a slow-marked test cover).  The
+contracts under test:
+
+  * every typed message round-trips with its digest intact,
+  * ``StoreKeyError`` crosses the process boundary with full context,
+  * prefix ops behave identically to the in-process store,
+  * a full ``Swarm`` run (dense AND sharded store-and-forward sync)
+    reproduces the ``InProcessTransport`` trajectory at the same seed,
+  * the server-side per-actor byte accounting equals
+    ``SimulatedNetworkTransport``'s link accounting for the same run.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.api import (
+    ActivationMsg,
+    AnchorMsg,
+    GradientMsg,
+    InProcessTransport,
+    KeySchema,
+    NetworkModel,
+    ScoreMsg,
+    ShardReducedMsg,
+    ShardUploadMsg,
+    SimulatedNetworkTransport,
+    SocketTransport,
+    StoreKeyError,
+    Swarm,
+    SwarmConfig,
+    Transport,
+    WeightUploadMsg,
+)
+from repro.core import compression
+from repro.runtime.state_store import _digest
+from repro.runtime.store_server import StoreServer
+from repro.configs import get, smoke_variant
+
+
+def _mcfg(n_layers=2):
+    return dataclasses.replace(smoke_variant(get("llama3.2-1b")).model,
+                               n_layers=n_layers)
+
+
+@pytest.fixture(scope="module")
+def server():
+    srv = StoreServer().start()
+    yield srv
+    srv.stop()
+
+
+@pytest.fixture()
+def transport(server):
+    tp = SocketTransport(server.address, schema=KeySchema(version=2))
+    tp.reset_store()
+    yield tp
+    tp.close()
+
+
+# ---------------------------------------------------------------------------
+# wire plane
+# ---------------------------------------------------------------------------
+
+V2_MESSAGES = [
+    ActivationMsg.tokens(0, 1),
+    ActivationMsg(0, 1, stage=1, miner_uid=3),
+    GradientMsg(0, 1, stage=1, miner_uid=3),
+    WeightUploadMsg(0, stage=0, miner_uid=2),
+    ShardUploadMsg(0, stage=0, miner_uid=2, shard=4),
+    ShardReducedMsg(0, stage=0, shard=4, reducer_uid=2),
+    AnchorMsg(0, stage=0),
+    ScoreMsg(0, validator_uid=0, miner_uid=2),
+]
+
+
+def test_satisfies_transport_protocol(transport):
+    assert isinstance(transport, Transport)
+
+
+def test_every_message_roundtrips_with_digest(transport):
+    rng = np.random.RandomState(0)
+    for i, msg in enumerate(V2_MESSAGES):
+        payload = rng.randn(16 + i).astype(np.float32)
+        digest = transport.publish(msg, payload, actor=f"actor{i}")
+        assert digest == _digest(payload)      # server digested same bytes
+        got = transport.fetch(msg, actor=f"actor{i}")
+        assert got.dtype == payload.dtype
+        np.testing.assert_array_equal(got, payload)
+
+
+def test_codec_dict_payload_roundtrips(transport):
+    vec = np.random.RandomState(1).randn(700).astype(np.float32)
+    payload = dict(compression.encode(vec, "int8"), shape=(700,))
+    transport.put("weights/ep0/s0/m0/shard0", payload, actor="miner0")
+    got = transport.get("weights/ep0/s0/m0/shard0", actor="miner1")
+    assert got["codec"] == "int8" and got["shape"] == (700,)
+    np.testing.assert_array_equal(
+        np.asarray(compression.decode(got)),
+        np.asarray(compression.decode(payload)))
+
+
+def test_store_key_error_crosses_the_process_boundary(transport):
+    transport.put("weights/ep0/s0/m0", np.zeros(4), actor="miner0")
+    with pytest.raises(StoreKeyError) as ei:
+        transport.get("weights/ep1/s0/merged", actor="miner3")
+    err = ei.value
+    assert isinstance(err, KeyError)
+    assert err.key == "weights/ep1/s0/merged"
+    assert err.actor == "miner3"
+    assert err.nearest_prefix == "weights"
+    assert "miner3" in str(err) and "weights" in str(err)
+    with pytest.raises(StoreKeyError):
+        transport.fetch(AnchorMsg(9, 0), actor="miner0")
+
+
+def test_prefix_ops_match_in_process_semantics(transport):
+    in_proc = InProcessTransport(schema=KeySchema(version=2))
+    for tp in (transport, in_proc):
+        for e in (1, 10):
+            for t in (0, 1):
+                tp.put(f"activations/ep{e}/t{t}/tokens", np.zeros(2))
+    assert transport.keys("activations/ep1") == \
+        in_proc.keys("activations/ep1")
+    assert transport.delete_prefix("activations/ep1") == \
+        in_proc.delete_prefix("activations/ep1") == 2
+    assert transport.keys() == in_proc.keys()
+    assert transport.exists("activations/ep10/t0/tokens")
+    assert not transport.exists("activations/ep1/t0/tokens")
+
+
+def test_server_survives_bad_requests(transport):
+    # unknown op reports instead of killing the connection
+    with pytest.raises(RuntimeError, match="UnknownOp"):
+        transport._request({"op": "frobnicate"})
+    transport.put("weights/ep0/s0/m1", np.zeros(4), actor="m")
+    assert transport.exists("weights/ep0/s0/m1")   # connection still live
+
+
+def test_unserializable_stored_payload_reports_instead_of_hanging(
+        server, transport):
+    # a shared in-process store can hold payloads serde cannot encode;
+    # the get must come back as an error response, not a dead connection
+    server.store.put("weights/ep0/s9/m0", {"obj": object()}, actor="local")
+    with pytest.raises(RuntimeError, match="serialization failed"):
+        transport.get("weights/ep0/s9/m0", actor="miner0")
+    transport.put("weights/ep0/s9/m1", np.zeros(2), actor="m")
+    assert transport.exists("weights/ep0/s9/m1")   # connection still live
+
+
+def test_two_clients_share_one_store(server):
+    a = SocketTransport(server.address)
+    b = SocketTransport(server.address)
+    a.reset_store()
+    a.put("scores/ep0/v0/m1", np.asarray([1.0], np.float32), actor="v0")
+    np.testing.assert_array_equal(
+        b.get("scores/ep0/v0/m1", actor="v1"), [1.0])
+    a.close()
+    b.close()
+
+
+def test_elapsed_and_wire_accounting_move(transport):
+    before = transport.wire_report()["requests"]
+    transport.put("weights/ep0/s0/m5", np.zeros(1024), actor="miner5")
+    transport.get("weights/ep0/s0/m5", actor="miner6")
+    wire = transport.wire_report()
+    assert wire["requests"] == before + 2
+    assert transport.elapsed_seconds() > 0.0
+    links = transport.link_report()
+    assert links["miner5"]["up_bytes"] == 1024 * 8
+    assert links["miner6"]["down_bytes"] == 1024 * 8
+
+
+# ---------------------------------------------------------------------------
+# full swarm over the socket: trajectory + accounting parity
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module", params=["dense", "sharded"])
+def parity(request, server):
+    mode = request.param
+    cfg = SwarmConfig(seed=0, n_stages=2, miners_per_stage=2, inner_steps=2,
+                      b_min=1, batch_size=2, seq_len=16, validators=1,
+                      sync_mode=mode)
+    schema_v = 2 if mode == "sharded" else 1
+    ref = Swarm.create(_mcfg(), cfg, transport=InProcessTransport(
+        schema=KeySchema(version=schema_v)))
+    ref_stats = ref.run(2)
+    sim_tp = SimulatedNetworkTransport(NetworkModel.consumer(),
+                                       schema=KeySchema(version=schema_v))
+    sim_stats = Swarm.create(_mcfg(), cfg, transport=sim_tp).run(2)
+    sock_tp = SocketTransport(server.address,
+                              schema=KeySchema(version=schema_v))
+    sock_tp.reset_store()
+    sock = Swarm.create(_mcfg(), cfg, transport=sock_tp)
+    sock_stats = sock.run(2)
+    report = sock_tp.traffic_report()
+    sock_tp.close()
+    return mode, ref_stats, sim_tp, sim_stats, sock, sock_stats, report
+
+
+def test_socket_swarm_reproduces_in_process_trajectory(parity):
+    """Acceptance: the full epoch timeline over a real socket reproduces
+    the InProcessTransport loss trajectory at the same seed, for both
+    sync modes."""
+    mode, ref_stats, _, _, _, sock_stats, _ = parity
+    assert [s.mean_loss for s in sock_stats] == \
+        [s.mean_loss for s in ref_stats], mode
+    assert [s.b_eff for s in sock_stats] == [s.b_eff for s in ref_stats]
+    assert [s.merged_stages for s in sock_stats] == \
+        [s.merged_stages for s in ref_stats]
+
+
+def test_server_accounting_matches_simulated_links(parity):
+    """Acceptance: server-side traffic_report() per-actor bytes equal the
+    SimulatedNetworkTransport link accounting for the same run."""
+    mode, _, sim_tp, sim_stats, _, sock_stats, report = parity
+    assert [s.mean_loss for s in sock_stats] == \
+        [s.mean_loss for s in sim_stats], mode
+    sim_links = sim_tp.link_report()
+    assert sim_links, "simulated run recorded no links"
+    for actor, s in sim_links.items():
+        assert s["up_bytes"] == report["by_actor_up"].get(actor, 0), \
+            (mode, actor)
+        assert s["down_bytes"] == report["by_actor_down"].get(actor, 0), \
+            (mode, actor)
+    sim_store = sim_tp.store.traffic_report()
+    assert report["uploaded"] == sim_store["uploaded"]
+    assert report["downloaded"] == sim_store["downloaded"]
+
+
+def test_sharded_wire_artifacts_reach_the_server(server):
+    """The §5 store-and-forward reduce leaves its shard uploads + reduced
+    copies on the REMOTE store — the trustless audit surface exists on
+    the other side of the wire."""
+    cfg = SwarmConfig(seed=0, n_stages=2, miners_per_stage=2, inner_steps=2,
+                      b_min=1, batch_size=2, seq_len=16, validators=1,
+                      sync_mode="sharded")
+    tp = SocketTransport(server.address, schema=KeySchema(version=2))
+    tp.reset_store()
+    stats = Swarm.create(_mcfg(), cfg, transport=tp).run(1)
+    kinds = {tp.schema.parse(k).kind for k in tp.keys("weights/")}
+    assert {"shard_upload", "shard_reduced", "anchor"} <= kinds
+    audits = stats[-1].reduce_audits
+    assert audits and all(a.clean for a in audits)
+    tp.close()
+
+
+# ---------------------------------------------------------------------------
+# separate-process deployment (spawn cost: slow-marked; smoke.sh covers it
+# via examples/multiprocess_swarm.py)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_store_server_in_separate_process():
+    import os
+
+    from repro.runtime.store_server import spawn_store_server
+
+    proc, addr = spawn_store_server()
+    try:
+        tp = SocketTransport(addr)
+        pong = tp.ping()
+        assert pong["pid"] == proc.pid != os.getpid()
+        digest = tp.put("weights/ep0/s0/m0",
+                        np.arange(8, dtype=np.float32), actor="miner0")
+        got = tp.get("weights/ep0/s0/m0", actor="miner1")
+        assert _digest(got) == digest
+        with pytest.raises(StoreKeyError):
+            tp.get("weights/ep1/s0/merged", actor="miner0")
+        tp.stop_server()
+        proc.join(timeout=10.0)
+        assert proc.exitcode == 0
+    finally:
+        if proc.is_alive():  # pragma: no cover - cleanup on failure
+            proc.terminate()
