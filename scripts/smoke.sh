@@ -1,12 +1,18 @@
 #!/usr/bin/env bash
-# Pre-commit smoke check: fast test subset + the quickstart example +
-# a 1F1B pipeline-engine quickstart + the benchmark-artifact schema gate.
+# Pre-commit smoke check: swarmlint gate + fast test subset + sanitized
+# store/transport shards + the quickstart example + a 1F1B
+# pipeline-engine quickstart + the benchmark-artifact schema gate.
 #
 #   scripts/smoke.sh            # from the repo root
 #
-# Runs everything except tests marked `slow` (marker registered in
-# pyproject.toml, which also sets pythonpath=src — no PYTHONPATH needed),
-# then drives examples/quickstart.py end to end at a reduced step count,
+# Runs the swarmlint static gate (`python -m repro.analysis src`, exit 1
+# on any finding — rule catalog in docs/ANALYSIS.md), everything except
+# tests marked `slow` (marker registered in pyproject.toml, which also
+# sets pythonpath=src — no PYTHONPATH needed), a sanitized re-run of the
+# store/transport shards (REPRO_CHECKED_STORE=1 installs the
+# repro.analysis.checked_store KeySchema/digest sanitizer for the whole
+# session), then drives examples/quickstart.py end to end at a reduced
+# step count,
 # the sharded store-and-forward sync quickstart (examples/sharded_sync.py:
 # tiny N=4 swarm over SimulatedNetworkTransport, asserts merged-anchor
 # parity with the dense path), the multi-process socket-transport gate
@@ -26,12 +32,21 @@ cd "$(dirname "$0")/.."
 #   test_multidevice.py  — slow-marked subprocess suite (green on CPU)
 #   test_system.py::test_claim_c3_...     — known-red since the seed
 #     (baseline fails its own learning threshold at 60 steps)
+echo "== smoke: swarmlint (repro.analysis) — any finding fails the commit =="
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m repro.analysis src
+
+echo
 echo "== smoke: fast test subset (excluding -m slow + kernel sweeps) =="
 python -m pytest -q -m "not slow" \
     --ignore=tests/test_kernels.py \
     --ignore=tests/test_multidevice.py \
     --deselect "tests/test_system.py::test_claim_c3_bottleneck_trains_close_to_baseline" \
     tests
+
+echo
+echo "== smoke: sanitized store/transport shards (REPRO_CHECKED_STORE=1) =="
+REPRO_CHECKED_STORE=1 python -m pytest -q -m "not slow" \
+    tests/test_state_store.py tests/test_socket_transport.py
 
 echo
 echo "== smoke: quickstart example (reduced steps) =="

@@ -1,0 +1,47 @@
+"""repro.analysis — "swarmlint": static invariant checks + runtime sanitizers.
+
+Static side (``python -m repro.analysis``): AST rules over ``src/`` that
+gate every commit via scripts/smoke.sh — see ``docs/ANALYSIS.md`` for the
+rule catalog and suppression syntax.
+
+Runtime side: ``TraceWatch`` (XLA retrace counter for labeled regions,
+``analysis/retrace.py``) and ``CheckedStore`` (KeySchema/digest sanitizer
+for the state store, ``analysis/checked_store.py``, enabled suite-wide by
+``REPRO_CHECKED_STORE=1``).
+
+This package is imported by the test suite and the CLI only; nothing in
+the training path depends on it, and it must not import jax at module
+level (the sanitizers import lazily) so the lint stays cheap.
+"""
+from __future__ import annotations
+
+from repro.analysis.framework import (
+    Finding, ModuleSource, Project, Rule, load_paths, run_rules,
+)
+from repro.analysis.rules_keys import KeyLiteralRule
+from repro.analysis.rules_protocol import ProtocolConformanceRule
+from repro.analysis.rules_safety import NoPickleEvalRule, SpawnSafetyRule
+from repro.analysis.rules_serde import SerdeCoverageRule
+
+ALL_RULES = (
+    KeyLiteralRule,
+    SerdeCoverageRule,
+    ProtocolConformanceRule,
+    NoPickleEvalRule,
+    SpawnSafetyRule,
+)
+
+__all__ = [
+    "ALL_RULES",
+    "Finding",
+    "KeyLiteralRule",
+    "ModuleSource",
+    "NoPickleEvalRule",
+    "Project",
+    "ProtocolConformanceRule",
+    "Rule",
+    "SerdeCoverageRule",
+    "SpawnSafetyRule",
+    "load_paths",
+    "run_rules",
+]

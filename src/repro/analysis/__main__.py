@@ -1,0 +1,63 @@
+"""``python -m repro.analysis [paths...]`` — run swarmlint as a commit gate.
+
+Exit status is the contract: 0 means no findings, 1 means findings (one
+per line, ``path:line: [rule] message``).  ``scripts/smoke.sh`` runs this
+over ``src`` before the test shards, so a key literal outside
+``api/keys.py`` or an unregistered ``*Msg`` fails the commit the same way
+a red test does.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.analysis import ALL_RULES
+from repro.analysis.framework import load_paths, run_rules
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="swarmlint: static invariant checks over the repro tree")
+    parser.add_argument("paths", nargs="*", default=["src"],
+                        help="files or directories to scan (default: src)")
+    parser.add_argument("--rule", action="append", default=None,
+                        metavar="NAME",
+                        help="run only the named rule (repeatable)")
+    parser.add_argument("--list-rules", action="store_true",
+                        help="print the rule catalog and exit")
+    parser.add_argument("--json", action="store_true",
+                        help="emit findings as a JSON array")
+    args = parser.parse_args(argv)
+
+    rules = [cls() for cls in ALL_RULES]
+    if args.list_rules:
+        for rule in rules:
+            print(f"{rule.name:22s} {rule.description}")
+        return 0
+    if args.rule:
+        known = {r.name for r in rules}
+        unknown = sorted(set(args.rule) - known)
+        if unknown:
+            print(f"unknown rule(s): {', '.join(unknown)} "
+                  f"(see --list-rules)", file=sys.stderr)
+            return 2
+        rules = [r for r in rules if r.name in set(args.rule)]
+
+    modules = load_paths(args.paths)
+    findings = run_rules(modules, rules)
+
+    if args.json:
+        print(json.dumps([f.__dict__ for f in findings], indent=2))
+    else:
+        for f in findings:
+            print(f.render())
+        if findings:
+            print(f"swarmlint: {len(findings)} finding(s) in "
+                  f"{len(modules)} file(s)", file=sys.stderr)
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

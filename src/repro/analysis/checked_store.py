@@ -1,0 +1,157 @@
+"""CheckedStore: a KeySchema/digest sanitizer over ``StateStore``.
+
+The store is the trust boundary of the whole swarm (paper §2: *all*
+traffic transits it), so the tier-1 suite can run with every store
+operation sanitized.  ``StoreSanitizer.install()`` class-patches
+``StateStore.put`` / ``fetch_entry`` / ``get_entry`` — one choke point
+that covers the in-process transports, the simulated network *and* the
+socket store server, which all bottom out in the same class — and checks:
+
+  key shape      every key whose first segment is a store namespace
+                 (``activations``/``weights``/``scores``) must parse under
+                 the active ``KeySchema`` — a malformed key is a bug at the
+                 producer, fatal immediately (``CheckedStoreError``) rather
+                 than a ``StoreKeyError`` at some consumer minutes later.
+                 Keys outside the namespaces (ad-hoc test keys) pass.
+
+  write-after-publish
+                 a ``put`` to an existing key with a *different* digest.
+                 Fatal for weights/scores — the honest runtime never
+                 rewrites those, it GCs by prefix and re-puts.  Recorded
+                 (not fatal) for activations: the fault model deliberately
+                 re-publishes corrupted activations over honest ones
+                 (``TrainingPhase`` under ``FaultModel``), and catching
+                 that is the *validators'* job — the sanitizer only keeps
+                 the audit trail.  Idempotent re-puts (same digest) pass.
+
+  read-before-write
+                 a fetch of a never-written key.  The store already raises
+                 ``StoreKeyError``; the sanitizer records the event (who
+                 asked for what) before re-raising, so a flaky ordering
+                 bug leaves evidence even when the exception is swallowed
+                 by retry logic upstream.
+
+Enabled suite-wide by ``REPRO_CHECKED_STORE=1`` (see tests/conftest.py);
+smoke.sh runs the store/transport shards under the flag.  State is
+derived from the live ``store._data``, so server ``reset`` and epoch GC
+(delete + re-put) behave naturally.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.api import keys as _keys
+
+_NAMESPACES = (_keys.NS_ACTIVATIONS, _keys.NS_WEIGHTS, _keys.NS_SCORES)
+
+
+class CheckedStoreError(AssertionError):
+    """A store invariant the honest runtime must never break."""
+
+
+@dataclasses.dataclass(frozen=True)
+class Violation:
+    kind: str         # "write-after-publish" | "read-before-write"
+    key: str
+    actor: str
+    detail: str
+
+
+class StoreSanitizer:
+    """Install with ``with StoreSanitizer():`` or ``.install()``; while
+    active, every ``StateStore`` in the process is checked."""
+
+    def __init__(self, schema: Optional["_keys.KeySchema"] = None):
+        # v2 parses every v1 key, so it is the right default even for
+        # stores populated by v1 producers
+        self.schema = schema or _keys.KeySchema(version=2)
+        self.records: list[Violation] = []
+        self._originals = None
+
+    # -- checks ------------------------------------------------------------
+    def _validate_key(self, key: str, actor: str) -> None:
+        if key.split("/", 1)[0] in _NAMESPACES:
+            try:
+                self.schema.parse(key)
+            except ValueError as exc:
+                raise CheckedStoreError(
+                    f"checked-store: actor {actor!r} used a malformed "
+                    f"store key: {exc}") from None
+
+    def report(self) -> dict:
+        out: dict = {}
+        for v in self.records:
+            out[v.kind] = out.get(v.kind, 0) + 1
+        return out
+
+    # -- patching ----------------------------------------------------------
+    def install(self) -> "StoreSanitizer":
+        if self._originals is not None:
+            raise RuntimeError("StoreSanitizer already installed")
+        from repro.runtime.state_store import StateStore, StoreKeyError
+
+        orig_put = StateStore.put
+        orig_fetch_entry = StateStore.fetch_entry
+        orig_get_entry = StateStore.get_entry
+        sanitizer = self
+
+        def put(store, key, value, actor="?", codec=None, meta=None):
+            sanitizer._validate_key(key, actor)
+            prior = store._data.get(key)
+            entry = orig_put(store, key, value, actor=actor,
+                             codec=codec, meta=meta)
+            if prior is not None and prior.digest != entry.digest:
+                violation = Violation(
+                    "write-after-publish", key, actor,
+                    f"digest {prior.digest} -> {entry.digest}")
+                if key.split("/", 1)[0] == _keys.NS_ACTIVATIONS:
+                    # adversarial re-publish is part of the fault model;
+                    # validators, not the store, must catch it
+                    sanitizer.records.append(violation)
+                else:
+                    raise CheckedStoreError(
+                        f"checked-store: write-after-publish by "
+                        f"{actor!r} on {key!r} ({violation.detail}); "
+                        f"honest writers GC by prefix and re-put, they "
+                        f"never rewrite a published key")
+            return entry
+
+        def fetch_entry(store, key, actor="?"):
+            sanitizer._validate_key(key, actor)
+            try:
+                return orig_fetch_entry(store, key, actor)
+            except StoreKeyError as exc:
+                sanitizer.records.append(Violation(
+                    "read-before-write", key, actor,
+                    f"nearest prefix {exc.nearest_prefix!r}"))
+                raise
+
+        def get_entry(store, key):
+            try:
+                return orig_get_entry(store, key)
+            except StoreKeyError as exc:
+                sanitizer.records.append(Violation(
+                    "read-before-write", key, "?",
+                    f"nearest prefix {exc.nearest_prefix!r}"))
+                raise
+
+        StateStore.put = put
+        StateStore.fetch_entry = fetch_entry
+        StateStore.get_entry = get_entry
+        self._originals = (orig_put, orig_fetch_entry, orig_get_entry)
+        return self
+
+    def uninstall(self) -> None:
+        if self._originals is None:
+            return
+        from repro.runtime.state_store import StateStore
+        (StateStore.put, StateStore.fetch_entry,
+         StateStore.get_entry) = self._originals
+        self._originals = None
+
+    def __enter__(self) -> "StoreSanitizer":
+        return self.install()
+
+    def __exit__(self, *exc) -> None:
+        self.uninstall()

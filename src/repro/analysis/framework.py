@@ -1,0 +1,189 @@
+"""swarmlint core: rule base class, finding model, suppression, the walker.
+
+IOTA's correctness rests on a handful of *cross-cutting* invariants —
+every store key is minted by the one versioned ``KeySchema``, every wire
+message round-trips through ``api/serde.py``, every ``Transport``/``Phase``
+implements its full protocol — and PR 5 showed these break silently (the
+``startswith`` prefix bug shipped in the seed and survived four PRs).
+This package makes them machine-checked: each invariant is a small
+``Rule`` over parsed ASTs, run by ``python -m repro.analysis`` and gated
+in ``scripts/smoke.sh`` and the test suite (``tests/test_analysis.py``).
+
+Rules see two granularities:
+
+  * ``check_module(module)``  — per-file checks (key literals, pickle/eval);
+  * ``check_project(project)``— cross-file checks (serde coverage, protocol
+    conformance, spawn-import closures).
+
+Suppression mirrors the usual linter contract, scoped per rule:
+
+  * line:  ``x = "weights/oops"  # swarmlint: disable=key-literal``
+  * file:  ``# swarmlint: disable-file=key-literal`` anywhere at column 0
+
+``disable=all`` silences every rule for that line/file.  Suppressions are
+deliberately loud in review (they name the rule) — the linter is a commit
+gate, so an unexplained blanket disable should not survive review.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+import re
+from typing import Iterable, Iterator, Optional
+
+_DISABLE_LINE = re.compile(r"#\s*swarmlint:\s*disable=([\w,\-]+)")
+_DISABLE_FILE = re.compile(r"^#\s*swarmlint:\s*disable-file=([\w,\-]+)")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation, pointing at a file:line a human can jump to."""
+    rule: str
+    path: str          # repo-relative where possible (stable in test output)
+    line: int
+    message: str
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}: [{self.rule}] {self.message}"
+
+
+class ModuleSource:
+    """One parsed source file: text, lines, AST, dotted module name, and
+    the docstring-constant set (rules that scan string literals must not
+    fire on documentation — keys in docstrings are explanation, not
+    minting)."""
+
+    def __init__(self, path: str, rel: str, text: str):
+        self.path = path
+        self.rel = rel.replace(os.sep, "/")
+        self.text = text
+        self.lines = text.splitlines()
+        self.tree = ast.parse(text, filename=path)
+        self.module = self._dotted_name(self.rel)
+        self.docstring_nodes = frozenset(
+            id(node) for node in self._docstring_constants(self.tree))
+
+    @staticmethod
+    def _dotted_name(rel: str) -> str:
+        """`src/repro/api/keys.py` -> `repro.api.keys` (best effort: the
+        path segments after the last `src/`, else the whole relative path)."""
+        parts = rel.split("/")
+        if "src" in parts:
+            parts = parts[len(parts) - parts[::-1].index("src"):]
+        if parts and parts[-1].endswith(".py"):
+            parts[-1] = parts[-1][:-3]
+        if parts and parts[-1] == "__init__":
+            parts = parts[:-1]
+        return ".".join(p for p in parts if p)
+
+    @staticmethod
+    def _docstring_constants(tree: ast.AST) -> Iterator[ast.Constant]:
+        for node in ast.walk(tree):
+            if isinstance(node, (ast.Module, ast.ClassDef, ast.FunctionDef,
+                                 ast.AsyncFunctionDef)):
+                body = node.body
+                if (body and isinstance(body[0], ast.Expr)
+                        and isinstance(body[0].value, ast.Constant)
+                        and isinstance(body[0].value.value, str)):
+                    yield body[0].value
+
+    def is_docstring(self, node: ast.AST) -> bool:
+        return id(node) in self.docstring_nodes
+
+    def suppressed_rules_for_line(self, line: int) -> frozenset:
+        """Rule names disabled on a 1-indexed source line."""
+        if 1 <= line <= len(self.lines):
+            m = _DISABLE_LINE.search(self.lines[line - 1])
+            if m:
+                return frozenset(m.group(1).split(","))
+        return frozenset()
+
+    @property
+    def file_suppressed_rules(self) -> frozenset:
+        names: set = set()
+        for raw in self.lines:
+            m = _DISABLE_FILE.match(raw)
+            if m:
+                names.update(m.group(1).split(","))
+        return frozenset(names)
+
+
+class Project:
+    """The scanned file set, indexed by dotted module name for the
+    cross-file rules (import-closure walks, registry cross-checks)."""
+
+    def __init__(self, modules: Iterable[ModuleSource]):
+        self.modules = list(modules)
+        self.by_name = {m.module: m for m in self.modules if m.module}
+
+    def find(self, dotted: str) -> Optional[ModuleSource]:
+        return self.by_name.get(dotted)
+
+
+class Rule:
+    """One invariant.  Subclasses set ``name``/``description`` and override
+    at least one of the two hooks; findings they yield are filtered through
+    the suppression comments centrally, so rules never re-implement it."""
+
+    name = "rule"
+    description = ""
+
+    def check_module(self, module: ModuleSource) -> Iterable[Finding]:
+        return ()
+
+    def check_project(self, project: Project) -> Iterable[Finding]:
+        return ()
+
+
+def load_paths(paths: Iterable[str], root: Optional[str] = None
+               ) -> list[ModuleSource]:
+    """Collect ``.py`` files under each path (file or directory), skipping
+    caches and hidden dirs.  ``root`` anchors the repo-relative names."""
+    root = os.path.abspath(root or os.getcwd())
+    seen: dict[str, ModuleSource] = {}
+    for path in paths:
+        ap = os.path.abspath(path)
+        files: list[str] = []
+        if os.path.isfile(ap):
+            files = [ap]
+        else:
+            for dirpath, dirnames, filenames in os.walk(ap):
+                dirnames[:] = sorted(
+                    d for d in dirnames
+                    if not d.startswith(".") and d != "__pycache__")
+                files.extend(os.path.join(dirpath, f)
+                             for f in sorted(filenames) if f.endswith(".py"))
+        for f in files:
+            if f in seen:
+                continue
+            with open(f, encoding="utf-8") as fh:
+                text = fh.read()
+            rel = os.path.relpath(f, root)
+            seen[f] = ModuleSource(f, rel, text)
+    return list(seen.values())
+
+
+def run_rules(modules: Iterable[ModuleSource],
+              rules: Iterable[Rule]) -> list[Finding]:
+    """All findings from all rules, suppression comments applied, sorted
+    by (path, line, rule) so output is diffable."""
+    project = Project(modules)
+    raw: list[Finding] = []
+    for rule in rules:
+        for m in project.modules:
+            raw.extend(rule.check_module(m))
+        raw.extend(rule.check_project(project))
+
+    by_path = {m.path: m for m in project.modules}
+    by_rel = {m.rel: m for m in project.modules}
+    kept = []
+    for f in raw:
+        src = by_path.get(f.path) or by_rel.get(f.path)
+        if src is not None:
+            file_off = src.file_suppressed_rules
+            line_off = src.suppressed_rules_for_line(f.line)
+            if ({f.rule, "all"} & (file_off | line_off)):
+                continue
+        kept.append(f)
+    return sorted(kept, key=lambda f: (f.path, f.line, f.rule))

@@ -1,0 +1,80 @@
+"""key-literal: store keys are minted by ``repro.api.keys`` and nowhere else.
+
+The seed scattered key f-strings across orchestrator/miner/validator;
+PR 1 centralized them into the versioned ``KeySchema``, whose acceptance
+grep (``grep -rn '"activations/' src/repro`` hits only keys.py) this rule
+turns into a commit gate that also sees f-string *fragments* — the form
+the seed actually used (``f"weights/ep{epoch}/..."``), which a plain grep
+for the quoted prefix can miss.
+
+A literal counts as key-shaped when its static text contains any of the
+``KEY_SHAPES`` markers.  Docstrings are exempt (keys in documentation are
+explanation, not minting); ``repro/api/keys.py`` is the one allowed
+minting site.  Tests and examples are out of scope by convention — the
+CLI scans ``src/`` — because fixtures legitimately spell keys out to pin
+the schema's on-the-wire layout.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, Iterator
+
+from repro.analysis.framework import Finding, ModuleSource, Rule
+
+# this file necessarily spells the markers out — the one sanctioned use
+# swarmlint: disable-file=key-literal
+
+# the three store namespaces, plus the v2 shard segment (an f-string like
+# f"...shard{k}..." renders as "shard{}" in static text, so "shard{" also
+# catches the interpolated form)
+KEY_SHAPES = ("activations/", "weights/", "scores/", "shard{")
+
+# the single sanctioned minting site (repo-relative suffix match, so the
+# rule works from any scan root)
+MINT_MODULES = ("repro/api/keys.py",)
+
+
+def _static_text(node: ast.AST) -> Iterator[str]:
+    """The statically known text of a string expression: the value of a
+    plain literal, or the constant fragments of an f-string joined with
+    ``{}`` placeholders (``f"weights/ep{e}"`` -> ``"weights/ep{}"``)."""
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        yield node.value
+    elif isinstance(node, ast.JoinedStr):
+        parts = []
+        for v in node.values:
+            if isinstance(v, ast.Constant) and isinstance(v.value, str):
+                parts.append(v.value)
+            else:
+                parts.append("{}")
+        yield "".join(parts)
+
+
+class KeyLiteralRule(Rule):
+    name = "key-literal"
+    description = ("store-key-shaped string literals/f-strings outside "
+                   "repro/api/keys.py (use KeySchema helpers)")
+
+    def check_module(self, module: ModuleSource) -> Iterable[Finding]:
+        if module.rel.endswith(MINT_MODULES):
+            return
+        # constant fragments inside an f-string are themselves Constant
+        # nodes; report the JoinedStr once, not each fragment again
+        in_joined = {
+            id(v) for n in ast.walk(module.tree)
+            if isinstance(n, ast.JoinedStr) for v in n.values}
+        for node in ast.walk(module.tree):
+            if not isinstance(node, (ast.Constant, ast.JoinedStr)):
+                continue
+            if id(node) in in_joined:
+                continue
+            if module.is_docstring(node):
+                continue
+            for text in _static_text(node):
+                hit = next((s for s in KEY_SHAPES if s in text), None)
+                if hit:
+                    yield Finding(
+                        self.name, module.rel, node.lineno,
+                        f"key-shaped literal {text!r} (marker {hit!r}): "
+                        f"mint store keys via repro.api.keys.KeySchema")
+                    break

@@ -1,0 +1,166 @@
+"""protocol-conformance: bound classes implement the *full* protocol.
+
+``typing.Protocol`` only checks structurally at ``isinstance`` time — and
+``runtime_checkable`` checks *names*, not signatures, and only when
+somebody happens to call ``isinstance``.  A transport that forgets
+``link_report`` or a phase without ``name`` drifts silently until a
+scenario hits the missing method mid-epoch.  This rule closes the gap
+statically.
+
+Binding model (how a class is known to implement a protocol):
+
+  * name suffix — ``class SocketTransport`` binds to ``Transport``,
+    ``class ValidationPhase`` binds to ``Phase``;
+  * marker comment on the ``class`` line for classes whose role their
+    name doesn't spell: ``class OverlappedTrainingSharing:  # swarmlint:
+    implements=Phase``.
+
+The protocol surface is parsed from the ``Protocol`` class body itself
+(method defs + annotated attributes), so extending a protocol
+automatically extends the conformance check.  Inheritance is resolved
+within the scan scope (``SimulatedNetworkTransport`` satisfies the
+surface through ``InProcessTransport``); attribute requirements are met
+by a class-level assignment/annotation or a ``self.<attr> = ...`` in any
+method.  Classes inheriting from an unknown (out-of-scope) base are
+skipped — their surface cannot be seen statically.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import Iterable, Optional
+
+from repro.analysis.framework import Finding, ModuleSource, Project, Rule
+
+# protocol name -> module that defines the Protocol class
+PROTOCOLS = {
+    "Transport": "repro.api.transport",
+    "Phase": "repro.api.phases",
+}
+
+_IMPLEMENTS = re.compile(r"#\s*swarmlint:\s*implements=(\w+)")
+
+
+def protocol_surface(tree: ast.AST, proto_name: str
+                     ) -> tuple[set, set]:
+    """(methods, attrs) a Protocol class body declares."""
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ClassDef) and node.name == proto_name:
+            methods, attrs = set(), set()
+            for item in node.body:
+                if isinstance(item, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    if not item.name.startswith("_"):
+                        methods.add(item.name)
+                elif isinstance(item, ast.AnnAssign) and isinstance(
+                        item.target, ast.Name):
+                    attrs.add(item.target.id)
+            return methods, attrs
+    raise LookupError(f"Protocol class {proto_name} not found")
+
+
+class _ClassInfo:
+    def __init__(self, node: ast.ClassDef, module: ModuleSource):
+        self.node = node
+        self.module = module
+        self.name = node.name
+        self.bases = [b.attr if isinstance(b, ast.Attribute)
+                      else b.id if isinstance(b, ast.Name) else None
+                      for b in node.bases]
+        self.methods = {item.name for item in node.body
+                        if isinstance(item, (ast.FunctionDef,
+                                             ast.AsyncFunctionDef))}
+        self.attrs = self._own_attrs(node)
+
+    @staticmethod
+    def _own_attrs(node: ast.ClassDef) -> set:
+        attrs = set()
+        for item in node.body:
+            if isinstance(item, ast.Assign):
+                attrs.update(t.id for t in item.targets
+                             if isinstance(t, ast.Name))
+            elif isinstance(item, ast.AnnAssign) and isinstance(
+                    item.target, ast.Name):
+                attrs.add(item.target.id)
+        # self.<attr> = ... anywhere in the class's methods
+        for sub in ast.walk(node):
+            if isinstance(sub, ast.Assign):
+                for t in sub.targets:
+                    if (isinstance(t, ast.Attribute)
+                            and isinstance(t.value, ast.Name)
+                            and t.value.id == "self"):
+                        attrs.add(t.attr)
+        return attrs
+
+
+def _bound_protocol(info: _ClassInfo) -> Optional[str]:
+    """Which protocol (if any) this class claims to implement."""
+    header = info.module.lines[info.node.lineno - 1] \
+        if info.node.lineno <= len(info.module.lines) else ""
+    m = _IMPLEMENTS.search(header)
+    if m:
+        return m.group(1)
+    for proto in PROTOCOLS:
+        if info.name != proto and info.name.endswith(proto):
+            return proto
+    return None
+
+
+class ProtocolConformanceRule(Rule):
+    name = "protocol-conformance"
+    description = ("classes bound as Transport/Phase define the full "
+                   "protocol surface (methods + attributes)")
+
+    def check_project(self, project: Project) -> Iterable[Finding]:
+        surfaces = {}
+        for proto, mod_name in PROTOCOLS.items():
+            mod = project.find(mod_name)
+            if mod is not None:
+                try:
+                    surfaces[proto] = protocol_surface(mod.tree, proto)
+                except LookupError:
+                    yield Finding(self.name, mod.rel, 1,
+                                  f"Protocol class {proto} not found in "
+                                  f"{mod_name}")
+        if not surfaces:
+            return
+
+        classes: dict[str, _ClassInfo] = {}
+        for m in project.modules:
+            for node in ast.iter_child_nodes(m.tree):
+                if isinstance(node, ast.ClassDef):
+                    classes.setdefault(node.name, _ClassInfo(node, m))
+
+        def full_surface(info: _ClassInfo, seen: frozenset
+                         ) -> Optional[tuple[set, set]]:
+            """Methods/attrs incl. inherited; None if a base is unknown."""
+            methods, attrs = set(info.methods), set(info.attrs)
+            for base in info.bases:
+                if base in (None, "object", "Protocol") \
+                        or base in PROTOCOLS:
+                    continue
+                if base not in classes or base in seen:
+                    return None
+                up = full_surface(classes[base], seen | {base})
+                if up is None:
+                    return None
+                methods |= up[0]
+                attrs |= up[1]
+            return methods, attrs
+
+        for cls_name in sorted(classes):
+            info = classes[cls_name]
+            proto = _bound_protocol(info)
+            if proto is None or proto not in surfaces:
+                continue
+            got = full_surface(info, frozenset({cls_name}))
+            if got is None:
+                continue        # out-of-scope base: cannot judge statically
+            methods, attrs = got
+            want_m, want_a = surfaces[proto]
+            missing = sorted(want_m - methods) + \
+                [f"{a} (attribute)" for a in sorted(want_a - attrs)]
+            if missing:
+                yield Finding(
+                    self.name, info.module.rel, info.node.lineno,
+                    f"{cls_name} is bound as {proto} but lacks: "
+                    f"{', '.join(missing)}")

@@ -1,0 +1,204 @@
+"""no-pickle / no-eval and spawn-safety: hazards that live at import time.
+
+no-pickle-eval
+    ``src/`` ships a hand-rolled tagged binary format (``api/serde.py``)
+    precisely so the store server never unpickles peer bytes.  This rule
+    keeps it that way: importing ``pickle``/``dill``/``shelve``/``marshal``
+    or calling bare ``eval``/``exec`` anywhere under ``src/`` is a finding.
+    (``cloudpickle`` inside jax is jax's business; *our* modules stay out.)
+
+spawn-safety
+    ``spawn_store_server`` launches the store server with the ``spawn``
+    start method: the child re-imports ``repro.runtime.store_server`` and,
+    transitively, everything that module pulls in at top level — including
+    package ``__init__`` chains (``from repro.api import serde`` executes
+    ``repro/api/__init__.py`` wholesale).  Module-level JAX *device* work
+    in that closure (``jnp.array(...)``, ``jax.devices()``) initializes a
+    second XLA backend per child: slow at best, wedged at worst when the
+    parent holds the platform.  The rule walks the static import closure
+    from the spawn roots and flags module-level calls into jnp /
+    jax.random / the device API.  Lazily imported modules (imports inside
+    functions) are outside the closure by construction — that is the
+    sanctioned fix, and how ``runtime/__init__.py`` already avoids it.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, Iterator
+
+from repro.analysis.framework import Finding, ModuleSource, Project, Rule
+
+FORBIDDEN_IMPORTS = ("pickle", "cPickle", "dill", "shelve", "marshal")
+
+# entry points that run in freshly spawned interpreters
+SPAWN_ROOTS = ("repro.runtime.store_server",)
+
+# module-level calls with these dotted prefixes allocate buffers / touch
+# the backend at import time
+DEVICE_PREFIXES = ("jnp.", "jax.numpy.", "jax.random.")
+DEVICE_CALLS = (
+    "jax.devices", "jax.local_devices", "jax.device_count",
+    "jax.local_device_count", "jax.device_put", "jax.default_backend",
+    "jax.make_mesh",
+)
+
+
+class NoPickleEvalRule(Rule):
+    name = "no-pickle-eval"
+    description = ("no pickle-family imports and no bare eval/exec in src/ "
+                   "(the wire format is api/serde.py)")
+
+    def check_module(self, module: ModuleSource) -> Iterable[Finding]:
+        for node in ast.walk(module.tree):
+            if isinstance(node, ast.Import):
+                for alias in node.names:
+                    root = alias.name.split(".")[0]
+                    if root in FORBIDDEN_IMPORTS:
+                        yield Finding(
+                            self.name, module.rel, node.lineno,
+                            f"import of {alias.name!r}: peer bytes go "
+                            f"through api/serde.py, never pickle")
+            elif isinstance(node, ast.ImportFrom):
+                root = (node.module or "").split(".")[0]
+                if root in FORBIDDEN_IMPORTS:
+                    yield Finding(
+                        self.name, module.rel, node.lineno,
+                        f"import from {node.module!r}: peer bytes go "
+                        f"through api/serde.py, never pickle")
+            elif (isinstance(node, ast.Call)
+                  and isinstance(node.func, ast.Name)
+                  and node.func.id in ("eval", "exec")):
+                yield Finding(
+                    self.name, module.rel, node.lineno,
+                    f"call to bare {node.func.id}(): not allowed in src/")
+
+
+def _dotted_call_path(func: ast.AST) -> str:
+    """``jax.random.PRNGKey`` for an Attribute chain, ``jnp`` for a Name,
+    '' when the callee root is not a plain name (subscripts, calls)."""
+    parts: list[str] = []
+    node = func
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+def _import_time_calls(tree: ast.Module) -> Iterator[ast.Call]:
+    """Call nodes that execute when the module is imported: everything
+    except function/lambda bodies (class bodies *do* run at import;
+    decorators and default-argument expressions run at def time)."""
+
+    def visit(node: ast.AST) -> Iterator[ast.Call]:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for dec in node.decorator_list:
+                yield from walk_expr(dec)
+            for default in (node.args.defaults + node.args.kw_defaults):
+                if default is not None:
+                    yield from walk_expr(default)
+            return
+        if isinstance(node, ast.Lambda):
+            return
+        if isinstance(node, ast.Call):
+            yield node
+        for child in ast.iter_child_nodes(node):
+            yield from visit(child)
+
+    def walk_expr(node: ast.AST) -> Iterator[ast.Call]:
+        for sub in ast.walk(node):
+            if isinstance(sub, ast.Call):
+                yield sub
+
+    for stmt in tree.body:
+        yield from visit(stmt)
+
+
+def module_level_device_calls(module: ModuleSource
+                              ) -> Iterator[tuple[int, str]]:
+    """(line, dotted-callee) for import-time calls into the device API."""
+    for call in _import_time_calls(module.tree):
+        path = _dotted_call_path(call.func)
+        if not path:
+            continue
+        if (path.startswith(DEVICE_PREFIXES) or path in DEVICE_CALLS
+                or path in ("jnp", "jax.numpy")):
+            yield call.lineno, path
+
+
+def spawn_import_closure(project: Project) -> dict[str, ModuleSource]:
+    """Static import closure (within scan scope) of the spawn roots,
+    following module-level imports only and including the package
+    ``__init__`` chain each import executes."""
+    closure: dict[str, ModuleSource] = {}
+    queue: list[str] = []
+
+    def enqueue(dotted: str) -> None:
+        # importing a.b.c executes a/__init__ and a.b/__init__ too
+        parts = dotted.split(".")
+        for i in range(1, len(parts) + 1):
+            name = ".".join(parts[:i])
+            if name not in closure and project.find(name) is not None:
+                queue.append(name)
+
+    def module_level_imports(tree: ast.Module) -> Iterator[ast.stmt]:
+        # imports under top-level if/try run at import time too; imports
+        # inside defs are lazy and deliberately out of the closure
+        def visit(node):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.ClassDef, ast.Lambda)):
+                return
+            if isinstance(node, (ast.Import, ast.ImportFrom)):
+                yield node
+            for child in ast.iter_child_nodes(node):
+                yield from visit(child)
+        for stmt in tree.body:
+            yield from visit(stmt)
+
+    for root in SPAWN_ROOTS:
+        enqueue(root)           # a root import executes its package chain
+    while queue:
+        dotted = queue.pop()
+        if dotted in closure:
+            continue
+        mod = project.find(dotted)
+        if mod is None:
+            continue
+        closure[dotted] = mod
+        for node in module_level_imports(mod.tree):
+            if isinstance(node, ast.Import):
+                for alias in node.names:
+                    enqueue(alias.name)
+            else:
+                base = node.module or ""
+                if node.level:      # relative: resolve against this module
+                    pkg = dotted.split(".")
+                    # for a module, level 1 is its own package; __init__
+                    # modules are already package-named by ModuleSource
+                    if not mod.rel.endswith("__init__.py"):
+                        pkg = pkg[:-1]
+                    pkg = pkg[:len(pkg) - (node.level - 1)]
+                    base = ".".join(pkg + ([base] if base else []))
+                if base:
+                    enqueue(base)
+                    for alias in node.names:
+                        enqueue(f"{base}.{alias.name}")
+    return closure
+
+
+class SpawnSafetyRule(Rule):
+    name = "spawn-safety"
+    description = ("no module-level JAX device work in the import closure "
+                   "of spawn_store_server children")
+
+    def check_project(self, project: Project) -> Iterable[Finding]:
+        closure = spawn_import_closure(project)
+        for dotted in sorted(closure):
+            mod = closure[dotted]
+            for line, path in module_level_device_calls(mod):
+                yield Finding(
+                    self.name, mod.rel, line,
+                    f"module-level {path}(...) runs in every spawned store "
+                    f"server child (imported via {dotted}); make it lazy")

@@ -1,0 +1,89 @@
+"""serde-coverage: every ``*Msg`` dataclass has a wire-format registration.
+
+``repro.api.serde`` carries an explicit message registry (the
+``_register(messages.XxxMsg)`` block): a typed envelope can only cross
+the socket if its type is registered for ``encode_message``/
+``decode_message``.  Registration is deliberately *explicit* — no
+``__subclasses__`` magic — precisely so this rule (and a human reading
+serde.py) can see coverage statically.
+
+The rule cross-checks the two files by AST:
+
+  * every class ``XxxMsg`` defined in ``repro/api/messages.py`` must
+    appear as a ``_register(...)`` argument in ``repro/api/serde.py``
+    (adding a new message type without wire coverage fails the lint —
+    and the registry-driven round-trip test in tests/test_serde.py);
+  * every registered name must still exist in messages.py (a stale
+    registration after a rename/delete also fails).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable
+
+from repro.analysis.framework import Finding, Project, Rule
+
+MESSAGES_MODULE = "repro.api.messages"
+SERDE_MODULE = "repro.api.serde"
+REGISTER_FN = "_register"
+
+
+def message_class_names(tree: ast.AST) -> dict[str, int]:
+    """``*Msg`` classes defined at module level -> line number."""
+    out = {}
+    for node in ast.iter_child_nodes(tree):
+        if isinstance(node, ast.ClassDef) and node.name.endswith("Msg"):
+            out[node.name] = node.lineno
+    return out
+
+
+def registered_names(tree: ast.AST) -> dict[str, int]:
+    """Arguments of ``_register(...)`` calls -> line number.  Accepts the
+    bare name or an attribute path (``messages.ActivationMsg``)."""
+    out = {}
+    for node in ast.walk(tree):
+        if not (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Name)
+                and node.func.id == REGISTER_FN and node.args):
+            continue
+        arg = node.args[0]
+        if isinstance(arg, ast.Attribute):
+            out[arg.attr] = node.lineno
+        elif isinstance(arg, ast.Name):
+            out[arg.id] = node.lineno
+    return out
+
+
+class SerdeCoverageRule(Rule):
+    name = "serde-coverage"
+    description = ("every *Msg dataclass in api/messages.py is registered "
+                   "in api/serde.py's message registry")
+
+    def check_project(self, project: Project) -> Iterable[Finding]:
+        messages = project.find(MESSAGES_MODULE)
+        serde = project.find(SERDE_MODULE)
+        if messages is None or serde is None:
+            # scanning a subtree that holds one but not both is a config
+            # error worth surfacing, not silently passing
+            if messages is not None or serde is not None:
+                present = messages or serde
+                missing = (SERDE_MODULE if messages is not None
+                           else MESSAGES_MODULE)
+                yield Finding(self.name, present.rel, 1,
+                              f"cannot cross-check: {missing} not in scan "
+                              f"scope")
+            return
+        defined = message_class_names(messages.tree)
+        registered = registered_names(serde.tree)
+        for cls, line in sorted(defined.items()):
+            if cls not in registered:
+                yield Finding(
+                    self.name, messages.rel, line,
+                    f"{cls} has no _register(...) entry in api/serde.py — "
+                    f"it cannot cross the socket transport")
+        for cls, line in sorted(registered.items()):
+            if cls not in defined:
+                yield Finding(
+                    self.name, serde.rel, line,
+                    f"_register({cls}) is stale: no such *Msg class in "
+                    f"api/messages.py")

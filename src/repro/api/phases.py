@@ -360,7 +360,7 @@ class ReduceAuditPhase:
                     v.audit_reduce(state.epoch, s))
 
 
-class OverlappedTrainingSharing:
+class OverlappedTrainingSharing:  # swarmlint: implements=Phase
     """Async-phases scenario (ROADMAP open item): qualifying miners upload
     their compressed weights *while* training-tick activations still stream,
     inside one ``transport.parallel()`` block.

@@ -500,13 +500,22 @@ def pipeline_1f1b_grads(params, batch, cfg: ModelConfig, spec: PipelineSpec,
                         z_loss: float = 1e-4, compute_dtype=jnp.bfloat16):
     """One shard_map computing ``(loss, grads)`` under the 1F1B timetable
 
-    (module docstring).  Per slot each stage re-runs its forward from the
-    stashed *wire code* under ``jax.vjp`` (decode -> blocks -> encode +
-    loss head), seeds the cotangent from the incoming backward wire code
-    (or 1.0 for the last stage's loss), and accumulates param grads; F and
-    B slots share the single vjp call (the primal serves forward slots).
-    The activation stash is a min(n_stages, n_micro)-slot ring of codes —
-    the 1F1B memory claim, vs GPipe's one code per tick.
+    (module docstring).  Each slot dispatches on its timetable role via
+    ``lax.switch`` — idle, forward, or backward — so a stage only pays for
+    the work its slot actually does: forward slots run the primal blocks
+    alone (no loss head, no pullback), backward slots re-run the stage's
+    forward from the stashed *wire code* under ``jax.vjp`` (decode ->
+    blocks -> encode + loss head), seed the cotangent from the incoming
+    backward wire code (or 1.0 for the last stage's loss), and accumulate
+    param grads.  ``lax.switch`` on the per-device role is legal under
+    shard_map here because the branches contain no collectives — the two
+    ``ppermute`` hand-offs stay outside, executed by every device each
+    slot.  (The previous revision ran the full vjp + vocab head in *every*
+    slot, masked; on CPU that lockstep compute made 1F1B ~26% slower per
+    step than GPipe.  The retrace sanitizer in repro.analysis confirmed
+    steady-state slots never retrace — the cost was real compute, not
+    recompilation.)  The activation stash is a min(n_stages, n_micro)-slot
+    ring of codes — the 1F1B memory claim, vs GPipe's one code per tick.
 
     Returns grads matching ``jax.grad(pipeline_loss_fused)``: per-stage
     params stay per-stage, shared params (embeddings, final norm) are
@@ -582,11 +591,10 @@ def pipeline_1f1b_grads(params, batch, cfg: ModelConfig, spec: PipelineSpec,
             bn = t - (2 * Pn - 1 - stage)
             mb = jnp.clip(bn // 2, 0, M - 1)
             b_ok = (bn >= 0) & (bn % 2 == 0) & (bn // 2 < M)
-            # F and B slots are disjoint by parity, so one stage_fn vjp per
-            # slot serves both: primal -> forward slot, pullback -> backward.
-            # Both read the stash ring: the forward its just-arrived code,
-            # the backward the code stashed at its forward slot (entries
-            # live from arrival to b(s,m); ring reuse starts strictly later)
+            # F and B slots are disjoint by parity; both read the stash
+            # ring — the forward its just-arrived code, the backward the
+            # code stashed at its forward slot (entries live from arrival
+            # to b(s,m); ring reuse starts strictly later)
             m_idx = jnp.where(f_ok, mf, mb)
             z_src = jax.lax.dynamic_index_in_dim(stash, m_idx % R, 0,
                                                  keepdims=False)
@@ -594,31 +602,54 @@ def pipeline_1f1b_grads(params, batch, cfg: ModelConfig, spec: PipelineSpec,
                                                   keepdims=False)
             labs_t = jax.lax.dynamic_index_in_dim(labs, m_idx, 0,
                                                   keepdims=False)
-            (z_out, loss_t), vjp = jax.vjp(
-                lambda sp, z, e, u, f: stage_fn(sp, z, e, u, f,
-                                                toks_t, labs_t),
-                stages, z_src, embed_tbl, unembed_tbl, final_gamma)
-            z_send = z_out
-            if spec.wire_codec == "int8":
-                z_send = ops.int8_wire_roundtrip(z_send)
-            z_send = jnp.where(f_ok, z_send, jnp.zeros_like(z_out))
-            # ---- backward slot: seed cotangents, accumulate grads --------
-            ct_z = jnp.where(stage == last, jnp.zeros_like(z_out),
-                             g_wire.astype(z_out.dtype))
-            ct_loss = jnp.where(stage == last, jnp.ones_like(loss_t),
-                                jnp.zeros_like(loss_t))
-            g_stages, g_z, g_emb, g_unemb, g_fg = vjp((ct_z, ct_loss))
-            bmask = b_ok.astype(jnp.float32)
-            grads = jax.tree.map(
-                lambda acc, g: acc + bmask * g.astype(jnp.float32),
-                grads, (g_stages, g_emb, g_unemb, g_fg))
-            g_send = g_z.astype(spec.carry_dtype())
-            if spec.wire_codec == "int8":
-                g_send = ops.int8_wire_roundtrip(g_send)
-            g_send = jnp.where(b_ok & (stage > 0), g_send,
-                               jnp.zeros_like(g_send))
-            loss_acc = loss_acc + jnp.where(b_ok & (stage == last),
-                                            loss_t, jnp.zeros_like(loss_t))
+
+            # ---- role dispatch: pay only for what this slot does --------
+            # (branches close over loop-invariant tracers; no collectives
+            # inside, so per-device switch is shard_map-legal)
+            def idle(z_src, toks_t, labs_t, g_in, grads, loss_acc):
+                zeros = jnp.zeros((B_loc, S, d_wire), spec.carry_dtype())
+                return zeros, zeros, grads, loss_acc
+
+            def fwd_slot(z_src, toks_t, labs_t, g_in, grads, loss_acc):
+                # primal blocks only: no loss head, no pullback
+                x_e = jnp.take(embed_tbl, toks_t,
+                               axis=0).astype(compute_dtype)
+                r = _decode_boundary(z_src, stages, spec, compute_dtype)
+                x = jnp.where(stage == 0, x_e, r)
+                x = _stage_forward(stages["blocks"], x, cfg, kind, pos,
+                                   False)
+                z_send = _encode_boundary(x, stages, cfg, spec,
+                                          codec=False)
+                if spec.wire_codec == "int8":
+                    z_send = ops.int8_wire_roundtrip(z_send)
+                return (z_send, jnp.zeros_like(z_send), grads, loss_acc)
+
+            def bwd_slot(z_src, toks_t, labs_t, g_in, grads, loss_acc):
+                (z_out, loss_t), vjp = jax.vjp(
+                    lambda sp, z, e, u, f: stage_fn(sp, z, e, u, f,
+                                                    toks_t, labs_t),
+                    stages, z_src, embed_tbl, unembed_tbl, final_gamma)
+                ct_z = jnp.where(stage == last, jnp.zeros_like(z_out),
+                                 g_in.astype(z_out.dtype))
+                ct_loss = jnp.where(stage == last, jnp.ones_like(loss_t),
+                                    jnp.zeros_like(loss_t))
+                g_stages, g_z, g_emb, g_unemb, g_fg = vjp((ct_z, ct_loss))
+                grads = jax.tree.map(
+                    lambda acc, g: acc + g.astype(jnp.float32),
+                    grads, (g_stages, g_emb, g_unemb, g_fg))
+                g_send = g_z.astype(spec.carry_dtype())
+                if spec.wire_codec == "int8":
+                    g_send = ops.int8_wire_roundtrip(g_send)
+                g_send = jnp.where(stage > 0, g_send,
+                                   jnp.zeros_like(g_send))
+                loss_acc = loss_acc + jnp.where(stage == last, loss_t,
+                                                jnp.zeros_like(loss_t))
+                return (jnp.zeros_like(g_send), g_send, grads, loss_acc)
+
+            role = jnp.where(b_ok, 2, f_ok.astype(jnp.int32))
+            z_send, g_send, grads, loss_acc = jax.lax.switch(
+                role, [idle, fwd_slot, bwd_slot],
+                z_src, toks_t, labs_t, g_wire, grads, loss_acc)
             # ---- hand-offs: consumed exactly one slot later --------------
             z_wire = jax.lax.ppermute(
                 z_send, "model", [(i, i + 1) for i in range(Pn - 1)])

@@ -47,3 +47,18 @@ def run_py(code: str, devices: int = 8) -> str:
 @pytest.fixture(scope="session")
 def rng():
     return np.random.RandomState(0)
+
+
+@pytest.fixture(scope="session", autouse=True)
+def _checked_store():
+    """``REPRO_CHECKED_STORE=1`` runs the whole session with every
+    ``StateStore`` operation sanitized (key shape vs the KeySchema,
+    write-after-publish, read-before-write) — see
+    repro.analysis.checked_store.  smoke.sh runs the store/transport
+    shards under the flag; any suite must stay green with it on."""
+    if os.environ.get("REPRO_CHECKED_STORE") != "1":
+        yield None
+        return
+    from repro.analysis.checked_store import StoreSanitizer
+    with StoreSanitizer() as sanitizer:
+        yield sanitizer

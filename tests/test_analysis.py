@@ -1,0 +1,458 @@
+"""swarmlint suite: every rule (positive + suppressed-negative fixtures),
+the CLI contract, the repo-wide zero-findings gate, and both runtime
+sanitizers (TraceWatch retrace counting, CheckedStore store invariants).
+
+The fixtures are in-memory source strings run through the same
+``ModuleSource``/``run_rules`` path as the CLI, so a rule behaviour change
+shows up here before it shows up as a confusing smoke.sh failure.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from conftest import SRC, run_py
+from repro.analysis import (
+    ALL_RULES, KeyLiteralRule, ModuleSource, NoPickleEvalRule,
+    ProtocolConformanceRule, SerdeCoverageRule, SpawnSafetyRule, run_rules,
+)
+from repro.analysis.__main__ import main as lint_main
+
+REPO = os.path.dirname(SRC)
+
+
+def lint(sources: dict, rules) -> list:
+    """Run rules over {relpath: source} fixtures; returns findings."""
+    modules = [ModuleSource(rel, rel, textwrap.dedent(text))
+               for rel, text in sources.items()]
+    return run_rules(modules, [r() for r in rules])
+
+
+# ---------------------------------------------------------------------------
+# key-literal
+# ---------------------------------------------------------------------------
+
+
+def test_key_literal_flags_plain_and_fstring():
+    found = lint({"src/repro/runtime/miner.py": '''
+        def up(e):
+            a = "weights/ep0/s0/m1"
+            b = f"activations/ep{e}/t0/tokens"
+            return a, b
+    '''}, [KeyLiteralRule])
+    assert [f.line for f in found] == [3, 4]
+    assert all(f.rule == "key-literal" for f in found)
+
+
+def test_key_literal_sees_shard_fragment_in_fstring():
+    # f"...shard{k}" renders as "shard{" in static text — the form a plain
+    # grep for the quoted prefix misses
+    found = lint({"src/repro/core/butterfly.py": '''
+        def k(base, i):
+            return f"{base}/shard{i}"
+    '''}, [KeyLiteralRule])
+    assert len(found) == 1
+
+
+def test_key_literal_exempts_mint_module_and_docstrings():
+    found = lint({
+        "src/repro/api/keys.py": '''
+            NS = "weights/"
+        ''',
+        "src/repro/api/phases.py": '''
+            def run():
+                """Reads ``scores/ep{E}`` rows (documentation only)."""
+                return 1
+        ''',
+    }, [KeyLiteralRule])
+    assert found == []
+
+
+def test_key_literal_suppression_line_and_file():
+    line = lint({"src/m.py": '''
+        K = "weights/ep0/s0/m1"  # swarmlint: disable=key-literal
+    '''}, [KeyLiteralRule])
+    assert line == []
+    file_ = lint({"src/m.py": '''
+        # swarmlint: disable-file=key-literal
+        A = "weights/ep0/s0/m1"
+        B = "scores/ep0/v0/m0"
+    '''}, [KeyLiteralRule])
+    assert file_ == []
+    wrong_rule = lint({"src/m.py": '''
+        K = "weights/ep0/s0/m1"  # swarmlint: disable=no-pickle-eval
+    '''}, [KeyLiteralRule])
+    assert len(wrong_rule) == 1
+
+
+# ---------------------------------------------------------------------------
+# serde-coverage
+# ---------------------------------------------------------------------------
+
+_MESSAGES = '''
+    class PingMsg:
+        pass
+
+    class PongMsg:
+        pass
+'''
+
+
+def test_serde_coverage_passes_when_registered():
+    found = lint({
+        "src/repro/api/messages.py": _MESSAGES,
+        "src/repro/api/serde.py": '''
+            from repro.api import messages
+            def _register(cls):
+                return cls
+            _register(messages.PingMsg)
+            _register(messages.PongMsg)
+        ''',
+    }, [SerdeCoverageRule])
+    assert found == []
+
+
+def test_serde_coverage_flags_unregistered_and_stale():
+    found = lint({
+        "src/repro/api/messages.py": _MESSAGES,
+        "src/repro/api/serde.py": '''
+            def _register(cls):
+                return cls
+            _register(PingMsg)
+            _register(GhostMsg)
+        ''',
+    }, [SerdeCoverageRule])
+    assert {(f.path.split("/")[-1], f.message.split(" ")[0])
+            for f in found} == {("messages.py", "PongMsg"),
+                                ("serde.py", "_register(GhostMsg)")}
+
+
+def test_serde_coverage_reports_half_scope():
+    found = lint({"src/repro/api/messages.py": _MESSAGES},
+                 [SerdeCoverageRule])
+    assert len(found) == 1 and "cannot cross-check" in found[0].message
+
+
+# ---------------------------------------------------------------------------
+# protocol-conformance
+# ---------------------------------------------------------------------------
+
+_PROTO = textwrap.dedent('''
+    from typing import Protocol
+
+    class Phase(Protocol):
+        name: str
+
+        def run(self, swarm, state):
+            ...
+''')
+
+
+def test_protocol_conformance_suffix_binding():
+    found = lint({
+        "src/repro/api/phases.py": _PROTO + textwrap.dedent('''
+            class GoodPhase:
+                name = "good"
+                def run(self, swarm, state):
+                    return state
+
+            class BadPhase:
+                def run(self, swarm, state):
+                    return state
+        '''),
+    }, [ProtocolConformanceRule])
+    assert len(found) == 1
+    assert "BadPhase" in found[0].message
+    assert "name (attribute)" in found[0].message
+
+
+def test_protocol_conformance_marker_and_inheritance():
+    found = lint({
+        "src/repro/api/phases.py": _PROTO,
+        "src/repro/api/extra.py": '''
+            class _Base:
+                def run(self, swarm, state):
+                    return state
+
+            class Overlapped(_Base):  # swarmlint: implements=Phase
+                def __init__(self):
+                    self.name = "overlap"
+
+            class Sneaky:  # swarmlint: implements=Phase
+                name = "sneaky"
+        ''',
+    }, [ProtocolConformanceRule])
+    assert len(found) == 1 and "Sneaky" in found[0].message
+    assert "run" in found[0].message
+
+
+def test_protocol_conformance_skips_unknown_bases():
+    found = lint({
+        "src/repro/api/phases.py": _PROTO + textwrap.dedent('''
+            import thirdparty
+
+            class VendoredPhase(thirdparty.Base):
+                pass
+        '''),
+    }, [ProtocolConformanceRule])
+    assert found == []       # out-of-scope base: cannot judge statically
+
+
+# ---------------------------------------------------------------------------
+# no-pickle-eval
+# ---------------------------------------------------------------------------
+
+
+def test_no_pickle_eval_flags_imports_and_calls():
+    found = lint({"src/m.py": '''
+        import pickle
+        from dill import loads
+
+        def f(s):
+            return eval(s)
+    '''}, [NoPickleEvalRule])
+    assert [f.line for f in found] == [2, 3, 6]
+
+
+def test_no_pickle_eval_ignores_lookalikes():
+    found = lint({"src/m.py": '''
+        import pickletools_unrelated as pt
+
+        def f(model, s):
+            return model.eval(), s.encode()
+    '''}, [NoPickleEvalRule])
+    assert found == []
+
+
+# ---------------------------------------------------------------------------
+# spawn-safety
+# ---------------------------------------------------------------------------
+
+_SPAWN_FIXTURE = {
+    "src/repro/__init__.py": "",
+    "src/repro/runtime/__init__.py": "",
+    "src/repro/runtime/store_server.py": '''
+        from repro.api import serde
+    ''',
+    "src/repro/api/__init__.py": '''
+        from repro.api import helper
+    ''',
+}
+
+
+def test_spawn_safety_flags_module_level_device_work():
+    found = lint(dict(_SPAWN_FIXTURE, **{
+        "src/repro/api/serde.py": '''
+            import jax.numpy as jnp
+            _SENTINEL = jnp.zeros((4,))
+        ''',
+        "src/repro/api/helper.py": '''
+            import jax
+            N = jax.device_count()
+        ''',
+    }), [SpawnSafetyRule])
+    assert {(f.path.split("/")[-1], f.line) for f in found} == {
+        ("serde.py", 3), ("helper.py", 3)}
+    assert all("spawned store server" in f.message for f in found)
+
+
+def test_spawn_safety_allows_lazy_and_out_of_closure():
+    found = lint(dict(_SPAWN_FIXTURE, **{
+        "src/repro/api/serde.py": '''
+            import jax.numpy as jnp
+
+            def zeros():
+                return jnp.zeros((4,))     # lazy: runs per call, not import
+        ''',
+        "src/repro/api/helper.py": "",
+        "src/repro/launch/train.py": '''
+            import jax.numpy as jnp
+            HOT = jnp.ones((2,))           # never imported by the spawn root
+        ''',
+    }), [SpawnSafetyRule])
+    assert found == []
+
+
+# ---------------------------------------------------------------------------
+# the repo gate + CLI contract
+# ---------------------------------------------------------------------------
+
+
+def test_repo_is_lint_clean_at_head():
+    """The acceptance gate smoke.sh enforces: zero findings over src/."""
+    assert lint_main([os.path.join(REPO, "src")]) == 0
+
+
+def test_cli_exit_codes_and_flags(capsys):
+    assert lint_main(["--list-rules"]) == 0
+    out = capsys.readouterr().out
+    for cls in ALL_RULES:
+        assert cls.name in out
+    assert lint_main(["--rule", "no-such-rule", "src"]) == 2
+
+
+def test_cli_fails_on_reintroduced_key_literal(tmp_path):
+    """Re-introducing a key literal flips the exit code to 1 — the
+    regression ISSUE 6 gates against."""
+    bad = tmp_path / "src" / "repro" / "runtime"
+    bad.mkdir(parents=True)
+    (bad / "rogue.py").write_text('K = "weights/ep0/s0/m1"\n')
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", str(tmp_path / "src")],
+        capture_output=True, text=True,
+        env=dict(os.environ, PYTHONPATH=SRC))
+    assert proc.returncode == 1
+    assert "[key-literal]" in proc.stdout
+
+
+# ---------------------------------------------------------------------------
+# TraceWatch (retrace sanitizer)
+# ---------------------------------------------------------------------------
+
+
+def test_tracewatch_counts_and_asserts():
+    import jax
+    import jax.numpy as jnp
+
+    from repro.analysis.retrace import RetraceError, TraceWatch
+
+    f = jax.jit(lambda x: x * 2 + 1)
+    with TraceWatch() as watch:
+        with watch.region("warmup"):
+            f(jnp.ones((4,)))
+        with watch.region("steady"):
+            f(jnp.ones((4,)))
+            f(jnp.ones((4,)))
+        with watch.region("drift"):
+            f(jnp.ones((8,)))            # new shape: retrace
+    assert watch.traces("warmup") > 0
+    watch.assert_no_trace("steady")
+    with pytest.raises(RetraceError, match="drift"):
+        watch.assert_no_trace("drift")
+    assert set(watch.report()) == {"warmup", "drift"}
+
+
+def test_tracewatch_unregisters_on_exit():
+    import jax
+    import jax.numpy as jnp
+
+    from repro.analysis.retrace import TraceWatch
+
+    watch = TraceWatch()
+    with watch:
+        pass
+    jax.jit(lambda x: x - 1)(jnp.ones((3,)))   # traced after exit
+    assert watch.report() == {}
+
+
+@pytest.mark.slow
+def test_pipeline_steady_state_is_retrace_free():
+    """Both schedules: after one warmup step, further steps must hit the
+    jit cache — the invariant behind the 1F1B lockstep fix (ISSUE 6)."""
+    out = run_py("""
+        import dataclasses
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.configs import get, smoke_variant
+        from repro.core.pipeline import (PipelineSpec, init_pipeline_params,
+                                         pipeline_loss_and_grads)
+        from repro.analysis.retrace import TraceWatch
+        cfg = dataclasses.replace(smoke_variant(get('llama3.2-1b')).model,
+                                  n_layers=4)
+        mesh = jax.make_mesh((1, 4), ('data', 'model'))
+        B, S, M = 8, 16, 8
+        r = np.random.RandomState(0)
+        toks = r.randint(0, cfg.vocab_size, (B, S))
+        batch = {"tokens": jnp.asarray(toks, jnp.int32),
+                 "labels": jnp.asarray(np.roll(toks, -1, 1), jnp.int32)}
+        for sched in ("gpipe", "1f1b"):
+            spec = PipelineSpec(4, M, compress=True, bottleneck_dim=16,
+                                schedule=sched, wire_codec="int8")
+            params = init_pipeline_params(jax.random.key(0), cfg, spec)
+            step = jax.jit(lambda p, b: pipeline_loss_and_grads(
+                p, b, cfg, spec, mesh))
+            with mesh, TraceWatch() as watch:
+                with watch.region("warmup"):
+                    jax.block_until_ready(step(params, batch))
+                with watch.region("steady"):
+                    for _ in range(3):
+                        jax.block_until_ready(step(params, batch))
+                watch.assert_no_trace("steady")
+            print(f"RES {sched} {watch.traces('steady')}")
+    """, devices=4)
+    assert out.count("RES") == 2
+    for line in out.splitlines():
+        if line.startswith("RES"):
+            assert line.split()[2] == "0", line
+
+
+# ---------------------------------------------------------------------------
+# CheckedStore (store sanitizer)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture
+def sanitizer():
+    from repro.analysis.checked_store import StoreSanitizer
+    with StoreSanitizer() as s:
+        yield s
+
+
+def test_checked_store_rejects_malformed_namespace_key(sanitizer):
+    from repro.analysis.checked_store import CheckedStoreError
+    from repro.runtime.state_store import StateStore
+
+    store = StateStore()
+    with pytest.raises(CheckedStoreError, match="malformed"):
+        store.put("weights/bogus", np.zeros(2), actor="m0")
+    store.put("scratch/anything-goes", np.zeros(2))   # non-namespace: ok
+
+
+def test_checked_store_write_after_publish_policy(sanitizer):
+    from repro.analysis.checked_store import CheckedStoreError
+    from repro.runtime.state_store import StateStore
+
+    store = StateStore()
+    store.put("weights/ep0/s0/m1", np.zeros(2), actor="m1")
+    store.put("weights/ep0/s0/m1", np.zeros(2), actor="m1")  # idempotent
+    with pytest.raises(CheckedStoreError, match="write-after-publish"):
+        store.put("weights/ep0/s0/m1", np.ones(2), actor="evil")
+    # activations: the fault model re-publishes deliberately — recorded,
+    # not fatal (catching it is the validators' job)
+    store.put("activations/ep0/t0/s0/m1", np.zeros(2), actor="m1")
+    store.put("activations/ep0/t0/s0/m1", np.ones(2), actor="byz")
+    assert sanitizer.report().get("write-after-publish") == 1
+
+
+def test_checked_store_gc_and_reput_is_clean(sanitizer):
+    from repro.runtime.state_store import StateStore
+
+    store = StateStore()
+    store.put("weights/ep0/s0/m1", np.zeros(2), actor="m1")
+    store.delete_prefix("weights/ep0")
+    store.put("weights/ep0/s0/m1", np.ones(2), actor="m1")  # fresh epoch
+    assert sanitizer.report() == {}
+
+
+def test_checked_store_records_read_before_write(sanitizer):
+    from repro.runtime.state_store import StateStore, StoreKeyError
+
+    store = StateStore()
+    with pytest.raises(StoreKeyError):
+        store.get("scores/ep9/v0/m0", actor="validator-0")
+    rec = sanitizer.records[-1]
+    assert (rec.kind, rec.actor) == ("read-before-write", "validator-0")
+
+
+def test_checked_store_uninstall_restores_originals():
+    from repro.analysis.checked_store import StoreSanitizer
+    from repro.runtime.state_store import StateStore
+
+    before = (StateStore.put, StateStore.fetch_entry, StateStore.get_entry)
+    with StoreSanitizer():
+        assert StateStore.put is not before[0]
+    assert (StateStore.put, StateStore.fetch_entry,
+            StateStore.get_entry) == before
+    StateStore().put("weights/not-a-valid-key", np.zeros(1))  # unchecked

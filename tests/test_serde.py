@@ -233,3 +233,62 @@ try:  # the richer generator when hypothesis is installed (CI parity with
         _assert_same(tree, _rt(tree))
 except ImportError:  # pragma: no cover
     pass
+
+
+# ---------------------------------------------------------------------------
+# typed message envelopes: registry-driven round-trip
+# ---------------------------------------------------------------------------
+#
+# Parametrized over MESSAGE_TYPES (the source of truth in api/messages.py)
+# and cross-checked against the serde registry, so a new *Msg dataclass
+# that skips the _register(...) block fails here AND in the swarmlint
+# serde-coverage rule — before it can fail on a live socket.
+
+import dataclasses
+
+from repro.api import messages
+
+
+def _sample_message(cls):
+    """Instantiate with deterministic per-field values (fields are ints,
+    strs and Optional[int]s; positions vary so swapped fields don't
+    round-trip by accident)."""
+    kwargs = {}
+    for i, f in enumerate(dataclasses.fields(cls)):
+        kwargs[f.name] = "int8" if "str" in str(f.type) else i + 2
+    return cls(**kwargs)
+
+
+@pytest.mark.parametrize(
+    "cls", messages.MESSAGE_TYPES, ids=lambda c: c.__name__)
+def test_message_registered_and_round_trips(cls):
+    assert cls.__name__ in serde.registered_message_names(), (
+        f"{cls.__name__} missing from the api/serde.py _register block")
+    assert serde.message_type(cls.__name__) is cls
+    msg = _sample_message(cls)
+    back = serde.decode_message(serde.encode_message(msg))
+    assert type(back) is cls
+    for f in dataclasses.fields(cls):       # compare=False fields too
+        assert getattr(back, f.name) == getattr(msg, f.name), f.name
+
+
+def test_registry_has_no_stale_entries():
+    defined = {c.__name__ for c in messages.MESSAGE_TYPES}
+    assert set(serde.registered_message_names()) <= defined
+
+
+def test_encode_message_rejects_unregistered():
+    @dataclasses.dataclass(frozen=True)
+    class RogueMsg:
+        epoch: int
+
+    with pytest.raises(TypeError, match="not a registered wire message"):
+        serde.encode_message(RogueMsg(epoch=1))
+
+
+def test_decode_message_rejects_unknown_envelope():
+    with pytest.raises(ValueError, match="not a message envelope"):
+        serde.decode_message(serde.dumps({"fields": {}}))
+    with pytest.raises(ValueError, match="unknown message type"):
+        serde.decode_message(serde.dumps({"__msg__": "GhostMsg",
+                                          "fields": {}}))
