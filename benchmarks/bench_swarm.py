@@ -12,10 +12,17 @@ Four sections:
     + SocketTransport, serde wire format), asserting the server-side
     per-actor byte accounting equals the simulated transport's link
     accounting and the trajectory is unchanged
+  * swarm_actors:    the concurrent actor runtime (one OS process per
+    miner/validator over the socket store) vs the SAME swarm driven
+    lockstep over the same socket — measured steady-state wall-clock per
+    epoch, asserting the actors' overlap beats the serialized timeline
+    at an identical loss trajectory
 """
 from __future__ import annotations
 
 import dataclasses
+import os
+import time
 
 from benchmarks.common import emit
 from repro.api import (InProcessTransport, NetworkModel,
@@ -166,12 +173,86 @@ def _socket_section() -> None:
          f"per_actor_bytes=match_simulated")
 
 
+def _actor_section() -> None:
+    """The actor-runtime time-to-loss row, measured honestly: identical
+    warmup on each side (two epochs — at seed 4 the validator tracks both
+    stages across them, so every jit path is compiled; for actors the
+    warmup also absorbs process spawn), then identical further epochs
+    timed wall-clock.  The serialized row does the same compute over the
+    same socket store in one process, so the gap is pure overlap —
+    pipelined stages, validation replay streaming concurrently with
+    training, and actors filling the socket round-trip gaps the
+    serialized timeline spends blocked.  Both rows must land on the same
+    trajectory (same seed, same measured epochs).
+
+    Honesty requires hardware honesty too: actor processes overlap
+    *compute*, so on a single-core machine there is no parallelism to
+    measure — both rows time-slice one CPU and differ only by noise.
+    The strict actor-beats-serialized assertion therefore applies when
+    ≥ 2 cores are available; on one core the row is emitted flagged
+    ``single_core`` (trajectory parity still asserted)."""
+    from repro.api import SocketTransport
+    from repro.runtime.store_server import StoreServer
+
+    sw = SwarmConfig(n_stages=2, miners_per_stage=2, inner_steps=6, b_min=2,
+                     batch_size=2, seq_len=32, validators=1, seed=4)
+    mcfg = _mcfg()
+    warmup, epochs, rounds = 2, 3, 3
+
+    def measured_run(swarm):
+        """Warmup, then ``rounds`` timed blocks of ``epochs``: returns the
+        median per-epoch wall-clock + every measured epoch's stats."""
+        swarm.run(warmup)
+        stats, per_epoch = [], []
+        for _ in range(rounds):
+            t0 = time.perf_counter()
+            stats.extend(swarm.run(epochs))
+            per_epoch.append((time.perf_counter() - t0) / epochs)
+        return sorted(per_epoch)[rounds // 2], stats
+
+    server = StoreServer().start()
+    try:
+        tp = SocketTransport(server.address)
+        sock_s, sock_stats = measured_run(Swarm.create(mcfg, sw,
+                                                       transport=tp))
+        tp.close()
+    finally:
+        server.stop()
+
+    actors = Swarm.create(mcfg, sw, runtime="actors")
+    try:
+        actor_s, actor_stats = measured_run(actors)
+    finally:
+        actors.shutdown()
+
+    assert [s.mean_loss for s in actor_stats] == \
+        [s.mean_loss for s in sock_stats], "actor trajectory diverged"
+    try:
+        cores = len(os.sched_getaffinity(0))
+    except AttributeError:          # non-Linux
+        cores = os.cpu_count() or 1
+    if cores >= 2:
+        assert actor_s < sock_s, \
+            f"actor runtime shows no overlap on {cores} cores: " \
+            f"{actor_s:.2f}s/epoch >= {sock_s:.2f}s/epoch serialized"
+        verdict = f"overlap_saves={100.0 * (1.0 - actor_s / sock_s):.0f}%"
+    else:
+        verdict = "single_core=no_overlap_measurable"
+    emit("swarm_actors/steady_state_epoch", actor_s * 1e6,
+         f"actor={actor_s:.2f}s/epoch;serialized_socket={sock_s:.2f}s/epoch;"
+         f"{verdict};cores={cores};"
+         f"time_to_loss@{actor_stats[-1].mean_loss:.3f}="
+         f"{epochs * actor_s:.2f}s_vs_{epochs * sock_s:.2f}s;"
+         f"median_of{rounds}")
+
+
 def run() -> None:
     _beff_section()
     _traffic_section()
     _transport_section()
     _overlap_section()
     _socket_section()
+    _actor_section()
 
 
 if __name__ == "__main__":

@@ -18,7 +18,10 @@
 # parity with the dense path), the multi-process socket-transport gate
 # (examples/multiprocess_swarm.py: StoreServer child process + real TCP,
 # asserts dense AND sharded loss match the in-process transport at the
-# same seed), a short 1F1B+int8 pipelined training run
+# same seed), the concurrent actor-runtime gate (examples/actor_swarm.py:
+# every miner/validator its own spawned process over the EventDriver,
+# asserts dense AND sharded trajectories bit-match the in-process swarm
+# at the same seed), a short 1F1B+int8 pipelined training run
 # (launch/train.py --strategy pipeline), and `benchmarks/run.py --quick`
 # (reduced pipeline + butterfly benches that hard-validate the
 # BENCH_pipeline.json / BENCH_butterfly.json schemas).
@@ -59,6 +62,10 @@ python examples/sharded_sync.py
 echo
 echo "== smoke: multi-process socket transport (store in its own process) =="
 python examples/multiprocess_swarm.py
+
+echo
+echo "== smoke: concurrent actor runtime (spawned miner/validator fleet) =="
+ACTOR_SWARM_EPOCHS="${ACTOR_SWARM_EPOCHS:-2}" python examples/actor_swarm.py
 
 echo
 echo "== smoke: 1F1B pipeline quickstart (2 stages, int8 wire) =="

@@ -18,6 +18,7 @@ from __future__ import annotations
 from repro.analysis.framework import (
     Finding, ModuleSource, Project, Rule, load_paths, run_rules,
 )
+from repro.analysis.rules_actor import ActorRuntimeRule
 from repro.analysis.rules_keys import KeyLiteralRule
 from repro.analysis.rules_protocol import ProtocolConformanceRule
 from repro.analysis.rules_safety import NoPickleEvalRule, SpawnSafetyRule
@@ -27,12 +28,14 @@ ALL_RULES = (
     KeyLiteralRule,
     SerdeCoverageRule,
     ProtocolConformanceRule,
+    ActorRuntimeRule,
     NoPickleEvalRule,
     SpawnSafetyRule,
 )
 
 __all__ = [
     "ALL_RULES",
+    "ActorRuntimeRule",
     "Finding",
     "KeyLiteralRule",
     "ModuleSource",

@@ -43,7 +43,8 @@ from typing import Optional
 
 from repro.api import keys as _keys
 
-_NAMESPACES = (_keys.NS_ACTIVATIONS, _keys.NS_WEIGHTS, _keys.NS_SCORES)
+_NAMESPACES = (_keys.NS_ACTIVATIONS, _keys.NS_WEIGHTS, _keys.NS_SCORES,
+               _keys.NS_CONTROL)
 
 
 class CheckedStoreError(AssertionError):
@@ -63,9 +64,9 @@ class StoreSanitizer:
     active, every ``StateStore`` in the process is checked."""
 
     def __init__(self, schema: Optional["_keys.KeySchema"] = None):
-        # v2 parses every v1 key, so it is the right default even for
-        # stores populated by v1 producers
-        self.schema = schema or _keys.KeySchema(version=2)
+        # v3 parses every v1/v2 key plus the actor runtime's control
+        # plane, so it is the right default whatever the producers mint
+        self.schema = schema or _keys.KeySchema(version=3)
         self.records: list[Violation] = []
         self._originals = None
 

@@ -1,0 +1,126 @@
+"""actor-runtime: actor implementations stay spawn-able and wire-typed.
+
+The concurrent runtime (``repro.runtime.actor``) has three standing
+hazards a reviewer cannot see locally:
+
+  * a ``*Actor`` class that is *not* an ``ActorProcess`` subclass looks
+    like an actor, passes the ``Actor`` protocol surface (that part is
+    the ``protocol-conformance`` rule, via the ``PROTOCOLS`` entry), but
+    lacks the process body — spawn entry, health endpoint, clean
+    shutdown — and dies the first time a supervisor spawns it;
+  * actor classes defined in a module *outside* the spawn import closure
+    (``rules_safety.SPAWN_ROOTS``) escape the spawn-safety lint: their
+    import-time device work would wedge every spawned child unchecked;
+  * a ``*Msg`` envelope referenced by actor code but missing from the
+    serde registry only fails at runtime, on a socket, in a child
+    process — the worst place to learn about it.
+
+Suffix binding mirrors ``protocol-conformance``: every module-level
+class named ``*Actor`` (except the ``Actor`` protocol itself) is held to
+the contract; a deliberate exception can opt out with ``# swarmlint:
+disable-line=actor-runtime`` on the ``class`` line.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, Optional
+
+from repro.analysis.framework import Finding, Project, Rule
+from repro.analysis.rules_safety import SPAWN_ROOTS, spawn_import_closure
+from repro.analysis.rules_serde import SERDE_MODULE, registered_names
+
+ACTOR_BASE = "ActorProcess"
+PROTOCOL_CLASS = "Actor"
+
+
+def _actor_classes(tree: ast.Module) -> Iterable[ast.ClassDef]:
+    for node in ast.iter_child_nodes(tree):
+        if isinstance(node, ast.ClassDef) \
+                and node.name.endswith("Actor") \
+                and node.name != PROTOCOL_CLASS:
+            yield node
+
+
+def _base_names(node: ast.ClassDef) -> list:
+    return [b.attr if isinstance(b, ast.Attribute)
+            else b.id if isinstance(b, ast.Name) else None
+            for b in node.bases]
+
+
+def _msg_references(tree: ast.Module) -> Iterable[tuple[str, int]]:
+    """(name, line) for every ``*Msg`` identifier the module mentions."""
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Name) and node.id.endswith("Msg"):
+            yield node.id, node.lineno
+        elif isinstance(node, ast.Attribute) and node.attr.endswith("Msg"):
+            yield node.attr, node.lineno
+
+
+class ActorRuntimeRule(Rule):
+    name = "actor-runtime"
+    description = ("*Actor classes subclass ActorProcess, live inside the "
+                   "spawn import closure, and only reference serde-"
+                   "registered *Msg envelopes")
+
+    def check_project(self, project: Project) -> Iterable[Finding]:
+        # class table across the scan scope (inheritance resolution)
+        classes: dict[str, ast.ClassDef] = {}
+        module_of: dict[str, str] = {}
+        for m in project.modules:
+            for node in ast.iter_child_nodes(m.tree):
+                if isinstance(node, ast.ClassDef):
+                    classes.setdefault(node.name, node)
+                    module_of.setdefault(node.name, m.module)
+
+        def reaches_base(name: str, seen: frozenset) -> Optional[bool]:
+            """True/False: subclasses ActorProcess; None: unknown base."""
+            if name == ACTOR_BASE:
+                return True
+            node = classes.get(name)
+            if node is None:
+                return None
+            verdicts = []
+            for base in _base_names(node):
+                if base is None or base in seen:
+                    continue
+                verdicts.append(reaches_base(base, seen | {base}))
+            if any(v is True for v in verdicts):
+                return True
+            if any(v is None for v in verdicts):
+                return None
+            return False
+
+        closure = spawn_import_closure(project)
+        serde_mod = project.find(SERDE_MODULE)
+        registry = set(registered_names(serde_mod.tree)) \
+            if serde_mod is not None else None
+
+        for m in project.modules:
+            actor_nodes = list(_actor_classes(m.tree))
+            for node in actor_nodes:
+                verdict = reaches_base(node.name,
+                                       frozenset({node.name}))
+                if verdict is False:
+                    yield Finding(
+                        self.name, m.rel, node.lineno,
+                        f"{node.name} is named as an actor but does not "
+                        f"subclass {ACTOR_BASE}: it has no spawn entry, "
+                        f"health endpoint or shutdown protocol; inherit "
+                        f"from {ACTOR_BASE} (repro.runtime.actor)")
+                elif verdict is True and m.module not in closure:
+                    yield Finding(
+                        self.name, m.rel, node.lineno,
+                        f"{node.name} is defined outside the spawn import "
+                        f"closure of {SPAWN_ROOTS}: spawned children "
+                        f"re-import it unchecked by the spawn-safety "
+                        f"lint; add {m.module!r} to rules_safety."
+                        f"SPAWN_ROOTS")
+            if not actor_nodes or registry is None:
+                continue
+            for name, line in _msg_references(m.tree):
+                if name not in registry:
+                    yield Finding(
+                        self.name, m.rel, line,
+                        f"actor module references {name} which has no "
+                        f"_register(...) entry in api/serde.py: the "
+                        f"envelope cannot cross the socket")

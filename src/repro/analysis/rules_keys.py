@@ -27,7 +27,7 @@ from repro.analysis.framework import Finding, ModuleSource, Rule
 # the three store namespaces, plus the v2 shard segment (an f-string like
 # f"...shard{k}..." renders as "shard{}" in static text, so "shard{" also
 # catches the interpolated form)
-KEY_SHAPES = ("activations/", "weights/", "scores/", "shard{")
+KEY_SHAPES = ("activations/", "weights/", "scores/", "control/", "shard{")
 
 # the single sanctioned minting site (repo-relative suffix match, so the
 # rule works from any scan root)

@@ -36,6 +36,7 @@ from repro.analysis.framework import Finding, ModuleSource, Project, Rule
 PROTOCOLS = {
     "Transport": "repro.api.transport",
     "Phase": "repro.api.phases",
+    "Actor": "repro.runtime.actor",
 }
 
 _IMPLEMENTS = re.compile(r"#\s*swarmlint:\s*implements=(\w+)")

@@ -31,7 +31,7 @@ from repro.analysis.framework import Finding, ModuleSource, Project, Rule
 FORBIDDEN_IMPORTS = ("pickle", "cPickle", "dill", "shelve", "marshal")
 
 # entry points that run in freshly spawned interpreters
-SPAWN_ROOTS = ("repro.runtime.store_server",)
+SPAWN_ROOTS = ("repro.runtime.store_server", "repro.runtime.actor")
 
 # module-level calls with these dotted prefixes allocate buffers / touch
 # the backend at import time

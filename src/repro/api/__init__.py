@@ -9,18 +9,24 @@ from repro.api.keys import KeySchema, SCHEMA_VERSION  # noqa: F401
 from repro.api.messages import (  # noqa: F401
     ActivationMsg,
     AnchorMsg,
+    EpochPlanMsg,
     GradientMsg,
+    HeartbeatMsg,
+    LabelsMsg,
     Message,
     MESSAGE_TYPES,
     ScoreMsg,
     ShardReducedMsg,
     ShardUploadMsg,
+    SnapshotMsg,
+    TickLossMsg,
     WeightUploadMsg,
     message_for_key,
 )
 from repro.api.phases import (  # noqa: F401
     EpochDriver,
     EpochState,
+    EventDriver,
     OverlappedTrainingSharing,
     Phase,
     ReduceAuditPhase,

@@ -30,12 +30,29 @@ The two new kinds cannot collide with v1: the v1 weight-upload pattern is
 anchored (`m{U}$`), and the reduced-copy key's second-to-last segment is
 ``shard{K}``/``reduced``, never ``m{U}``.
 
+Version 3 — concurrent actor runtime (§2: miners/validators as
+independent peers polling the store).  Adds the *control plane*: the keys
+actors and the event-driven driver coordinate through, plus the labels
+key (an actor-mode last-stage miner reads labels from the store — in the
+lockstep driver they never transit it):
+
+  activations/ep{E}/t{T}/labels     label batch for tick T (actor runtime)
+  control/ep{E}/plan                the epoch plan (schedule + merge census)
+  control/ep{E}/t{T}/loss           training watermark: tick T's loss,
+                                    published by the last-stage miner
+  control/ep{E}/snapshot/m{U}       tracked miner U's epoch-start snapshot
+                                    (validator replay starts here)
+  control/hb/{actor}                optional heartbeat record (the primary
+                                    heartbeat channel is the actor's TCP
+                                    health endpoint; see runtime/actor.py)
+
 Versioning: a ``KeySchema`` is constructed at a pinned ``version``; bumping
 the layout means adding a new version branch here (and a migration note in
 docs/API.md) — never editing v1 in place, because validator replay and the
 §5.3 transfer analysis both depend on historical keys staying parseable.
 Minting a v2-only kind from a v1 schema raises ``ValueError`` (a sharded
-run against a v1 store is a config error, not a silent new layout).
+run against a v1 store is a config error, not a silent new layout); the
+same applies to v3 control keys from a v1/v2 schema.
 """
 from __future__ import annotations
 
@@ -43,12 +60,13 @@ import dataclasses
 import re
 
 SCHEMA_VERSION = 1
-SUPPORTED_VERSIONS = (1, 2)
+SUPPORTED_VERSIONS = (1, 2, 3)
 
 # namespaces (the first path segment; StateStore accounts bytes per namespace)
 NS_ACTIVATIONS = "activations"
 NS_WEIGHTS = "weights"
 NS_SCORES = "scores"
+NS_CONTROL = "control"
 
 _V1_PATTERNS = (
     ("tokens", re.compile(r"^activations/ep(?P<epoch>\d+)/t(?P<tick>\d+)/tokens$")),
@@ -74,6 +92,21 @@ _V2_PATTERNS = (
     ("shard_reduced", re.compile(
         r"^weights/ep(?P<epoch>\d+)/s(?P<stage>\d+)/shard(?P<shard>\d+)"
         r"/reduced/m(?P<reducer>\d+)$")),
+)
+
+# v3 additions: the actor runtime's control plane + the labels key.  The
+# labels pattern is anchored on a literal trailing segment (like tokens),
+# so it cannot collide with v1 activation keys (whose last segment is
+# ``m{U}``); control/ is a fresh namespace.
+_V3_PATTERNS = (
+    ("labels", re.compile(
+        r"^activations/ep(?P<epoch>\d+)/t(?P<tick>\d+)/labels$")),
+    ("plan", re.compile(r"^control/ep(?P<epoch>\d+)/plan$")),
+    ("tick_loss", re.compile(
+        r"^control/ep(?P<epoch>\d+)/t(?P<tick>\d+)/loss$")),
+    ("snapshot", re.compile(
+        r"^control/ep(?P<epoch>\d+)/snapshot/m(?P<uid>\d+)$")),
+    ("heartbeat", re.compile(r"^control/hb/(?P<actor>[A-Za-z0-9_.-]+)$")),
 )
 
 
@@ -137,6 +170,35 @@ class KeySchema:
         return (f"weights/ep{epoch}/s{stage}/shard{shard}"
                 f"/reduced/m{reducer_uid}")
 
+    # -- control plane (version 3, actor runtime) ------------------------
+
+    def _require_v3(self, kind: str) -> None:
+        if self.version < 3:
+            raise ValueError(
+                f"{kind} keys need KeySchema version >= 3 "
+                f"(this schema is v{self.version}); the actor runtime "
+                f"constructs its transport with KeySchema(version=3)")
+
+    def labels(self, epoch: int, tick: int) -> str:
+        self._require_v3("labels")
+        return f"activations/ep{epoch}/t{tick}/labels"
+
+    def plan(self, epoch: int) -> str:
+        self._require_v3("plan")
+        return f"control/ep{epoch}/plan"
+
+    def tick_loss(self, epoch: int, tick: int) -> str:
+        self._require_v3("tick_loss")
+        return f"control/ep{epoch}/t{tick}/loss"
+
+    def snapshot(self, epoch: int, uid: int) -> str:
+        self._require_v3("snapshot")
+        return f"control/ep{epoch}/snapshot/m{uid}"
+
+    def heartbeat(self, actor: str) -> str:
+        self._require_v3("heartbeat")
+        return f"control/hb/{actor}"
+
     # -- score plane -----------------------------------------------------
 
     def score(self, epoch: int, validator_uid: int, miner_uid: int) -> str:
@@ -160,19 +222,30 @@ class KeySchema:
         (``SwarmConfig.retain_epochs``) deletes whole epochs by prefix."""
         return f"scores/ep{epoch}"
 
+    def control_prefix(self, epoch: int) -> str:
+        """All control-plane keys of one epoch (plan, loss watermarks,
+        snapshots) — the event driver GCs them with the activations."""
+        self._require_v3("control_prefix")
+        return f"control/ep{epoch}"
+
     # -- parsing ---------------------------------------------------------
 
     def parse(self, key: str) -> ParsedKey:
         """Invert a key back to (kind, fields); raises ValueError on keys
-        outside the schema — audit tooling uses this to walk a store.  A v2
-        schema parses v1 keys unchanged (historical stores stay walkable);
-        a v1 schema rejects v2 shard keys."""
-        patterns = _V1_PATTERNS if self.version < 2 \
-            else _V2_PATTERNS + _V1_PATTERNS
+        outside the schema — audit tooling uses this to walk a store.  A
+        newer schema parses every older version's keys unchanged
+        (historical stores stay walkable); a v1 schema rejects v2 shard
+        keys and v1/v2 reject v3 control keys.  Numeric fields decode as
+        ints; the heartbeat ``actor`` field stays a string."""
+        patterns = _V1_PATTERNS
+        if self.version >= 2:
+            patterns = _V2_PATTERNS + patterns
+        if self.version >= 3:
+            patterns = _V3_PATTERNS + patterns
         for kind, pat in patterns:
             m = pat.match(key)
             if m:
-                return ParsedKey(kind, {k: int(v)
+                return ParsedKey(kind, {k: int(v) if v.isdigit() else v
                                         for k, v in m.groupdict().items()})
         raise ValueError(f"key does not match KeySchema v{self.version}: "
                          f"{key!r}")

@@ -16,6 +16,18 @@ The set mirrors the paper's traffic planes:
                    KeySchema v2)
   AnchorMsg        merged per-stage anchor after butterfly + DiLoCo outer
   ScoreMsg         validator scores feeding the incentive ledger (§3)
+
+KeySchema v3 adds the actor runtime's control plane (miners/validators as
+independent processes polling the store; runtime/actor.py):
+  LabelsMsg        label batch for one tick (the actor-mode last-stage
+                   miner reads labels from the store)
+  EpochPlanMsg     the driver's epoch plan: tick schedule + merge census
+  TickLossMsg      training watermark — tick loss, published by the
+                   last-stage miner when a tick's backward chain starts
+  SnapshotMsg      a tracked miner's epoch-start snapshot (validator
+                   replay starts here)
+  HeartbeatMsg     actor liveness/progress; rides the actor's TCP health
+                   endpoint (and optionally the store, under control/hb/)
 """
 from __future__ import annotations
 
@@ -138,11 +150,79 @@ class ScoreMsg:
         return schema.score(self.epoch, self.validator_uid, self.miner_uid)
 
 
+@dataclasses.dataclass(frozen=True)
+class LabelsMsg:
+    """Label batch for one tick (actor runtime; KeySchema v3).  The
+    lockstep driver hands labels to the last miner in-process; actor-mode
+    miners and validators read them from the store like everything else."""
+    epoch: int
+    tick: int
+
+    def key(self, schema: KeySchema) -> str:
+        return schema.labels(self.epoch, self.tick)
+
+
+@dataclasses.dataclass(frozen=True)
+class EpochPlanMsg:
+    """The event driver's epoch plan (KeySchema v3).  The payload carries
+    the full deterministic schedule — tick pathways, batch census, merge
+    quorum, qualifying miners, validator assignments — so every actor can
+    derive its own work list from one store read."""
+    epoch: int
+
+    def key(self, schema: KeySchema) -> str:
+        return schema.plan(self.epoch)
+
+
+@dataclasses.dataclass(frozen=True)
+class TickLossMsg:
+    """Training watermark (KeySchema v3): the last-stage miner publishes
+    tick ``tick``'s loss the moment the backward chain starts — the event
+    driver folds these into ``PathwayRecord``s instead of observing the
+    loss in-process."""
+    epoch: int
+    tick: int
+
+    def key(self, schema: KeySchema) -> str:
+        return schema.tick_loss(self.epoch, self.tick)
+
+
+@dataclasses.dataclass(frozen=True)
+class SnapshotMsg:
+    """A tracked miner's epoch-start snapshot (KeySchema v3): param +
+    optimizer leaves and the inner step, published before the miner's
+    first tick so its validator can replay the epoch from the same
+    state."""
+    epoch: int
+    miner_uid: int
+
+    def key(self, schema: KeySchema) -> str:
+        return schema.snapshot(self.epoch, self.miner_uid)
+
+
+@dataclasses.dataclass(frozen=True)
+class HeartbeatMsg:
+    """Actor liveness + progress.  This is the payload of the actor's TCP
+    health endpoint (``runtime.actor``); only ``actor`` addresses a store
+    key, the rest is status and excluded from equality so a heartbeat
+    envelope compares stably across polls."""
+    actor: str
+    pid: int = dataclasses.field(default=0, compare=False)
+    epoch: int = dataclasses.field(default=-1, compare=False)
+    items_done: int = dataclasses.field(default=0, compare=False)
+    state: str = dataclasses.field(default="idle", compare=False)
+
+    def key(self, schema: KeySchema) -> str:
+        return schema.heartbeat(self.actor)
+
+
 Message = Union[ActivationMsg, GradientMsg, WeightUploadMsg, ShardUploadMsg,
-                ShardReducedMsg, AnchorMsg, ScoreMsg]
+                ShardReducedMsg, AnchorMsg, ScoreMsg, LabelsMsg,
+                EpochPlanMsg, TickLossMsg, SnapshotMsg, HeartbeatMsg]
 
 MESSAGE_TYPES = (ActivationMsg, GradientMsg, WeightUploadMsg, ShardUploadMsg,
-                 ShardReducedMsg, AnchorMsg, ScoreMsg)
+                 ShardReducedMsg, AnchorMsg, ScoreMsg, LabelsMsg,
+                 EpochPlanMsg, TickLossMsg, SnapshotMsg, HeartbeatMsg)
 
 
 def message_for_key(key: str, schema: KeySchema) -> Message:
@@ -166,4 +246,14 @@ def message_for_key(key: str, schema: KeySchema) -> Message:
         return AnchorMsg(f["epoch"], f["stage"])
     if parsed.kind == "score":
         return ScoreMsg(f["epoch"], f["validator"], f["uid"])
+    if parsed.kind == "labels":
+        return LabelsMsg(f["epoch"], f["tick"])
+    if parsed.kind == "plan":
+        return EpochPlanMsg(f["epoch"])
+    if parsed.kind == "tick_loss":
+        return TickLossMsg(f["epoch"], f["tick"])
+    if parsed.kind == "snapshot":
+        return SnapshotMsg(f["epoch"], f["uid"])
+    if parsed.kind == "heartbeat":
+        return HeartbeatMsg(f["actor"])
     raise ValueError(f"unmapped key kind: {parsed.kind}")

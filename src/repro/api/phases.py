@@ -29,10 +29,19 @@ reproduces the seed trajectory bit-exactly — every RNG draw (pathway
 sampling, drop rolls, fault corruption) happens in the same order as the
 seed monolith.  Phases that reorder RNG-consuming work define a *different*
 scenario, not a bug, but must say so.
+
+``EventDriver`` (the actor runtime, ROADMAP item 1) replaces the lockstep
+phase barriers with store-observed completion events: it publishes the
+epoch *plan* and the per-tick token/label batches up front, then advances
+on watermark keys (tick losses, validator scores, shard/weight uploads)
+that concurrently running actor processes publish as they finish.  All
+swarm RNG draws happen at plan time in exactly the lockstep order, so the
+loss trajectory reproduces the in-process oracle at the same seed.
 """
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, Iterable, Optional, Protocol, runtime_checkable
 
 import jax
@@ -44,8 +53,11 @@ from repro.api.config import EpochStats
 from repro.api.messages import (
     ActivationMsg,
     AnchorMsg,
+    EpochPlanMsg,
     GradientMsg,
+    LabelsMsg,
     ScoreMsg,
+    TickLossMsg,
     WeightUploadMsg,
 )
 from repro.core import butterfly, clasp, compression, diloco
@@ -424,6 +436,11 @@ class EpochDriver:
                        for uid, m in swarm.miners.items()})
         for phase in self.phases:
             phase.run(swarm, state)
+        return self._finalize(swarm, state)
+
+    def _finalize(self, swarm, state: EpochState) -> EpochStats:
+        """Fold the epoch scratchpad into ``EpochStats`` and GC the store —
+        shared by the lockstep and event-driven timelines."""
         if not state.batches:
             # a timeline without SharingPhase still reports the batch census
             state.batches = {m.uid: m.batches_done
@@ -473,3 +490,257 @@ class EpochDriver:
                 swarm.transport.delete_prefix(schema.scores_prefix(e))
                 self._gc_floor += 1
         return stats
+
+
+class EventDriver(EpochDriver):
+    """Event-driven epoch timeline for the concurrent actor runtime.
+
+    Where ``EpochDriver`` *calls* miners and validators in lockstep, this
+    driver never touches their compute: it publishes the epoch plan (the
+    deterministic schedule every actor derives its work list from), the
+    token/label batches, and then advances on watermark keys the actor
+    processes publish — tick losses from last-stage miners, scores from
+    validators, weight/shard uploads from qualifying miners.  The driver
+    keeps only the genuinely central work: plan-time RNG, the dense
+    golden-oracle reduce (or sharded anchor assembly), the DiLoCo outer
+    step, the ledger, and store GC.
+
+    Determinism: every swarm RNG draw (per-tick availability rolls +
+    pathway sampling, then validator assignment) happens at plan time in
+    exactly the lockstep order, and actors interact only through
+    bit-exact store payloads, so dense and sharded runs reproduce the
+    in-process loss trajectory at the same seed.  Fault behaviors that
+    corrupt *payloads* (tamper, free-ride) are driver-side in the
+    lockstep timeline and are rejected by ``ActorSwarm``; drop/straggle
+    are schedule-only and fully supported.
+
+    ``swarm.check_liveness`` (when present) is consulted while polling so
+    a crashed actor surfaces as ``ActorDied`` instead of a timeout.
+    """
+
+    def __init__(self, poll_interval: float = 0.002, timeout: float = 120.0):
+        super().__init__()
+        self.phases = []            # the timeline is event-driven, not phased
+        self.poll_interval = poll_interval
+        self.timeout = timeout
+
+    # -- store polling ---------------------------------------------------
+
+    def _await(self, swarm, key: str) -> None:
+        tp = swarm.transport
+        check = getattr(swarm, "check_liveness", None)
+        wait_for = getattr(tp, "wait_for", None)
+        deadline = time.monotonic() + self.timeout
+        polls = 0
+        while True:
+            if check is not None and polls % 25 == 0:
+                check()
+            if wait_for is not None:
+                # park server-side (zero CPU) in bounded slices so the
+                # liveness check still runs between them
+                if wait_for(key, timeout=0.25, actor="orchestrator"):
+                    return
+                polls += 25          # one slice ~ a liveness interval
+            else:
+                if tp.exists(key):
+                    return
+                time.sleep(self.poll_interval)
+                polls += 1
+            if time.monotonic() >= deadline:
+                raise TimeoutError(
+                    f"event driver timed out after {self.timeout}s "
+                    f"awaiting {key!r}")
+
+    # -- the timeline ----------------------------------------------------
+
+    def run_epoch(self, swarm) -> EpochStats:
+        S = swarm.config
+        tp, schema = swarm.transport, swarm.transport.schema
+        if schema.version < 3:
+            raise ValueError(
+                "EventDriver needs a KeySchema v3 transport (control-plane "
+                f"keys); got v{schema.version}")
+        epoch = swarm.epoch
+        for m in swarm.miners.values():
+            m.reset_epoch()             # parent-side handles: census hygiene
+        state = EpochState(epoch=epoch, snapshots={})
+
+        plan = self._build_plan(swarm, state)
+        tp.publish(EpochPlanMsg(epoch), plan, actor="orchestrator")
+        for tick, _uids, gt in self._ticks:
+            batch = swarm.corpus.batch(gt)
+            tp.publish(ActivationMsg.tokens(epoch, tick),
+                       jnp.asarray(batch["tokens"]), actor="orchestrator")
+            tp.publish(LabelsMsg(epoch, tick),
+                       jnp.asarray(batch["labels"]), actor="orchestrator")
+
+        # training watermarks: fold tick losses into PathwayRecords in tick
+        # order (actors may publish out of order; the records must not)
+        for tick, uids, _gt in self._ticks:
+            key = TickLossMsg(epoch, tick).key(schema)
+            self._await(swarm, key)
+            state.records.append(clasp.PathwayRecord(
+                uids, float(tp.get(key, actor="orchestrator"))))
+
+        self._collect_scores(swarm, state, plan)
+
+        if state.merge_quorum:
+            for s in sorted(plan["qualified"]):
+                quids = plan["qualified"][s]
+                if S.sync_mode == "sharded":
+                    merged = self._reduce_sharded(swarm, state, s, quids)
+                else:
+                    merged = self._reduce_dense(swarm, state, s, quids)
+                self._outer_step_and_publish(swarm, state, s, merged)
+            for s in sorted(state.executors):
+                for v in swarm.validators:
+                    state.reduce_audits.append(v.audit_reduce(epoch, s))
+
+        stats = self._finalize(swarm, state)
+        tp.delete_prefix(schema.control_prefix(stats.epoch))
+        return stats
+
+    # -- plan construction (all swarm RNG, lockstep order) ---------------
+
+    def _build_plan(self, swarm, state: EpochState) -> dict:
+        S = swarm.config
+        ticks = []
+        for tick in range(S.inner_steps):
+            gt = swarm.global_tick      # the batch index, like the lockstep
+            swarm.global_tick += 1      # driver consumes it even when stalled
+            pathway = []
+            ok = True
+            for s in range(S.n_stages):
+                avail = [m for m in swarm.stage_miners(s)
+                         if swarm.available(m, tick)]
+                if not avail:
+                    ok = False
+                    break
+                pathway.append(avail[swarm.rng.randint(len(avail))].uid)
+            if not ok:
+                state.stalled += 1
+                continue
+            ticks.append((tick, tuple(pathway), gt))
+        self._ticks = ticks
+
+        batches = {uid: 0 for uid in swarm.miners}
+        for _tick, uids, _gt in ticks:
+            for uid in uids:
+                batches[uid] += 1
+        state.batches = batches
+        state.b_eff = diloco.effective_batch(batches, S.b_min)
+        state.merge_quorum = diloco.should_merge(batches, S.b_min,
+                                                 S.quorum_frac)
+        qualified: dict[int, tuple] = {}
+        if state.merge_quorum:
+            for s in range(S.n_stages):
+                qual = tuple(m.uid for m in swarm.stage_miners(s)
+                             if batches[m.uid] >= S.b_min)
+                if len(qual) >= 2:
+                    qualified[s] = qual
+
+        # validator assignment draws come after every training draw —
+        # identical RNG order to the lockstep ValidationPhase
+        uids_sorted = sorted(swarm.miners)
+        tracked = {}
+        if uids_sorted:
+            for v in swarm.validators:
+                tracked[v.uid] = uids_sorted[
+                    swarm.rng.randint(len(uids_sorted))]
+
+        return {
+            "stop": False,
+            "epoch": state.epoch,
+            "ticks": tuple((t, uids) for t, uids, _gt in ticks),
+            "merge": state.merge_quorum,
+            "qualified": qualified,
+            "tracked": tracked,
+            "stage_of": {uid: swarm.miners[uid].stage
+                         for uid in uids_sorted},
+        }
+
+    # -- validation watermarks -------------------------------------------
+
+    def _collect_scores(self, swarm, state: EpochState, plan: dict) -> None:
+        from repro.runtime.validator import ValidationResult
+        schema = swarm.transport.schema
+        t_now = state.epoch * swarm.config.sync_interval_hours
+        for v in swarm.validators:
+            uid = plan["tracked"].get(v.uid)
+            if uid is None:
+                continue
+            msg = ScoreMsg(state.epoch, v.uid, uid)
+            self._await(swarm, msg.key(schema))
+            vec = np.asarray(swarm.transport.fetch(msg, actor="orchestrator"))
+            res = ValidationResult(uid, state.epoch, int(vec[1]),
+                                   int(vec[2]), float(vec[0]), float(vec[3]))
+            v.results.append(res)
+            swarm.ledger.record(uid, state.epoch, res.score, t_now)
+            state.validation.append(res)
+
+    # -- merge: await uploads, reduce, outer step, publish anchor --------
+
+    def _stage_vec_len(self, swarm, s: int) -> int:
+        vec, _ = ravel_pytree(
+            jax.tree.map(lambda x: x.astype(jnp.float32), swarm.anchors[s]))
+        return int(vec.shape[0])
+
+    def _reduce_dense(self, swarm, state: EpochState, s: int,
+                      quids: tuple) -> np.ndarray:
+        S = swarm.config
+        schema = swarm.transport.schema
+        vec_len = self._stage_vec_len(swarm, s)
+        uploads: dict[int, np.ndarray] = {}
+        for idx, uid in enumerate(quids):
+            msg = WeightUploadMsg(state.epoch, s, uid, codec=S.share_codec)
+            self._await(swarm, msg.key(schema))
+            payload = swarm.transport.fetch(msg, actor="orchestrator")
+            uploads[idx] = np.asarray(compression.decode(payload, vec_len))
+        plan = butterfly.make_plan(len(quids), vec_len,
+                                   seed=S.seed + state.epoch * 131 + s)
+        copies = butterfly.reduce_with_copies(plan, uploads)
+        state.agreement[s] = butterfly.agreement_matrix(plan, copies)
+        merged, _, _ = butterfly.reduce_shards(plan, uploads)
+        return merged
+
+    def _reduce_sharded(self, swarm, state: EpochState, s: int,
+                        quids: tuple) -> np.ndarray:
+        S = swarm.config
+        vec_len = self._stage_vec_len(swarm, s)
+        align = compression.INT8_BLOCK if S.share_codec == "int8" else 1
+        plan = butterfly.make_plan(len(quids), vec_len,
+                                   seed=S.seed + state.epoch * 131 + s,
+                                   align=align)
+        ex = butterfly.ButterflyExecutor(
+            plan, swarm.transport, epoch=state.epoch, stage=s,
+            uids=list(quids), codec=S.share_codec)
+        for shard, (i, j) in enumerate(plan.pairs):
+            lo, hi = plan.shard_bounds(shard)
+            if hi == lo:
+                continue
+            for r in (i, j):
+                self._await(swarm, ex.reduced_key(shard, r))
+        merged, _, _ = ex.collect(actor="orchestrator")
+        state.agreement[s] = ex.last_agreement
+        state.executors[s] = ex
+        return merged
+
+    def _outer_step_and_publish(self, swarm, state: EpochState, s: int,
+                                merged: np.ndarray) -> None:
+        S = swarm.config
+        _, unravel = ravel_pytree(
+            jax.tree.map(lambda x: x.astype(jnp.float32), swarm.anchors[s]))
+        avg = unravel(jnp.asarray(merged))
+        swarm.outer[s] = diloco.outer_update(
+            swarm.outer[s], avg, outer_lr=S.outer_lr,
+            outer_momentum=S.outer_momentum)
+        swarm.anchors[s] = jax.tree.map(
+            lambda a, p: a.astype(p.dtype), swarm.outer[s].anchor,
+            swarm.anchors[s])
+        anchor_vec, _ = ravel_pytree(
+            jax.tree.map(lambda x: x.astype(jnp.float32), swarm.anchors[s]))
+        # actors download the anchor themselves (the plan tells them which
+        # stages merge); the driver only publishes it
+        swarm.transport.publish(AnchorMsg(state.epoch, s),
+                                np.asarray(anchor_vec), actor="orchestrator")
+        state.merged_stages += 1

@@ -273,6 +273,13 @@ _register(_messages.ShardUploadMsg)
 _register(_messages.ShardReducedMsg)
 _register(_messages.AnchorMsg)
 _register(_messages.ScoreMsg)
+# KeySchema v3: the actor runtime's control plane (labels, epoch plan,
+# loss watermarks, snapshots) + the health-endpoint heartbeat envelope
+_register(_messages.LabelsMsg)
+_register(_messages.EpochPlanMsg)
+_register(_messages.TickLossMsg)
+_register(_messages.SnapshotMsg)
+_register(_messages.HeartbeatMsg)
 
 
 def registered_message_names() -> tuple:

@@ -106,7 +106,33 @@ class Swarm:
                faults: Optional[FaultModel] = None,
                transport: Optional[Transport] = None,
                train_cfg: Optional[TrainConfig] = None,
-               phases: Optional[Iterable[Phase]] = None) -> "Swarm":
+               phases: Optional[Iterable[Phase]] = None,
+               runtime: str = "inprocess",
+               store_address: Optional[tuple] = None) -> "Swarm":
+        """Build a swarm.  ``runtime="inprocess"`` (default) is the
+        lockstep oracle; ``runtime="actors"`` returns an ``ActorSwarm``
+        whose miners/validators are concurrent OS processes over a socket
+        store (own threaded server unless ``store_address`` points at an
+        external one) — same loss trajectory at the same seed, remember
+        to ``shutdown()``."""
+        if runtime == "actors":
+            if phases is not None or transport is not None:
+                raise ValueError(
+                    "runtime='actors' owns its timeline and transport; "
+                    "phases=/transport= only apply to the in-process "
+                    "runtime")
+            from repro.runtime.actor import ActorSwarm
+            return ActorSwarm(model_cfg, config or SwarmConfig(),
+                              faults=faults, train_cfg=train_cfg,
+                              store_address=store_address)
+        if runtime != "inprocess":
+            raise ValueError(
+                f"unknown runtime {runtime!r}: 'inprocess' or 'actors'")
+        if store_address is not None:
+            raise ValueError(
+                "store_address= only applies to runtime='actors'; pass "
+                "transport=SocketTransport(address) for an in-process "
+                "swarm over a socket store")
         driver = EpochDriver(phases) if phases is not None else None
         return cls(model_cfg, config or SwarmConfig(), faults=faults,
                    transport=transport, train_cfg=train_cfg, driver=driver)

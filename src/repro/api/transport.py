@@ -34,14 +34,17 @@ from __future__ import annotations
 import contextlib
 import dataclasses
 import socket
+import threading
 import time
-from collections import defaultdict
+from collections import defaultdict, deque
 from typing import Any, Optional, Protocol, runtime_checkable
 
 from repro.api import serde
 from repro.api.keys import KeySchema
 from repro.api.messages import Message
-from repro.runtime.state_store import StateStore, StoreKeyError  # noqa: F401
+from repro.runtime.state_store import (  # noqa: F401
+    StateStore, StoreKeyError, _digest, _nbytes,
+)
 
 
 @runtime_checkable
@@ -237,6 +240,32 @@ class SimulatedNetworkTransport(InProcessTransport):
         return entry.payload
 
 
+class _Conn:
+    """One TCP connection to the store server plus its in-flight pipeline.
+
+    ``pending`` holds requests whose frames are on the wire but whose
+    responses have not been read yet (pipelined puts inside a
+    ``parallel()`` block).  The lock makes each connection a thread-safe
+    handle: an actor process can share its transport between its main
+    loop and its health thread."""
+
+    __slots__ = ("sock", "lock", "pending")
+
+    def __init__(self):
+        self.sock: Optional[socket.socket] = None
+        self.lock = threading.RLock()
+        self.pending: deque = deque()   # of _Pending
+
+
+@dataclasses.dataclass
+class _Pending:
+    """A pipelined put awaiting its response."""
+    req: dict
+    actor: str
+    digest: str        # predicted client-side; verified against the server
+    nbytes: int
+
+
 class SocketTransport:
     """Client of a real ``StoreServer`` (``repro.runtime.store_server``):
     the store lives in another process (or host), every payload crosses a
@@ -254,21 +283,44 @@ class SocketTransport:
         nearest existing prefix), reconstructed from the server's error
         response.
 
+    Concurrency model (the actor-runtime refactor):
+
+      * **connection per actor** — each distinct ``actor`` string gets its
+        own socket, so requests from different actors ride different TCP
+        streams (the server handles each in its own thread);
+      * **pipelined ``parallel()``** — inside a ``parallel()`` block,
+        plain puts are sent back-to-back *without waiting for responses*
+        (real in-flight concurrency over the framing).  The returned
+        digest is computed client-side with the store's own digest
+        function — the serde round-trip is bit-exact, so the server's
+        digest must match; the match is asserted when responses drain.
+        Any read op (and block exit) drains all in-flight responses
+        first, so ordering is indistinguishable from the serialized
+        transport;
+      * **bounded reconnect** — an I/O error invalidates the connection
+        and the request retries on a fresh dial with exponential backoff
+        (store ops are idempotent: a replayed put re-stores the same
+        bytes).  ``reconnect_attempts=0`` restores fail-fast.
+
     ``link_report`` mirrors the simulated transport's shape with
     client-side counters (payload bytes per actor, *real* busy seconds);
     ``wire_report`` additionally counts raw socket bytes including
-    framing/envelope overhead.  ``parallel()`` is a no-op: one TCP
-    connection serializes requests (per-actor connections are future
-    work), which is honest — ``elapsed_seconds`` is wall-clock actually
-    spent blocked on the wire.
+    framing/envelope overhead.  ``elapsed_seconds`` is wall-clock
+    actually spent blocked on the wire.
     """
 
     def __init__(self, address: tuple, schema: Optional[KeySchema] = None,
-                 connect_timeout: float = 10.0):
+                 connect_timeout: float = 10.0,
+                 reconnect_attempts: int = 3,
+                 reconnect_backoff: float = 0.05):
         self.address = (str(address[0]), int(address[1]))
         self.schema = schema or KeySchema()
         self.connect_timeout = connect_timeout
-        self._sock: Optional[socket.socket] = None
+        self.reconnect_attempts = int(reconnect_attempts)
+        self.reconnect_backoff = float(reconnect_backoff)
+        self._conns: dict[str, _Conn] = {}
+        self._conns_lock = threading.Lock()
+        self._parallel_depth = 0
         self.links: dict[str, LinkStats] = defaultdict(LinkStats)
         self._elapsed = 0.0
         self._wire_up = 0
@@ -278,9 +330,11 @@ class SocketTransport:
     # -- connection ------------------------------------------------------
 
     def _connect(self) -> socket.socket:
-        """Dial with retries inside ``connect_timeout``: the server process
-        may still be binding when the first request goes out."""
+        """Dial with exponential backoff inside ``connect_timeout``: the
+        server process may still be binding when the first request goes
+        out, and a hiccuping server deserves a breather between dials."""
         deadline = time.monotonic() + self.connect_timeout
+        delay = max(self.reconnect_backoff, 0.01)
         while True:
             try:
                 sock = socket.create_connection(self.address, timeout=30.0)
@@ -289,33 +343,74 @@ class SocketTransport:
                 sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
                 return sock
             except OSError:
-                if time.monotonic() >= deadline:
+                now = time.monotonic()
+                if now >= deadline:
                     raise
-                time.sleep(0.05)
+                time.sleep(min(delay, deadline - now))
+                delay = min(delay * 2.0, 0.5)
 
-    def _request(self, req: dict) -> dict:
-        if self._sock is None:
-            self._sock = self._connect()
+    def _conn_for(self, actor: str) -> _Conn:
+        with self._conns_lock:
+            conn = self._conns.get(actor)
+            if conn is None:
+                conn = self._conns[actor] = _Conn()
+            return conn
+
+    def _invalidate(self, conn: _Conn) -> None:
+        """Drop a desynchronized socket; in-flight pipelined requests stay
+        queued and are replayed after the next successful dial."""
+        if conn.sock is not None:
+            try:
+                conn.sock.close()
+            except OSError:
+                pass
+            conn.sock = None
+
+    def _io(self, conn: _Conn, fn):
+        """Run ``fn()`` (socket I/O on ``conn``; caller holds its lock)
+        with bounded reconnect: an ``OSError`` invalidates the socket,
+        backs off, re-dials, replays the in-flight pipeline (idempotent
+        puts) and retries."""
+        attempt = 0
+        while True:
+            try:
+                if conn.sock is None:
+                    conn.sock = self._connect()
+                    for entry in conn.pending:   # replay lost pipeline
+                        self._send(conn, entry.req)
+                return fn()
+            except OSError:
+                self._invalidate(conn)
+                if attempt >= self.reconnect_attempts:
+                    raise
+                time.sleep(min(self.reconnect_backoff * (2 ** attempt), 1.0))
+                attempt += 1
+
+    def _send(self, conn: _Conn, req: dict) -> None:
         body = serde.dumps(req)
         t0 = time.monotonic()
         try:
-            self._wire_up += serde.send_frame(self._sock, body)
-            resp_body = serde.recv_frame(self._sock)
-        except OSError:
-            # a failed send/recv leaves the stream desynchronized: drop the
-            # connection so a retry dials fresh instead of pairing the next
-            # request with a stale half-read response
-            self.close()
-            raise
+            self._wire_up += serde.send_frame(conn.sock, body)
+        finally:
+            self._elapsed += time.monotonic() - t0
+        self._requests += 1
+
+    def _recv(self, conn: _Conn) -> dict:
+        t0 = time.monotonic()
+        try:
+            resp_body = serde.recv_frame(conn.sock)
         finally:
             self._elapsed += time.monotonic() - t0
         if resp_body is None:
-            self.close()
+            # clean EOF mid-conversation: surface as a connection error so
+            # _io treats it like any other I/O invalidation
             raise ConnectionError(
                 f"store server {self.address} closed the connection")
         self._wire_down += len(resp_body) + 8
-        self._requests += 1
-        resp = serde.loads(resp_body)
+        return serde.loads(resp_body)
+
+    @staticmethod
+    def _check(resp: dict) -> dict:
         if resp.get("ok"):
             return resp
         if resp.get("error") == "StoreKeyError":
@@ -325,6 +420,38 @@ class SocketTransport:
         raise RuntimeError(
             f"store server error: {resp.get('error')}: "
             f"{resp.get('message', '')}")
+
+    def _drain_conn(self, conn: _Conn) -> None:
+        """Read responses for every in-flight pipelined put on ``conn``
+        (caller holds its lock; callers go through :meth:`_io`)."""
+        while conn.pending:
+            t0 = time.monotonic()
+            resp = self._check(self._recv(conn))
+            entry = conn.pending.popleft()
+            if resp["digest"] != entry.digest:
+                raise RuntimeError(
+                    f"pipelined put digest mismatch on "
+                    f"{entry.req.get('key')!r}: client {entry.digest} != "
+                    f"server {resp['digest']} — payload corrupted in flight")
+            self._charge(entry.actor, resp["nbytes"],
+                         time.monotonic() - t0, up=True)
+
+    def _drain_all(self) -> None:
+        with self._conns_lock:
+            conns = list(self._conns.values())
+        for conn in conns:
+            with conn.lock:
+                if conn.pending:
+                    self._io(conn, lambda c=conn: self._drain_conn(c))
+
+    def _request(self, req: dict, actor: str = "?") -> dict:
+        conn = self._conn_for(actor)
+        with conn.lock:
+            def step():
+                self._drain_conn(conn)
+                self._send(conn, req)
+                return self._recv(conn)
+            return self._check(self._io(conn, step))
 
     def _charge(self, actor: str, nbytes: int, seconds: float,
                 up: bool) -> None:
@@ -350,36 +477,81 @@ class SocketTransport:
     def put(self, key: str, value: Any, actor: str = "?",
             codec: Optional[str] = None,
             meta: Optional[dict] = None) -> str:
+        if self._parallel_depth > 0 and codec is None:
+            return self._pipeline_put(key, value, actor, meta)
         t0 = time.monotonic()
         resp = self._request({"op": "put", "key": key, "value": value,
-                              "actor": actor, "codec": codec, "meta": meta})
+                              "actor": actor, "codec": codec, "meta": meta},
+                             actor=actor)
         self._charge(actor, resp["nbytes"], time.monotonic() - t0, up=True)
         return resp["digest"]
 
+    def _pipeline_put(self, key: str, value: Any, actor: str,
+                      meta: Optional[dict]) -> str:
+        """Fire-and-track put: the frame goes out now, the response is
+        read at the next read op / block exit.  The digest returned is
+        computed client-side with the store's own hash over the same
+        bytes the server will store — the drain asserts they agree."""
+        digest = _digest(value)
+        req = {"op": "put", "key": key, "value": value,
+               "actor": actor, "codec": None, "meta": meta}
+        conn = self._conn_for(actor)
+        with conn.lock:
+            self._io(conn, lambda: self._send(conn, req))
+            conn.pending.append(_Pending(req, actor, digest, _nbytes(value)))
+        return digest
+
     def get(self, key: str, actor: str = "?") -> Any:
+        self._drain_all()
         t0 = time.monotonic()
-        resp = self._request({"op": "get", "key": key, "actor": actor})
+        resp = self._request({"op": "get", "key": key, "actor": actor},
+                             actor=actor)
         self._charge(actor, resp["nbytes"], time.monotonic() - t0, up=False)
         return resp["value"]
 
     def exists(self, key: str) -> bool:
+        self._drain_all()
         return self._request({"op": "exists", "key": key})["exists"]
 
+    def wait_for(self, key: str, timeout: float = 0.5,
+                 actor: str = "?") -> bool:
+        """Block server-side until ``key`` exists (a put wakes the wait)
+        or ``timeout`` expires; returns existence.  This is what makes
+        pull-based actors event-driven instead of exists-polling — an
+        idle actor parks a handler thread on the server's condition
+        variable and costs zero CPU until its input lands."""
+        self._drain_all()
+        return self._request({"op": "wait", "key": key,
+                              "timeout": float(timeout)},
+                             actor=actor)["exists"]
+
     def delete_prefix(self, prefix: str) -> int:
+        self._drain_all()
         return self._request({"op": "delete_prefix",
                               "prefix": prefix})["deleted"]
 
     def keys(self, prefix: str = "") -> list[str]:
+        self._drain_all()
         return list(self._request({"op": "keys", "prefix": prefix})["keys"])
 
     # -- timing / accounting ---------------------------------------------
 
     @contextlib.contextmanager
     def parallel(self):
-        yield
+        """Puts inside the block pipeline on their actor's connection —
+        genuinely in flight concurrently — and drain at block exit.
+        Nested blocks flatten into the outermost."""
+        self._parallel_depth += 1
+        try:
+            yield
+        finally:
+            self._parallel_depth -= 1
+            if self._parallel_depth == 0:
+                self._drain_all()
 
     def traffic_report(self) -> dict:
         """The *server-side* authoritative accounting."""
+        self._drain_all()
         return self._request({"op": "traffic_report"})["report"]
 
     def link_report(self) -> dict:
@@ -401,21 +573,28 @@ class SocketTransport:
 
     def reset_store(self) -> None:
         """Fresh server-side store + counters (one server, many runs)."""
+        self._drain_all()
         self._request({"op": "reset"})
 
     def stop_server(self) -> None:
         """Ask the server process to exit, then drop the connection."""
         try:
+            self._drain_all()
             self._request({"op": "shutdown"})
         finally:
             self.close()
 
     def close(self) -> None:
-        if self._sock is not None:
-            try:
-                self._sock.close()
-            finally:
-                self._sock = None
+        with self._conns_lock:
+            conns, self._conns = self._conns, {}
+        for conn in conns.values():
+            with conn.lock:
+                conn.pending.clear()
+                if conn.sock is not None:
+                    try:
+                        conn.sock.close()
+                    finally:
+                        conn.sock = None
 
     def __enter__(self) -> "SocketTransport":
         return self

@@ -11,6 +11,16 @@ _LAZY = {
     "EpochStats": "orchestrator",
     "StoreServer": "store_server",
     "spawn_store_server": "store_server",
+    # the concurrent actor runtime (actor.py imports repro.api too)
+    "ActorSwarm": "actor",
+    "ActorProcess": "actor",
+    "ActorSupervisor": "actor",
+    "ActorSpec": "actor",
+    "MinerActor": "actor",
+    "ValidatorActor": "actor",
+    "WorkQueue": "actor",
+    "ActorDied": "actor",
+    "ActorStopped": "actor",
 }
 
 

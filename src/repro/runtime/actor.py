@@ -1,0 +1,688 @@
+"""Concurrent actor runtime: miners/validators as real OS processes.
+
+The paper's SWARM peers (§2) are autonomous workers polling a globally
+accessible store — no global barrier stepping.  Everything before this
+module simulated that: PR 5 made the *store* a process, but every actor
+still took turns inside one Python loop.  Here each miner and validator
+is a ``spawn``-context process with its own ``SocketTransport`` (its
+thread-safe store handle), pulling work off the store through a
+``WorkQueue`` and publishing results the ``EventDriver``
+(``repro.api.phases``) advances on.
+
+Process model:
+
+  * ``ActorProcess``   base: spawn entry, per-actor store connection, a
+                       tiny TCP *health endpoint* (serde frames; ``ping``
+                       answers a ``HeartbeatMsg`` envelope, ``stop``
+                       requests a clean exit), the epoch loop (await
+                       plan -> process -> next), clean shutdown;
+  * ``MinerActor``     wraps a ``runtime.Miner``: derives its tick jobs
+                       from the plan, awaits each input activation,
+                       forwards/backwards, publishes activations,
+                       gradients, the tick-loss watermark, its weight
+                       upload and (sharded) its reduce work;
+  * ``ValidatorActor`` replays its tracked miner from the store alone —
+                       snapshot + activations + gradients + labels —
+                       mirroring ``Validator.validate_epoch`` bit-exactly,
+                       and publishes the ``ScoreMsg`` watermark;
+  * ``ActorSupervisor``spawns/pings/stops the fleet and turns a dead
+                       child into ``ActorDied`` instead of a hang;
+  * ``ActorSwarm``     the ``Swarm`` facade over all of it —
+                       ``Swarm.create(..., runtime="actors")`` builds one.
+
+Determinism: the driver does every swarm RNG draw at plan time in the
+lockstep order; actors interact only through bit-exact store payloads
+and each actor processes its own jobs in tick order, so per-miner update
+sequences — and the loss trajectory — equal the in-process oracle at the
+same seed.  Payload-corrupting faults (tamper, free-ride) live in the
+lockstep driver's process and are rejected here; drop/straggle are
+schedule-only and supported.
+"""
+from __future__ import annotations
+
+import dataclasses
+import socket
+import threading
+import time
+from typing import Any, Optional, Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api import serde
+from repro.api.config import SwarmConfig
+from repro.api.keys import KeySchema
+from repro.api.messages import (
+    AnchorMsg,
+    GradientMsg,
+    HeartbeatMsg,
+    ScoreMsg,
+    SnapshotMsg,
+    TickLossMsg,
+    WeightUploadMsg,
+)
+from repro.api.phases import EventDriver
+from repro.api.swarm import Swarm
+from repro.api.transport import SocketTransport
+from repro.common import cosine_similarity
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.core import butterfly, compression
+from repro.optim import adamw
+from repro.optim.schedules import cosine_warmup
+from repro.runtime import stage_model as sm
+from repro.runtime.miner import Miner
+from repro.runtime.network import FaultModel
+from repro.runtime.validator import COSINE_THRESHOLD
+
+
+class ActorStopped(Exception):
+    """Raised inside an actor when a stop request interrupts polling."""
+
+
+class ActorDied(RuntimeError):
+    """A spawned actor process exited while the swarm still needed it."""
+
+    def __init__(self, actor: str, exitcode: Optional[int]):
+        super().__init__(
+            f"actor process {actor!r} died (exit code {exitcode}) while "
+            f"the epoch was in flight")
+        self.actor = actor
+        self.exitcode = exitcode
+
+
+class WorkQueue:
+    """Pull-based work discovery: an actor blocks on the store key that
+    carries its next input instead of being called by a driver.
+
+    ``await_key`` blocks until the key appears, a stop request lands
+    (``ActorStopped``), the ``liveness`` hook raises (driver-side: a
+    crashed peer), or ``timeout`` expires.  When the transport offers
+    ``wait_for`` (``SocketTransport`` against a ``StoreServer``) the
+    wait parks server-side on a condition variable in bounded slices —
+    zero CPU while idle; otherwise it falls back to exists-polling at
+    ``poll_interval``."""
+
+    def __init__(self, transport, poll_interval: float = 0.001,
+                 timeout: float = 120.0, liveness=None,
+                 stop_event: Optional[threading.Event] = None,
+                 liveness_every: int = 25):
+        self.transport = transport
+        self.poll_interval = poll_interval
+        self.timeout = timeout
+        self.liveness = liveness
+        self.stop_event = stop_event
+        self.liveness_every = max(int(liveness_every), 1)
+
+    wait_slice = 0.25    # bounded server-side park: stop/liveness cadence
+
+    def await_key(self, key: str) -> None:
+        deadline = time.monotonic() + self.timeout
+        wait_for = getattr(self.transport, "wait_for", None)
+        polls = 0
+        while True:
+            if self.stop_event is not None and self.stop_event.is_set():
+                raise ActorStopped(key)
+            if self.liveness is not None \
+                    and polls % self.liveness_every == 0:
+                self.liveness()
+            if wait_for is not None:
+                if wait_for(key, timeout=self.wait_slice):
+                    return
+            else:
+                if self.transport.exists(key):
+                    return
+                time.sleep(self.poll_interval)
+            if time.monotonic() >= deadline:
+                raise TimeoutError(
+                    f"work queue timed out after {self.timeout}s "
+                    f"awaiting {key!r}")
+            polls += 1
+
+    def get(self, key: str, actor: str = "?") -> Any:
+        self.await_key(key)
+        return self.transport.get(key, actor=actor)
+
+
+@runtime_checkable
+class Actor(Protocol):
+    """The surface every actor-process implementation must provide (the
+    swarmlint ``protocol-conformance`` rule binds ``*Actor`` classes to
+    this protocol; ``ActorProcess`` supplies the base implementation)."""
+    actor: str
+
+    def setup(self) -> None: ...
+
+    def process_epoch(self, plan: dict) -> None: ...
+
+    def status(self) -> HeartbeatMsg: ...
+
+    def shutdown(self) -> None: ...
+
+
+@dataclasses.dataclass(frozen=True)
+class ActorSpec:
+    """Picklable spawn arguments: everything a child process needs to
+    rebuild its world deterministically (params re-derive from the seed,
+    they never cross the process boundary at spawn)."""
+    kind: str                 # "miner" | "validator"
+    uid: int
+    stage: int                # -1 for validators
+    model_cfg: ModelConfig
+    config: SwarmConfig
+    train_cfg: TrainConfig
+    store_address: tuple
+    start_epoch: int = 0
+
+
+class ActorProcess:
+    """Base actor: spawn-context process body, own store connection,
+    heartbeat/health endpoint over a tiny TCP socket, clean shutdown.
+
+    The epoch loop awaits ``control/ep{E}/plan``, hands the decoded plan
+    to ``process_epoch`` and advances; a plan with ``stop=True`` (or a
+    ``stop`` op on the health endpoint) ends the loop cleanly."""
+
+    health_poll = 0.2         # accept() timeout: stop-flag check cadence
+
+    def __init__(self, spec: ActorSpec):
+        self.spec = spec
+        self.actor = f"{spec.kind}{spec.uid}"
+        self.epoch = spec.start_epoch
+        self.items_done = 0
+        self.state = "init"
+        self.transport: Optional[SocketTransport] = None
+        self.queue: Optional[WorkQueue] = None
+        self._stop = threading.Event()
+        self._health_sock: Optional[socket.socket] = None
+        self.model_spec: Optional[sm.SwarmModelSpec] = None
+
+    # -- lifecycle -------------------------------------------------------
+
+    def setup(self) -> None:
+        S = self.spec.config
+        self.transport = SocketTransport(self.spec.store_address,
+                                         schema=KeySchema(version=3))
+        self.queue = WorkQueue(self.transport, stop_event=self._stop)
+        self.model_spec = sm.SwarmModelSpec(
+            self.spec.model_cfg, S.n_stages, S.compress, S.bottleneck_dim)
+
+    def status(self) -> HeartbeatMsg:
+        import os
+        return HeartbeatMsg(self.actor, pid=os.getpid(), epoch=self.epoch,
+                            items_done=self.items_done, state=self.state)
+
+    def shutdown(self) -> None:
+        self._stop.set()
+        if self._health_sock is not None:
+            try:
+                self._health_sock.close()
+            except OSError:
+                pass
+            self._health_sock = None
+        if self.transport is not None:
+            self.transport.close()
+
+    def process_epoch(self, plan: dict) -> None:
+        raise NotImplementedError
+
+    # -- health endpoint -------------------------------------------------
+
+    def _serve_health(self) -> None:
+        srv = self._health_sock
+        while not self._stop.is_set():
+            try:
+                conn, _ = srv.accept()
+            except (OSError, socket.timeout):
+                if self._stop.is_set():
+                    return
+                continue
+            try:
+                conn.settimeout(2.0)
+                while True:
+                    frame = serde.recv_frame(conn)
+                    if frame is None:
+                        break
+                    req = serde.loads(frame)
+                    if req.get("op") == "stop":
+                        self.state = "stopping"
+                        self._stop.set()
+                    serde.send_frame(conn,
+                                     serde.encode_message(self.status()))
+            except (OSError, socket.timeout, ConnectionError):
+                pass
+            finally:
+                try:
+                    conn.close()
+                except OSError:
+                    pass
+
+    def run(self, ready_queue: Any = None) -> None:
+        """Blocking process body: health endpoint up, report ready, loop
+        epochs until a stop plan / stop ping / ActorStopped."""
+        self.setup()
+        srv = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        srv.bind(("127.0.0.1", 0))
+        srv.listen(4)
+        srv.settimeout(self.health_poll)
+        self._health_sock = srv
+        threading.Thread(target=self._serve_health,
+                         name=f"{self.actor}-health", daemon=True).start()
+        if ready_queue is not None:
+            ready_queue.put((self.actor, srv.getsockname()[:2]))
+        try:
+            while not self._stop.is_set():
+                self.state = "awaiting-plan"
+                plan_key = self.transport.schema.plan(self.epoch)
+                while True:
+                    try:
+                        self.queue.await_key(plan_key)
+                        break
+                    except TimeoutError:
+                        continue   # idle between epochs is not a failure
+                plan = self.transport.get(plan_key, actor=self.actor)
+                if plan.get("stop"):
+                    break
+                self.state = "working"
+                self.process_epoch(plan)
+                self.epoch += 1
+        except ActorStopped:
+            pass
+        finally:
+            self.state = "stopped"
+            self.shutdown()
+
+
+class MinerActor(ActorProcess):
+    """A ``runtime.Miner`` driven by the store instead of the driver."""
+
+    def __init__(self, spec: ActorSpec):
+        super().__init__(spec)
+        self.miner: Optional[Miner] = None
+
+    def setup(self) -> None:
+        super().setup()
+        S = self.spec.config
+        stage = self.spec.stage
+        # same init as Swarm.register_miner: params copy the stage anchor,
+        # which is init_stage_params at the folded seed — re-derived here
+        # so no weights cross the spawn boundary
+        params = sm.init_stage_params(
+            jax.random.fold_in(jax.random.key(S.seed), stage),
+            self.model_spec, stage)
+        self.miner = Miner(self.spec.uid, stage, self.model_spec,
+                           jax.tree.map(jnp.copy, params), self.transport,
+                           self.spec.train_cfg)
+
+    # -- the epoch -------------------------------------------------------
+
+    def process_epoch(self, plan: dict) -> None:
+        m = self.miner
+        epoch = plan["epoch"]
+        m.reset_epoch()
+        if m.uid in set(plan["tracked"].values()):
+            # epoch-start snapshot, before any tick mutates state: the
+            # tracked validator replays from exactly here
+            self.transport.publish(SnapshotMsg(epoch, m.uid), m.snapshot(),
+                                   actor=self.actor)
+        for tick, uids in plan["ticks"]:
+            if uids[m.stage] != m.uid:
+                continue
+            self._process_tick(epoch, tick, uids)
+            self.items_done += 1
+        if plan["merge"]:
+            self._share_and_sync(epoch, plan)
+
+    def _process_tick(self, epoch: int, tick: int, uids: tuple) -> None:
+        m, schema = self.miner, self.transport.schema
+        s, last = m.stage, self.spec.config.n_stages - 1
+        in_key = schema.tokens(epoch, tick) if s == 0 \
+            else schema.activation(epoch, tick, s - 1, uids[s - 1])
+        out_key = schema.activation(epoch, tick, s, m.uid)
+        self.queue.await_key(in_key)
+        m.forward(tick, in_key, out_key)
+        if s == last:
+            lab_key = schema.labels(epoch, tick)
+            loss, g = m.backward_last(in_key,
+                                      self.queue.get(lab_key, self.actor))
+            # the training watermark the EventDriver folds into records
+            self.transport.publish(TickLossMsg(epoch, tick), float(loss),
+                                   actor=self.actor)
+        else:
+            g_key = schema.gradient_for(out_key)
+            g = m.backward(in_key, self._decode_gradient(
+                self.queue.get(g_key, self.actor)))
+        if s > 0:
+            self._publish_gradient(epoch, tick, s - 1, uids[s - 1], g)
+
+    def _publish_gradient(self, epoch: int, tick: int, stage: int,
+                          uid: int, g) -> None:
+        msg = GradientMsg(epoch, tick, stage, uid)
+        if self.spec.config.wire_codec == "int8":
+            # the lockstep driver's int8 gradient wire, producer-side; the
+            # extra "dtype" key lets the consumer replicate the exact
+            # decode->astype the in-process loop applies (it knows g's
+            # dtype in-process; over the wire it must be carried)
+            flat = jnp.ravel(jnp.asarray(g, jnp.float32))
+            payload = dict(compression.encode(flat, "int8"),
+                           shape=tuple(np.shape(g)),
+                           dtype=str(jnp.asarray(g).dtype))
+            self.transport.publish(msg, payload, actor=self.actor)
+        else:
+            self.transport.publish(msg, g, actor=self.actor)
+
+    def _decode_gradient(self, g):
+        if isinstance(g, dict) and g.get("codec"):
+            return jnp.reshape(compression.decode(g), g["shape"]).astype(
+                serde._np_dtype(g["dtype"]))
+        return g
+
+    # -- sharing + sync --------------------------------------------------
+
+    def _share_and_sync(self, epoch: int, plan: dict) -> None:
+        m, S = self.miner, self.spec.config
+        schema = self.transport.schema
+        qual = plan["qualified"].get(m.stage, ())
+        if m.uid in qual:
+            vec = m.weights_vector()
+            if S.sync_mode == "sharded":
+                self._share_sharded(epoch, tuple(qual), vec)
+            else:
+                payload = compression.encode(jnp.asarray(vec), S.share_codec)
+                self.transport.publish(
+                    WeightUploadMsg(epoch, m.stage, m.uid,
+                                    codec=S.share_codec),
+                    payload, actor=self.actor)
+        if m.stage in plan["qualified"]:
+            # full sync: everyone in a merged stage (stragglers included)
+            # downloads the anchor the driver publishes
+            anchor = AnchorMsg(epoch, m.stage)
+            self.queue.await_key(anchor.key(schema))
+            m.load_weights_vector(self.transport.fetch(anchor,
+                                                       actor=self.actor))
+
+    def _share_sharded(self, epoch: int, qual: tuple, vec) -> None:
+        m, S = self.miner, self.spec.config
+        align = compression.INT8_BLOCK if S.share_codec == "int8" else 1
+        plan_b = butterfly.make_plan(len(qual), int(vec.shape[0]),
+                                     seed=S.seed + epoch * 131 + m.stage,
+                                     align=align)
+        ex = butterfly.ButterflyExecutor(
+            plan_b, self.transport, epoch=epoch, stage=m.stage,
+            uids=list(qual), codec=S.share_codec)
+        idx = list(qual).index(m.uid)
+        ex.upload_vector(idx, vec, actor=self.actor)
+        # reduce_one masks *missing* uploads out of the merge, so every
+        # input must exist before reducing — await them all (the lockstep
+        # phase barrier, reduced to exactly the keys this reducer reads)
+        for a in ex.assignments_for(idx):
+            for key in a.upload_keys:
+                self.queue.await_key(key)
+        m.run_reduce(ex, idx)
+
+
+class ValidatorActor(ActorProcess):
+    """Replays its tracked miner purely from store artifacts (snapshot,
+    activations, gradients, labels), mirroring
+    ``Validator.validate_epoch`` operation for operation, then publishes
+    the ``ScoreMsg`` watermark the driver's ledger waits on."""
+
+    def __init__(self, spec: ActorSpec):
+        super().__init__(spec)
+        self.opt = None
+
+    def setup(self) -> None:
+        super().setup()
+        tc = self.spec.train_cfg
+        # the same inner optimizer Miner builds: replayed updates must
+        # track the miner's own update rule exactly
+        self.opt = adamw(cosine_warmup(tc.lr, tc.warmup_steps, 10_000),
+                         beta1=tc.beta1, beta2=tc.beta2,
+                         weight_decay=tc.weight_decay)
+
+    def process_epoch(self, plan: dict) -> None:
+        S = self.spec.config
+        schema = self.transport.schema
+        epoch = plan["epoch"]
+        uid = plan["tracked"].get(self.spec.uid)
+        if uid is None:
+            return
+        stage = plan["stage_of"][uid]
+        role = self.model_spec.role(stage)
+        snap = self.queue.get(schema.snapshot(epoch, uid), self.actor)
+        params = jax.tree.map(jnp.asarray, snap["params"])
+        opt_state = jax.tree.map(jnp.asarray, snap["opt_state"])
+        inner_step = jnp.asarray(snap["inner_step"])
+
+        items = [(t, uids) for t, uids in plan["ticks"]
+                 if uids[stage] == uid]
+        if S.validate_max_items is not None:
+            items = items[:S.validate_max_items]
+
+        checked = passed = 0
+        validated = 0.0
+        min_cos = 1.0
+        for tick, uids in items:
+            sample_key = schema.tokens(epoch, tick) if stage == 0 \
+                else schema.activation(epoch, tick, stage - 1,
+                                       uids[stage - 1])
+            out_key = schema.activation(epoch, tick, stage, uid)
+            x_in = self.queue.get(sample_key, self.actor)
+            mine = sm.stage_forward(params, x_in, self.model_spec, role)
+            theirs = self.queue.get(out_key, self.actor)
+            cos = float(cosine_similarity(jnp.asarray(mine, jnp.float32),
+                                          jnp.asarray(theirs, jnp.float32)))
+            checked += 1
+            min_cos = min(min_cos, cos)
+            ok = cos >= COSINE_THRESHOLD
+            passed += int(ok)
+            # every scheduled pathway item ran a backward; replay it so
+            # later items line up (same as Validator.validate_epoch)
+            if role == "last":
+                labels = self.queue.get(schema.labels(epoch, tick),
+                                        self.actor)
+                _, g_params, _ = sm.last_stage_loss_and_grads(
+                    params, x_in, labels, self.model_spec)
+            else:
+                g_out = self.queue.get(schema.gradient_for(out_key),
+                                       self.actor)
+                if isinstance(g_out, dict) and g_out.get("codec"):
+                    g_out = jnp.reshape(compression.decode(g_out),
+                                        g_out["shape"])
+                g_params, _ = sm.stage_backward(params, x_in, g_out,
+                                                self.model_spec, role)
+            params, opt_state = self.opt.update(g_params, opt_state,
+                                                params, inner_step)
+            inner_step = inner_step + 1
+            if ok:
+                validated += 1.0
+            self.items_done += 1
+
+        self.transport.publish(
+            ScoreMsg(epoch, self.spec.uid, uid),
+            np.asarray([validated, checked, passed, min_cos], np.float32),
+            actor=self.actor)
+
+
+def _child_main(spec: ActorSpec, ready_queue: Any) -> None:
+    """Spawn entry point (module-level: the child pickles a reference)."""
+    cls = MinerActor if spec.kind == "miner" else ValidatorActor
+    cls(spec).run(ready_queue)
+
+
+class ActorSupervisor:
+    """Owns the actor process fleet: spawn, health pings, stop, and the
+    liveness check that turns a dead child into ``ActorDied``."""
+
+    def __init__(self):
+        self.procs: dict[str, Any] = {}
+        self.health: dict[str, tuple] = {}
+
+    def spawn(self, specs: list) -> None:
+        import multiprocessing as mp
+        import queue as queue_mod
+
+        ctx = mp.get_context("spawn")
+        ready = ctx.Queue()
+        for spec in specs:
+            name = f"{spec.kind}{spec.uid}"
+            proc = ctx.Process(target=_child_main, args=(spec, ready),
+                               daemon=True, name=name)
+            proc.start()
+            self.procs[name] = proc
+        pending = len(specs)
+        while pending:
+            try:
+                name, addr = ready.get(timeout=0.5)
+                self.health[name] = (str(addr[0]), int(addr[1]))
+                pending -= 1
+            except queue_mod.Empty:
+                for name, proc in self.procs.items():
+                    if not proc.is_alive():
+                        raise ActorDied(name, proc.exitcode)
+
+    def _health_request(self, name: str, op: str,
+                        timeout: float = 5.0) -> HeartbeatMsg:
+        addr = self.health[name]
+        with socket.create_connection(addr, timeout=timeout) as sock:
+            serde.send_frame(sock, serde.dumps({"op": op}))
+            frame = serde.recv_frame(sock)
+        if frame is None:
+            raise ConnectionError(f"health endpoint of {name!r} closed")
+        return serde.decode_message(frame)
+
+    def ping(self, name: str) -> HeartbeatMsg:
+        return self._health_request(name, "ping")
+
+    def stop(self, name: str) -> None:
+        try:
+            self._health_request(name, "stop", timeout=2.0)
+        except (OSError, ConnectionError):
+            pass                     # already gone: stopping is idempotent
+
+    def check(self) -> None:
+        """Raise ``ActorDied`` if any child exited — called from await
+        loops so a crash surfaces immediately instead of as a timeout."""
+        for name, proc in self.procs.items():
+            if not proc.is_alive():
+                raise ActorDied(name, proc.exitcode)
+
+    def join_all(self, timeout: float = 10.0) -> None:
+        deadline = time.monotonic() + timeout
+        for proc in self.procs.values():
+            proc.join(timeout=max(deadline - time.monotonic(), 0.1))
+
+    def terminate_all(self) -> None:
+        for proc in self.procs.values():
+            if proc.is_alive():
+                proc.terminate()
+        for proc in self.procs.values():
+            proc.join(timeout=2.0)
+
+    @property
+    def names(self) -> list[str]:
+        return sorted(self.procs)
+
+
+class ActorSwarm(Swarm):
+    """``Swarm`` whose miners and validators are concurrent processes.
+
+    The parent keeps the facade state (anchors, outer optimizer, ledger,
+    corpus, RNG — and placeholder ``Miner`` objects used only for uids /
+    stages / census), the ``EventDriver`` timeline, and the supervisor;
+    all forward/backward/replay compute runs in the children.  With no
+    ``store_address`` an in-process threaded ``StoreServer`` is started
+    and owned (real sockets, no extra spawn cost); pass an address to
+    point the whole swarm at an external store process instead.
+
+        swarm = Swarm.create(model_cfg, cfg, runtime="actors")
+        try:
+            stats = swarm.run(3)      # actors spawn on first epoch
+        finally:
+            swarm.shutdown()
+    """
+
+    def __init__(self, model_cfg: ModelConfig,
+                 config: Optional[SwarmConfig] = None, *,
+                 faults: Optional[FaultModel] = None,
+                 train_cfg: Optional[TrainConfig] = None,
+                 store_address: Optional[tuple] = None,
+                 driver: Optional[EventDriver] = None):
+        config = config or SwarmConfig()
+        faults = faults or FaultModel({}, seed=config.seed)
+        for uid, b in sorted(faults.behaviors.items()):
+            if not b.honest:
+                raise ValueError(
+                    f"runtime='actors' cannot inject payload-corrupting "
+                    f"faults (miner {uid}: tamper/free-ride): corruption "
+                    f"is driver-side in the lockstep timeline; use the "
+                    f"in-process runtime for adversarial scenarios")
+        self._own_server = None
+        if store_address is None:
+            from repro.runtime.store_server import StoreServer
+            self._own_server = StoreServer().start()
+            store_address = self._own_server.address
+        self.store_address = (str(store_address[0]), int(store_address[1]))
+        transport = SocketTransport(self.store_address,
+                                    schema=KeySchema(version=3))
+        super().__init__(model_cfg, config, faults=faults,
+                         transport=transport, train_cfg=train_cfg,
+                         driver=driver or EventDriver())
+        self.supervisor = ActorSupervisor()
+        self._started = False
+
+    # -- fleet lifecycle -------------------------------------------------
+
+    def start(self) -> "ActorSwarm":
+        if self._started:
+            return self
+        specs = [ActorSpec("miner", m.uid, m.stage, self.cfg, self.config,
+                           self.train_cfg, self.store_address,
+                           start_epoch=self.epoch)
+                 for m in self.miners.values()]
+        specs += [ActorSpec("validator", v.uid, -1, self.cfg, self.config,
+                            self.train_cfg, self.store_address,
+                            start_epoch=self.epoch)
+                  for v in self.validators]
+        self.supervisor.spawn(specs)
+        self._started = True
+        return self
+
+    def check_liveness(self) -> None:
+        """The EventDriver's await-loop hook: a dead child is an
+        ``ActorDied`` now, not a watermark timeout two minutes later."""
+        if self._started:
+            self.supervisor.check()
+
+    def run_epoch(self):
+        self.start()
+        return self.driver.run_epoch(self)
+
+    def shutdown(self, stop_server: bool = True) -> None:
+        """Stop the fleet (stop plan for the next epoch + health-endpoint
+        stop pings), join, terminate stragglers, then stop the owned
+        store server.  Idempotent."""
+        from repro.api.messages import EpochPlanMsg
+        if self._started:
+            try:
+                self.transport.publish(
+                    EpochPlanMsg(self.epoch),
+                    {"stop": True, "epoch": self.epoch},
+                    actor="orchestrator")
+            except (OSError, RuntimeError, ConnectionError):
+                pass                 # store already down: fall through
+            for name in self.supervisor.names:
+                self.supervisor.stop(name)
+            self.supervisor.join_all(timeout=10.0)
+            self.supervisor.terminate_all()
+            self._started = False
+        if self._own_server is not None and stop_server:
+            self._own_server.stop()
+            self._own_server = None
+        self.transport.close()
+
+    def __enter__(self) -> "ActorSwarm":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.shutdown()

@@ -47,6 +47,15 @@ from repro.runtime.state_store import StateStore, StoreKeyError
 class _Handler(socketserver.BaseRequestHandler):
     """One peer connection: frames in, frames out, until EOF."""
 
+    def setup(self) -> None:  # pragma: no cover - exercised via sockets
+        # register so StoreServer.stop() can close this socket and join
+        # this thread deterministically (daemon_threads=True means the
+        # stdlib's own _Threads bookkeeping skips us)
+        self.server.track_handler(threading.current_thread(), self.request)
+
+    def finish(self) -> None:  # pragma: no cover - exercised via sockets
+        self.server.untrack_handler(threading.current_thread())
+
     def handle(self) -> None:  # pragma: no cover - exercised via sockets
         self.request.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
         while True:
@@ -98,7 +107,24 @@ class StoreServer(socketserver.ThreadingTCPServer):
         super().__init__((host, port), _Handler)
         self.store = store or StateStore()
         self._lock = threading.Lock()
+        # blocking waits: handlers park here (lock released) until a put
+        # lands, so pull-based actors cost zero CPU while idle
+        self._cond = threading.Condition(self._lock)
+        self._stopping = False
         self._thread: Optional[threading.Thread] = None
+        self._handlers: dict = {}          # thread -> client socket
+        self._handlers_lock = threading.Lock()
+
+    # -- handler bookkeeping (deterministic shutdown) ---------------------
+
+    def track_handler(self, thread: threading.Thread,
+                      sock: socket.socket) -> None:
+        with self._handlers_lock:
+            self._handlers[thread] = sock
+
+    def untrack_handler(self, thread: threading.Thread) -> None:
+        with self._handlers_lock:
+            self._handlers.pop(thread, None)
 
     @property
     def address(self) -> tuple[str, int]:
@@ -114,8 +140,23 @@ class StoreServer(socketserver.ThreadingTCPServer):
                 entry = self.store.put(
                     req["key"], req["value"], actor=req.get("actor", "?"),
                     codec=req.get("codec"), meta=req.get("meta"))
+                self._cond.notify_all()      # wake any blocked "wait" ops
                 return {"ok": True, "digest": entry.digest,
                         "nbytes": entry.nbytes}
+            if op == "wait":
+                # block (lock released by the condition) until the key
+                # exists or the slice expires; the slice is capped so a
+                # stopping server never parks a handler for long — clients
+                # loop on {"exists": False}
+                import time as _time
+                deadline = _time.monotonic() + min(
+                    float(req.get("timeout", 0.5)), 5.0)
+                while not self.store.exists(req["key"]):
+                    remaining = deadline - _time.monotonic()
+                    if remaining <= 0 or self._stopping:
+                        return {"ok": True, "exists": False}
+                    self._cond.wait(remaining)
+                return {"ok": True, "exists": True}
             if op == "get":
                 entry = self.store.fetch_entry(req["key"],
                                                actor=req.get("actor", "?"))
@@ -133,6 +174,7 @@ class StoreServer(socketserver.ThreadingTCPServer):
                 return {"ok": True, "report": self.store.traffic_report()}
             if op == "reset":
                 self.store = StateStore()
+                self._cond.notify_all()      # waiters re-check the new store
                 return {"ok": True}
             if op == "ping":
                 import os
@@ -152,11 +194,36 @@ class StoreServer(socketserver.ThreadingTCPServer):
         return self
 
     def stop(self) -> None:
+        """Deterministic teardown: stop accepting, close every live client
+        socket (unblocks handler threads parked in ``recv``), join the
+        handlers, close the listening socket, join the serve thread.
+        After ``stop()`` returns no server thread or socket survives."""
+        self._stopping = True
+        with self._lock:
+            self._cond.notify_all()   # unpark blocked "wait" handlers now
         self.shutdown()
+        self.close_handlers()
         self.server_close()
         if self._thread is not None:
             self._thread.join(timeout=5.0)
             self._thread = None
+
+    def close_handlers(self, timeout: float = 5.0) -> None:
+        with self._handlers_lock:
+            handlers = list(self._handlers.items())
+        for thread, sock in handlers:
+            try:
+                sock.shutdown(socket.SHUT_RDWR)
+            except OSError:
+                pass   # peer already gone
+            try:
+                sock.close()
+            except OSError:
+                pass
+        me = threading.current_thread()
+        for thread, _ in handlers:
+            if thread is not me:   # shutdown op: a handler may run stop()
+                thread.join(timeout=timeout)
 
 
 # ---------------------------------------------------------------------------
@@ -175,6 +242,12 @@ def serve(host: str = "127.0.0.1", port: int = 0,
     try:
         server.serve_forever()
     finally:
+        # same deterministic teardown as stop(): the spawn child exits
+        # with no orphaned handler threads holding sockets open
+        server._stopping = True
+        with server._lock:
+            server._cond.notify_all()
+        server.close_handlers()
         server.server_close()
 
 

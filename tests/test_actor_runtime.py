@@ -1,0 +1,410 @@
+"""Concurrent actor runtime: WorkQueue semantics, the ActorProcess
+health/stop protocol, supervisor crash detection, ``wait_for`` blocking
+waits, the StoreServer start/stop lifecycle, and the ``ActorSwarm``
+facade guards.
+
+The cheap tests drive ``ActorProcess`` bodies in *threads* against a
+threaded ``StoreServer`` — same code paths as the spawned deployment
+minus the interpreter startup — so crash-before-publish, slow-poller
+and out-of-order completion are covered in milliseconds.  One
+slow-marked test spawns a real fleet and checks bit-exact parity with
+the in-process oracle (``examples/actor_swarm.py`` covers the dense AND
+sharded variants at 2 epochs; here one epoch, dense, plus a
+kill-a-child crash-surface check).
+"""
+import dataclasses
+import socket
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.api import KeySchema, SocketTransport, Swarm, SwarmConfig, serde
+from repro.api.messages import (
+    EpochPlanMsg, HeartbeatMsg, SnapshotMsg, TickLossMsg,
+)
+from repro.api.transport import InProcessTransport
+from repro.configs import get, smoke_variant
+from repro.configs.base import TrainConfig
+from repro.runtime.actor import (
+    ActorDied, ActorProcess, ActorSpec, ActorStopped, ActorSupervisor,
+    ActorSwarm, WorkQueue,
+)
+from repro.runtime.network import FaultModel, MinerBehavior
+from repro.runtime.store_server import StoreServer
+
+
+def _mcfg(n_layers=1):
+    return dataclasses.replace(smoke_variant(get("llama3.2-1b")).model,
+                               n_layers=n_layers)
+
+
+@pytest.fixture(scope="module")
+def server():
+    srv = StoreServer().start()
+    yield srv
+    srv.stop()
+
+
+@pytest.fixture()
+def transport(server):
+    tp = SocketTransport(server.address, schema=KeySchema(version=3))
+    tp.reset_store()
+    yield tp
+    tp.close()
+
+
+# ---------------------------------------------------------------------------
+# WorkQueue: pull-based work discovery
+# ---------------------------------------------------------------------------
+
+
+def test_workqueue_returns_existing_key_immediately():
+    tp = InProcessTransport()
+    tp.put("job/ready", 7)
+    q = WorkQueue(tp, timeout=1.0)
+    assert q.get("job/ready") == 7
+
+
+def test_workqueue_slow_poller_sees_late_publish():
+    """The publisher lands *after* the consumer starts waiting."""
+    tp = InProcessTransport()
+    q = WorkQueue(tp, timeout=5.0)
+    threading.Timer(0.1, lambda: tp.put("job/late", "done")).start()
+    t0 = time.monotonic()
+    assert q.get("job/late") == "done"
+    assert time.monotonic() - t0 < 4.0
+
+
+def test_workqueue_out_of_order_completion():
+    """Results land in reverse order; awaiting in tick order still
+    collects every one (the EventDriver's watermark pattern)."""
+    tp = InProcessTransport()
+    q = WorkQueue(tp, timeout=5.0)
+    keys = [f"job/t{i}" for i in range(4)]
+
+    def publish_reversed():
+        for i, key in enumerate(reversed(keys)):
+            time.sleep(0.02)
+            tp.put(key, key)
+    threading.Thread(target=publish_reversed, daemon=True).start()
+    assert [q.get(k) for k in keys] == keys
+
+
+def test_workqueue_timeout_is_a_timeout_error():
+    q = WorkQueue(InProcessTransport(), timeout=0.05)
+    with pytest.raises(TimeoutError, match="job/never"):
+        q.await_key("job/never")
+
+
+def test_workqueue_stop_event_raises_actor_stopped():
+    stop = threading.Event()
+    q = WorkQueue(InProcessTransport(), timeout=30.0, stop_event=stop)
+    threading.Timer(0.05, stop.set).start()
+    t0 = time.monotonic()
+    with pytest.raises(ActorStopped):
+        q.await_key("job/never")
+    assert time.monotonic() - t0 < 5.0
+
+
+def test_workqueue_crash_before_publish_surfaces_actor_died():
+    """A peer dies before publishing the awaited key: the liveness hook
+    turns the would-be 30s timeout into an immediate ``ActorDied``."""
+    calls = {"n": 0}
+
+    def liveness():
+        calls["n"] += 1
+        if calls["n"] >= 3:
+            raise ActorDied("miner7", 1)
+
+    q = WorkQueue(InProcessTransport(), timeout=30.0,
+                  liveness=liveness, liveness_every=1)
+    t0 = time.monotonic()
+    with pytest.raises(ActorDied, match="miner7"):
+        q.await_key("activations/never")
+    assert time.monotonic() - t0 < 5.0
+
+
+# ---------------------------------------------------------------------------
+# SocketTransport.wait_for: server-side blocking wait
+# ---------------------------------------------------------------------------
+
+
+def test_wait_for_times_out_false(transport):
+    t0 = time.monotonic()
+    assert transport.wait_for("control/never", timeout=0.2) is False
+    assert 0.1 <= time.monotonic() - t0 < 3.0
+
+
+def test_wait_for_woken_by_another_clients_put(server, transport):
+    other = SocketTransport(server.address, schema=KeySchema(version=3))
+    try:
+        threading.Timer(
+            0.15, lambda: other.put("wake/key", 42, actor="other")).start()
+        t0 = time.monotonic()
+        assert transport.wait_for("wake/key", timeout=5.0) is True
+        # woken by notify, not by timeout expiry
+        assert time.monotonic() - t0 < 4.0
+        assert transport.get("wake/key") == 42
+    finally:
+        other.close()
+
+
+def test_workqueue_uses_wait_for_path_on_socket_transport(server, transport):
+    other = SocketTransport(server.address, schema=KeySchema(version=3))
+    try:
+        q = WorkQueue(transport, timeout=10.0)
+        threading.Timer(
+            0.1, lambda: other.put("wake/late", "v", actor="other")).start()
+        assert q.get("wake/late") == "v"
+    finally:
+        other.close()
+
+
+# ---------------------------------------------------------------------------
+# ActorProcess: health endpoint + epoch loop (threaded, no spawn cost)
+# ---------------------------------------------------------------------------
+
+
+class _StubWorkActor(ActorProcess):
+    """ActorProcess body with a recording ``process_epoch`` — exercises
+    the real setup/health/plan-loop/shutdown machinery in a thread."""
+
+    def __init__(self, spec):
+        super().__init__(spec)
+        self.plans = []
+
+    def process_epoch(self, plan):
+        self.plans.append(plan)
+
+
+def _spec(server, kind="miner", uid=0):
+    return ActorSpec(kind, uid, 0, _mcfg(), SwarmConfig(n_stages=1),
+                     TrainConfig(), server.address)
+
+
+def _start_stub(server):
+    import queue as queue_mod
+    actor = _StubWorkActor(_spec(server))
+    ready = queue_mod.Queue()
+    thread = threading.Thread(target=actor.run, args=(ready,), daemon=True)
+    thread.start()
+    name, addr = ready.get(timeout=10.0)
+    return actor, thread, name, addr
+
+
+def test_health_ping_answers_heartbeat_and_stop_ends_loop(transport, server):
+    actor, thread, name, addr = _start_stub(server)
+    sup = ActorSupervisor()
+    sup.health[name] = addr
+    try:
+        hb = sup.ping(name)
+        assert isinstance(hb, HeartbeatMsg)
+        assert hb.actor == "miner0"
+        assert hb.epoch == 0 and hb.items_done == 0
+    finally:
+        sup.stop(name)
+        thread.join(timeout=10.0)
+    assert not thread.is_alive()
+    assert actor.state == "stopped"
+    # stopping again is idempotent even though the endpoint is gone
+    sup.stop(name)
+
+
+def test_stop_plan_ends_epoch_loop_without_processing(transport, server):
+    transport.publish(EpochPlanMsg(0), {"stop": True, "epoch": 0},
+                      actor="orchestrator")
+    actor, thread, name, addr = _start_stub(server)
+    thread.join(timeout=10.0)
+    assert not thread.is_alive()
+    assert actor.plans == []
+
+
+def test_epoch_loop_processes_plans_in_order(transport, server):
+    actor, thread, name, addr = _start_stub(server)
+    try:
+        transport.publish(EpochPlanMsg(0), {"stop": False, "epoch": 0},
+                          actor="orchestrator")
+        transport.publish(EpochPlanMsg(1), {"stop": True, "epoch": 1},
+                          actor="orchestrator")
+        thread.join(timeout=15.0)
+        assert not thread.is_alive()
+        assert [p["epoch"] for p in actor.plans] == [0]
+        assert actor.epoch == 1
+    finally:
+        sup = ActorSupervisor()
+        sup.health[name] = addr
+        sup.stop(name)
+
+
+# ---------------------------------------------------------------------------
+# supervisor crash detection
+# ---------------------------------------------------------------------------
+
+
+class _DeadProc:
+    exitcode = -9
+
+    @staticmethod
+    def is_alive():
+        return False
+
+
+def test_supervisor_check_turns_dead_child_into_actor_died():
+    sup = ActorSupervisor()
+    sup.procs["miner3"] = _DeadProc()
+    with pytest.raises(ActorDied, match="miner3") as exc:
+        sup.check()
+    assert exc.value.exitcode == -9
+
+
+# ---------------------------------------------------------------------------
+# serde + key coverage for the control-plane envelopes
+# ---------------------------------------------------------------------------
+
+
+def test_new_control_messages_are_registered():
+    names = serde.registered_message_names()
+    for name in ("EpochPlanMsg", "HeartbeatMsg", "SnapshotMsg",
+                 "TickLossMsg"):
+        assert name in names
+
+
+def test_heartbeat_envelope_roundtrips():
+    hb = HeartbeatMsg("miner0", pid=123, epoch=4, items_done=7,
+                      state="working")
+    out = serde.decode_message(serde.encode_message(hb))
+    assert out == hb and out.pid == 123 and out.state == "working"
+
+
+def test_control_keys_parse_under_v3():
+    schema = KeySchema(version=3)
+    kinds = {}
+    for msg in (EpochPlanMsg(2), SnapshotMsg(2, 5), TickLossMsg(2, 9),
+                HeartbeatMsg("miner0")):
+        key = msg.key(schema)
+        assert key.startswith("control/")
+        kinds[schema.parse(key).kind] = key
+    assert set(kinds) == {"plan", "snapshot", "tick_loss", "heartbeat"}
+
+
+# ---------------------------------------------------------------------------
+# StoreServer lifecycle: 10 start/stop cycles leave nothing behind
+# ---------------------------------------------------------------------------
+
+
+def test_store_server_ten_start_stop_cycles_leave_no_leaks():
+    before = {t for t in threading.enumerate()}
+    addresses = []
+    for i in range(10):
+        srv = StoreServer().start()
+        tp = SocketTransport(srv.address)
+        tp.put(f"cycle/{i}", i)
+        assert tp.get(f"cycle/{i}") == i
+        tp.close()
+        srv.stop()
+        addresses.append(srv.address)
+    # no server or handler threads survive their server
+    leftover = [t for t in threading.enumerate()
+                if t not in before and t.is_alive()
+                and "store-server" in t.name]
+    assert leftover == []
+    # every stopped address refuses new connections
+    with pytest.raises(OSError):
+        socket.create_connection(addresses[-1], timeout=0.5)
+
+
+def test_stop_unparks_blocked_waiters():
+    """A shutdown must not wait out a parked ``wait`` handler: the stop
+    flag + notify returns the waiter promptly as not-found."""
+    srv = StoreServer().start()
+    tp = SocketTransport(srv.address)
+    result = {}
+
+    def waiter():
+        try:
+            result["exists"] = tp.wait_for("never/published", timeout=4.0)
+        except (OSError, ConnectionError) as exc:   # torn connection is
+            result["error"] = exc                   # also a prompt return
+    thread = threading.Thread(target=waiter, daemon=True)
+    thread.start()
+    time.sleep(0.2)          # let the wait park server-side
+    t0 = time.monotonic()
+    srv.stop()
+    thread.join(timeout=3.0)
+    assert not thread.is_alive()
+    assert time.monotonic() - t0 < 3.0
+    tp.close()
+
+
+# ---------------------------------------------------------------------------
+# ActorSwarm facade guards (no fleet spawned)
+# ---------------------------------------------------------------------------
+
+
+def test_create_rejects_unknown_runtime():
+    with pytest.raises(ValueError, match="runtime"):
+        Swarm.create(_mcfg(), SwarmConfig(), runtime="fibers")
+
+
+def test_create_rejects_transport_override_for_actors():
+    with pytest.raises(ValueError):
+        Swarm.create(_mcfg(), SwarmConfig(), runtime="actors",
+                     transport=InProcessTransport())
+
+
+def test_create_rejects_store_address_for_inprocess():
+    with pytest.raises(ValueError):
+        Swarm.create(_mcfg(), SwarmConfig(),
+                     store_address=("127.0.0.1", 1))
+
+
+def test_actor_swarm_rejects_payload_corrupting_faults():
+    faults = FaultModel({1: MinerBehavior(tamper_activations=0.5)})
+    with pytest.raises(ValueError, match="tamper"):
+        ActorSwarm(_mcfg(), SwarmConfig(), faults=faults)
+
+
+def test_actor_swarm_accepts_schedule_only_faults():
+    faults = FaultModel({1: MinerBehavior(drop_prob=0.5,
+                                          straggle_factor=2.0)})
+    swarm = ActorSwarm(_mcfg(n_layers=2), SwarmConfig(n_stages=2),
+                       faults=faults)
+    try:
+        assert swarm.supervisor.names == []     # nothing spawned yet
+    finally:
+        swarm.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# spawned fleet: parity with the in-process oracle + crash surface
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_actor_fleet_matches_in_process_and_surfaces_crashes():
+    cfg = SwarmConfig(seed=3, n_stages=2, miners_per_stage=2,
+                      inner_steps=2, b_min=1, batch_size=2, seq_len=16,
+                      validators=1)
+    mcfg = _mcfg(n_layers=2)
+
+    swarm = Swarm.create(mcfg, cfg, runtime="actors")
+    try:
+        swarm.start()
+        stats = swarm.run(1)
+        # kill one child: the driver-side liveness hook must notice
+        victim = swarm.supervisor.names[0]
+        swarm.supervisor.procs[victim].terminate()
+        swarm.supervisor.procs[victim].join(timeout=5.0)
+        with pytest.raises(ActorDied, match=victim):
+            swarm.check_liveness()
+    finally:
+        swarm.shutdown()
+
+    local = Swarm.create(mcfg, cfg)
+    ref = local.run(1)
+    assert [s.mean_loss for s in stats] == [s.mean_loss for s in ref]
+    assert [s.merged_stages for s in stats] == [s.merged_stages for s in ref]
+    assert [[(r.miner_uid, r.score) for r in s.validation] for s in stats] \
+        == [[(r.miner_uid, r.score) for r in s.validation] for s in ref]

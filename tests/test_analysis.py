@@ -16,8 +16,9 @@ import pytest
 
 from conftest import SRC, run_py
 from repro.analysis import (
-    ALL_RULES, KeyLiteralRule, ModuleSource, NoPickleEvalRule,
-    ProtocolConformanceRule, SerdeCoverageRule, SpawnSafetyRule, run_rules,
+    ALL_RULES, ActorRuntimeRule, KeyLiteralRule, ModuleSource,
+    NoPickleEvalRule, ProtocolConformanceRule, SerdeCoverageRule,
+    SpawnSafetyRule, run_rules,
 )
 from repro.analysis.__main__ import main as lint_main
 
@@ -274,6 +275,91 @@ def test_spawn_safety_allows_lazy_and_out_of_closure():
         ''',
     }), [SpawnSafetyRule])
     assert found == []
+
+
+# ---------------------------------------------------------------------------
+# actor-runtime
+# ---------------------------------------------------------------------------
+
+_ACTOR_FIXTURE = {
+    "src/repro/__init__.py": "",
+    "src/repro/runtime/__init__.py": "",
+    "src/repro/runtime/store_server.py": "",
+    "src/repro/runtime/actor.py": '''
+        class ActorProcess:
+            def run(self):
+                pass
+
+        class MinerActor(ActorProcess):
+            pass
+    ''',
+}
+
+
+def test_actor_runtime_flags_actor_without_process_base():
+    found = lint(dict(_ACTOR_FIXTURE, **{
+        "src/repro/rogue.py": '''
+            class RogueActor:
+                def setup(self):
+                    pass
+        ''',
+    }), [ActorRuntimeRule])
+    assert len(found) == 1
+    assert "RogueActor" in found[0].message
+    assert "ActorProcess" in found[0].message
+
+
+def test_actor_runtime_flags_actor_outside_spawn_closure():
+    found = lint(dict(_ACTOR_FIXTURE, **{
+        "src/repro/outpost.py": '''
+            from repro.runtime.actor import ActorProcess
+
+            class OutpostActor(ActorProcess):
+                pass
+        ''',
+    }), [ActorRuntimeRule])
+    assert len(found) == 1
+    assert "OutpostActor" in found[0].message
+    assert "spawn import closure" in found[0].message
+    # the in-closure subclass (MinerActor) produced no finding
+    assert found[0].path.endswith("outpost.py")
+
+
+def test_actor_runtime_flags_unregistered_msg_reference():
+    found = lint(dict(_ACTOR_FIXTURE, **{
+        "src/repro/api/serde.py": '''
+            def _register(cls, tag):
+                pass
+
+            class HeartbeatMsg:
+                pass
+
+            _register(HeartbeatMsg, 7)
+        ''',
+        "src/repro/runtime/actor.py": '''
+            class ActorProcess:
+                def run(self):
+                    pass
+
+            class MinerActor(ActorProcess):
+                def go(self):
+                    return HeartbeatMsg, PhantomMsg
+        ''',
+    }), [ActorRuntimeRule])
+    assert len(found) == 1
+    assert "PhantomMsg" in found[0].message
+
+
+def test_actor_runtime_skips_unknown_bases():
+    found = lint(dict(_ACTOR_FIXTURE, **{
+        "src/repro/vendored.py": '''
+            import thirdparty
+
+            class VendoredActor(thirdparty.Base):
+                pass
+        ''',
+    }), [ActorRuntimeRule])
+    assert found == []       # out-of-scope base: cannot judge statically
 
 
 # ---------------------------------------------------------------------------
