@@ -1,0 +1,112 @@
+"""Chaos scenario matrix -> ``BENCH_chaos.json`` (tracked across PRs).
+
+Runs the ``repro.scenarios`` catalog — deterministic fault-injection
+experiments over the concurrent actor runtime (docs/CHAOS.md) — and
+records one row per scenario: convergence under the fault mix, recovery
+latency after kills/failovers, and how many ticks the EventDriver
+re-planned onto survivors.  ``validate_artifact`` is the schema gate
+``benchmarks/run.py --quick`` enforces: every row must have converged,
+and the recovery/replan accounting must be present and sane.
+
+``BENCH_QUICK=1`` runs a two-scenario subset (one kill-and-resume, one
+store failover — the two recovery paths) against a scratch artifact.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import tempfile
+import time
+
+from benchmarks.common import emit
+from repro.configs import get, smoke_variant
+from repro.scenarios import SCENARIOS, run_scenario
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+ARTIFACT = os.path.join(ROOT, "BENCH_chaos.json")
+QUICK_ARTIFACT = os.path.join(tempfile.gettempdir(),
+                              "BENCH_chaos.quick.json")
+
+QUICK_SCENARIOS = ("kill-n-miners", "store-failover")
+
+SCHEMA_KEYS = {"schema", "scenarios", "derived"}
+ROW_KEYS = {"scenario", "fault_seed", "epochs", "converged", "first_loss",
+            "final_loss", "recovery_seconds", "replanned_ticks", "kills",
+            "notes", "wall_seconds"}
+
+
+def artifact_path() -> str:
+    return QUICK_ARTIFACT if os.environ.get("BENCH_QUICK", "0") == "1" \
+        else ARTIFACT
+
+
+def _mcfg():
+    return dataclasses.replace(smoke_variant(get("llama3.2-1b")).model,
+                               n_layers=2)
+
+
+def run_matrix(names) -> list[dict]:
+    rows = []
+    mcfg = _mcfg()
+    for name in names:
+        scenario = SCENARIOS[name]()
+        t0 = time.perf_counter()
+        with tempfile.TemporaryDirectory() as snap_root:
+            result = run_scenario(scenario, mcfg, snapshot_root=snap_root)
+        row = result.row()
+        row["wall_seconds"] = round(time.perf_counter() - t0, 2)
+        rows.append(row)
+        emit(f"chaos/{name}", 0.0,
+             f"converged={row['converged']};kills={row['kills']};"
+             f"replanned={row['replanned_ticks']};"
+             f"recovery_s={row['recovery_seconds']:.2f}")
+    return rows
+
+
+def write_artifact(rows: list[dict]) -> str:
+    art = {
+        "schema": "bench_chaos/v1",
+        "scenarios": rows,
+        "derived": {
+            "all_converged": all(r["converged"] for r in rows),
+            "total_kills": sum(r["kills"] for r in rows),
+            "total_replanned_ticks": sum(r["replanned_ticks"]
+                                         for r in rows),
+        },
+    }
+    path = artifact_path()
+    with open(path, "w") as f:
+        json.dump(art, f, indent=1, sort_keys=True)
+    validate_artifact(path)
+    return path
+
+
+def validate_artifact(path: str | None = None) -> dict:
+    path = path or artifact_path()
+    with open(path) as f:
+        art = json.load(f)
+    assert art["schema"] == "bench_chaos/v1", art["schema"]
+    assert set(art) == SCHEMA_KEYS, set(art) ^ SCHEMA_KEYS
+    assert art["scenarios"], "no scenario rows"
+    for row in art["scenarios"]:
+        assert set(row) == ROW_KEYS, set(row) ^ ROW_KEYS
+        assert row["converged"] is True, \
+            f"{row['scenario']} did not converge under its fault mix: {row}"
+        assert row["epochs"] >= 1, row
+        assert row["recovery_seconds"] >= 0.0, row
+        assert row["replanned_ticks"] >= 0, row
+        assert isinstance(row["fault_seed"], int), row
+    assert art["derived"]["all_converged"], art["derived"]
+    return art
+
+
+def run() -> None:
+    quick = os.environ.get("BENCH_QUICK", "0") == "1"
+    names = QUICK_SCENARIOS if quick else tuple(SCENARIOS)
+    rows = run_matrix(names)
+    write_artifact(rows)
+
+
+if __name__ == "__main__":
+    run()

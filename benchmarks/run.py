@@ -14,6 +14,8 @@ PRs): ``bench_pipeline`` writes ``BENCH_pipeline.json`` and
   kernels bench_kernels           — VMEM working sets + oracle throughput
   §4     bench_pipeline           — schedules x wire codecs -> BENCH_pipeline.json
   §Roofline bench_roofline        — dry-run roofline table
+  chaos  bench_chaos              — fault-injection scenario matrix ->
+                                    BENCH_chaos.json (docs/CHAOS.md)
 
 Usage:
   python -m benchmarks.run [module-substring]
@@ -45,6 +47,7 @@ MODULES = [
     "benchmarks.bench_kernels",
     "benchmarks.bench_pipeline",
     "benchmarks.bench_roofline",
+    "benchmarks.bench_chaos",
 ]
 
 
@@ -65,7 +68,8 @@ def main() -> None:
                   f"ignoring filter {only!r}", flush=True)
             only = None
         os.environ["BENCH_QUICK"] = "1"
-        modules = ["benchmarks.bench_pipeline", "benchmarks.bench_butterfly"]
+        modules = ["benchmarks.bench_pipeline", "benchmarks.bench_butterfly",
+                   "benchmarks.bench_chaos"]
     failures = 0
     for mod_name in modules:
         if only and only not in mod_name:
@@ -90,6 +94,13 @@ def main() -> None:
         print(f"# BENCH_butterfly.json schema OK "
               f"({len(art['benchmarks'])} records, "
               f"rel_err={art['derived']['max_rel_err']})", flush=True)
+        from benchmarks.bench_chaos import (
+            validate_artifact as validate_chaos)
+        art = validate_chaos()
+        print(f"# BENCH_chaos.json schema OK "
+              f"({len(art['scenarios'])} scenarios, "
+              f"all_converged={art['derived']['all_converged']})",
+              flush=True)
     if failures:
         raise SystemExit(f"{failures} benchmark modules failed")
 

@@ -21,10 +21,14 @@
 # same seed), the concurrent actor-runtime gate (examples/actor_swarm.py:
 # every miner/validator its own spawned process over the EventDriver,
 # asserts dense AND sharded trajectories bit-match the in-process swarm
-# at the same seed), a short 1F1B+int8 pipelined training run
+# at the same seed), the chaos shard (examples/chaos_swarm.py: the
+# kill-and-resume and store-failover scenarios from repro.scenarios on a
+# real spawned fleet — docs/CHAOS.md), a short 1F1B+int8 pipelined
+# training run
 # (launch/train.py --strategy pipeline), and `benchmarks/run.py --quick`
-# (reduced pipeline + butterfly benches that hard-validate the
-# BENCH_pipeline.json / BENCH_butterfly.json schemas).
+# (reduced pipeline + butterfly + chaos-matrix benches that
+# hard-validate the BENCH_pipeline.json / BENCH_butterfly.json /
+# BENCH_chaos.json schemas).
 # This is the documented check to run before every commit; the full suite
 # is `python -m pytest -q`.
 set -euo pipefail
@@ -66,6 +70,11 @@ python examples/multiprocess_swarm.py
 echo
 echo "== smoke: concurrent actor runtime (spawned miner/validator fleet) =="
 ACTOR_SWARM_EPOCHS="${ACTOR_SWARM_EPOCHS:-2}" python examples/actor_swarm.py
+
+echo
+echo "== smoke: chaos shard (kill-and-resume + store failover) =="
+CHAOS_SCENARIOS="${CHAOS_SCENARIOS:-kill-n-miners,store-failover}" \
+python examples/chaos_swarm.py
 
 echo
 echo "== smoke: 1F1B pipeline quickstart (2 stages, int8 wire) =="

@@ -22,6 +22,7 @@ from repro.analysis.rules_actor import ActorRuntimeRule
 from repro.analysis.rules_keys import KeyLiteralRule
 from repro.analysis.rules_protocol import ProtocolConformanceRule
 from repro.analysis.rules_safety import NoPickleEvalRule, SpawnSafetyRule
+from repro.analysis.rules_scenario import ScenarioConformanceRule
 from repro.analysis.rules_serde import SerdeCoverageRule
 
 ALL_RULES = (
@@ -31,6 +32,7 @@ ALL_RULES = (
     ActorRuntimeRule,
     NoPickleEvalRule,
     SpawnSafetyRule,
+    ScenarioConformanceRule,
 )
 
 __all__ = [
@@ -43,6 +45,7 @@ __all__ = [
     "Project",
     "ProtocolConformanceRule",
     "Rule",
+    "ScenarioConformanceRule",
     "SerdeCoverageRule",
     "SpawnSafetyRule",
     "load_paths",

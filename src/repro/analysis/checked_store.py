@@ -64,9 +64,9 @@ class StoreSanitizer:
     active, every ``StateStore`` in the process is checked."""
 
     def __init__(self, schema: Optional["_keys.KeySchema"] = None):
-        # v3 parses every v1/v2 key plus the actor runtime's control
+        # v4 parses every v1/v2/v3 key plus the chaos plan-revision
         # plane, so it is the right default whatever the producers mint
-        self.schema = schema or _keys.KeySchema(version=3)
+        self.schema = schema or _keys.KeySchema(version=4)
         self.records: list[Violation] = []
         self._originals = None
 

@@ -1,0 +1,89 @@
+"""swarmlint rule: chaos scenarios must be deterministic and schema-clean.
+
+``repro/scenarios/`` is the fault-injection catalog (docs/CHAOS.md); its
+determinism contract — same seed => same fault schedule => same
+trajectory — only holds when every ``Scenario(...)`` pins its
+``fault_seed`` explicitly at the construction site.  A scenario built
+without one silently inherits whatever default the builder happens to
+carry, and two "identical" bench runs stop being comparable.  The rule
+also keeps the catalog off raw store-key literals: scenarios observe the
+swarm through ``KeySchema``-minted watermarks (a hand-spelled key would
+bypass the schema version gate and break silently on the next key-plane
+bump).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, Iterator
+
+from repro.analysis.framework import Finding, ModuleSource, Rule
+
+SCENARIO_PACKAGE = "repro/scenarios/"
+
+# this file necessarily spells the markers out, like rules_keys.py
+# swarmlint: disable-file=key-literal
+
+# the store namespaces a scenario might be tempted to spell out (the
+# same markers as rules_keys.KEY_SHAPES)
+KEY_MARKERS = ("activations/", "weights/", "scores/", "control/",
+               "shard{")
+
+
+def _static_text(node: ast.AST) -> Iterator[str]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        yield node.value
+    elif isinstance(node, ast.JoinedStr):
+        parts = []
+        for v in node.values:
+            if isinstance(v, ast.Constant) and isinstance(v.value, str):
+                parts.append(v.value)
+            else:
+                parts.append("{}")
+        yield "".join(parts)
+
+
+class ScenarioConformanceRule(Rule):
+    name = "scenario-conformance"
+    description = ("Scenario(...) constructions in repro/scenarios/ must "
+                   "pin fault_seed and mint store keys via KeySchema")
+
+    def check_module(self, module: ModuleSource) -> Iterable[Finding]:
+        if SCENARIO_PACKAGE not in module.rel:
+            return
+        in_joined = {
+            id(v) for n in ast.walk(module.tree)
+            if isinstance(n, ast.JoinedStr) for v in n.values}
+        for node in ast.walk(module.tree):
+            if isinstance(node, ast.Call):
+                yield from self._check_construction(module, node)
+                continue
+            if not isinstance(node, (ast.Constant, ast.JoinedStr)):
+                continue
+            if id(node) in in_joined or module.is_docstring(node):
+                continue
+            for text in _static_text(node):
+                hit = next((s for s in KEY_MARKERS if s in text), None)
+                if hit:
+                    yield Finding(
+                        self.name, module.rel, node.lineno,
+                        f"key-shaped literal {text!r} in a scenario "
+                        f"module: observe the swarm via KeySchema-minted "
+                        f"watermarks")
+                    break
+
+    def _check_construction(self, module: ModuleSource,
+                            node: ast.Call) -> Iterable[Finding]:
+        fn = node.func
+        name = fn.id if isinstance(fn, ast.Name) else (
+            fn.attr if isinstance(fn, ast.Attribute) else None)
+        if name != "Scenario":
+            return
+        kwargs = {kw.arg for kw in node.keywords}
+        # a positional 2nd argument also counts (name, fault_seed, ...)
+        if "fault_seed" in kwargs or len(node.args) >= 2:
+            return
+        yield Finding(
+            self.name, module.rel, node.lineno,
+            "Scenario(...) without an explicit fault_seed: the "
+            "determinism contract (docs/CHAOS.md) needs every scenario "
+            "to pin its fault schedule seed at the construction site")

@@ -102,3 +102,6 @@ class EpochStats:
     emissions: dict[int, float]
     # store-side reduce audits (sharded sync only; ReduceAuditPhase)
     reduce_audits: list = dataclasses.field(default_factory=list)
+    # ticks re-planned onto survivors after an actor death (EventDriver
+    # graceful degradation; always 0 on the lockstep timeline)
+    replanned_ticks: int = 0

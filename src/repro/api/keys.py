@@ -46,6 +46,19 @@ lockstep driver they never transit it):
                                     heartbeat channel is the actor's TCP
                                     health endpoint; see runtime/actor.py)
 
+Version 4 — chaos/recovery plane.  One addition: plan *revisions*.  When
+the event driver re-plans a dead miner's remaining ticks onto survivors
+(graceful degradation, docs/CHAOS.md) it cannot rewrite the published
+plan in place — the store is publish-once for control decisions just as
+for weights (the CheckedStore sanitizer enforces it) and surviving
+actors may be mid-read.  Instead each revision is appended under its own
+key; actors poll for the next revision index while awaiting work:
+
+  control/ep{E}/plan/r{R}           revision R (R >= 1) of epoch E's plan
+
+The pattern cannot collide with v3: the base plan key is anchored
+(``plan$``) and revisions add a ``/r{R}`` segment.
+
 Versioning: a ``KeySchema`` is constructed at a pinned ``version``; bumping
 the layout means adding a new version branch here (and a migration note in
 docs/API.md) — never editing v1 in place, because validator replay and the
@@ -60,7 +73,7 @@ import dataclasses
 import re
 
 SCHEMA_VERSION = 1
-SUPPORTED_VERSIONS = (1, 2, 3)
+SUPPORTED_VERSIONS = (1, 2, 3, 4)
 
 # namespaces (the first path segment; StateStore accounts bytes per namespace)
 NS_ACTIVATIONS = "activations"
@@ -107,6 +120,12 @@ _V3_PATTERNS = (
     ("snapshot", re.compile(
         r"^control/ep(?P<epoch>\d+)/snapshot/m(?P<uid>\d+)$")),
     ("heartbeat", re.compile(r"^control/hb/(?P<actor>[A-Za-z0-9_.-]+)$")),
+)
+
+# v4 additions: plan revisions (graceful degradation after ActorDied)
+_V4_PATTERNS = (
+    ("plan_rev", re.compile(
+        r"^control/ep(?P<epoch>\d+)/plan/r(?P<rev>\d+)$")),
 )
 
 
@@ -199,6 +218,22 @@ class KeySchema:
         self._require_v3("heartbeat")
         return f"control/hb/{actor}"
 
+    # -- recovery plane (version 4, chaos / graceful degradation) --------
+
+    def _require_v4(self, kind: str) -> None:
+        if self.version < 4:
+            raise ValueError(
+                f"{kind} keys need KeySchema version >= 4 "
+                f"(this schema is v{self.version}); fault-tolerant actor "
+                f"runs construct their transport with KeySchema(version=4)")
+
+    def plan_rev(self, epoch: int, rev: int) -> str:
+        """Revision ``rev`` (>= 1) of epoch's plan — published by the
+        driver after re-planning a dead miner's ticks onto survivors."""
+        self._require_v4("plan_rev")
+        assert rev >= 1, "plan revisions start at 1 (r0 is the base plan)"
+        return f"control/ep{epoch}/plan/r{rev}"
+
     # -- score plane -----------------------------------------------------
 
     def score(self, epoch: int, validator_uid: int, miner_uid: int) -> str:
@@ -242,6 +277,8 @@ class KeySchema:
             patterns = _V2_PATTERNS + patterns
         if self.version >= 3:
             patterns = _V3_PATTERNS + patterns
+        if self.version >= 4:
+            patterns = _V4_PATTERNS + patterns
         for kind, pat in patterns:
             m = pat.match(key)
             if m:

@@ -86,6 +86,9 @@ class EpochState:
     merged_stages: int = 0
     agreement: dict[int, np.ndarray] = dataclasses.field(default_factory=dict)
     reduce_audits: list = dataclasses.field(default_factory=list)
+    # graceful degradation (EventDriver): ticks re-assigned to survivors
+    # after an ActorDied, folded into EpochStats.replanned
+    replanned: int = 0
 
 
 @runtime_checkable
@@ -419,6 +422,62 @@ def sharded_phases() -> list[Phase]:
             ReduceAuditPhase()]
 
 
+def revise_plan(plan: dict, done_ticks: set, dead_uid: int,
+                survivor: Optional[int], gradient_missing) -> tuple:
+    """Pure re-planning after a miner death — the graceful-degradation
+    core, kept free of transports/processes so it unit-tests in isolation.
+
+    For every tick the dead miner participates in:
+
+      * loss already published (``done_ticks``) — the tick stands as
+        trained; if the dead miner's *backward* hand-off never landed
+        (``gradient_missing``), the tick is **orphaned**: miners blocked
+        on its broken gradient chain abandon that backward;
+      * loss pending — the dead slot is substituted with ``survivor``
+        (the survivor redoes the stage forward from the still-stored
+        upstream activation), or the tick is **dropped** when the stage
+        has no survivor (counts as stalled, like an all-offline layer).
+
+    ``qualified`` is **fixed at plan time** — a revision never rewrites
+    the merge layout, because actors may already be mid-reduce against
+    it (different actors folding different layouts would shard against
+    different butterfly plans).  The driver masks dead participants at
+    reduce time instead: dense averages the uploads that arrived,
+    sharded fails over to the surviving redundant copy.  ``tracked`` is
+    kept — the validator publishes a partial score over what it already
+    checked (the ``dead`` list tells it to stop).  Returns
+    ``(revision, n_replanned, orphaned, dropped)``.
+    """
+    stage = plan["stage_of"][dead_uid]
+    ticks: list = []
+    orphaned: list = []
+    dropped: list = []
+    n_replanned = 0
+    for t, uids in plan["ticks"]:
+        uids = tuple(uids)
+        if uids[stage] != dead_uid:
+            ticks.append((t, uids))
+            continue
+        if t in done_ticks:
+            ticks.append((t, uids))
+            if stage > 0 and gradient_missing(t, uids):
+                orphaned.append(t)
+            continue
+        if survivor is None:
+            dropped.append(t)
+            continue
+        ticks.append((t, uids[:stage] + (survivor,) + uids[stage + 1:]))
+        n_replanned += 1
+    revision = dict(
+        plan,
+        ticks=tuple(ticks),
+        orphaned=tuple(sorted(set(plan.get("orphaned", ())) | set(orphaned))),
+        dropped=tuple(sorted(set(plan.get("dropped", ())) | set(dropped))),
+        dead=tuple(sorted(set(plan.get("dead", ())) | {dead_uid})),
+    )
+    return revision, n_replanned, orphaned, dropped
+
+
 class EpochDriver:
     """Runs the phase list over a swarm and folds the scratchpad into
     ``EpochStats``.  Swap/extend ``phases`` to define new scenarios."""
@@ -426,6 +485,23 @@ class EpochDriver:
     def __init__(self, phases: Optional[Iterable[Phase]] = None):
         self.phases: list[Phase] = list(phases or default_phases())
         self._gc_floor = 0          # first epoch whose weights/scores remain
+        # retention pins (docs/CHAOS.md): tag -> epoch.  GC never advances
+        # past the lowest pin, so the weight/score/control keys a
+        # crash-resume replay still needs survive even when
+        # ``retain_epochs`` is smaller than the resume distance
+        self._pins: dict[str, int] = {}
+
+    def pin_retention(self, tag: str, epoch: int) -> None:
+        """Hold every GC floor at or below ``epoch`` until released —
+        called with a respawning actor's snapshot epoch so its forward
+        replay finds the anchors/plans it needs."""
+        self._pins[tag] = min(int(epoch), self._pins.get(tag, int(epoch)))
+
+    def release_retention(self, tag: str) -> None:
+        self._pins.pop(tag, None)
+
+    def _pin_floor(self) -> Optional[int]:
+        return min(self._pins.values()) if self._pins else None
 
     def run_epoch(self, swarm) -> EpochStats:
         for m in swarm.miners.values():
@@ -471,6 +547,7 @@ class EpochDriver:
             validation=state.validation,
             emissions=emissions,
             reduce_audits=state.reduce_audits,
+            replanned_ticks=state.replanned,
         )
         swarm.history.append(stats)
         swarm.epoch += 1
@@ -484,7 +561,9 @@ class EpochDriver:
         # — long runs no longer grow the store without bound
         retain = swarm.config.retain_epochs
         if retain is not None:
-            while self._gc_floor <= stats.epoch - retain:
+            pin = self._pin_floor()
+            while self._gc_floor <= stats.epoch - retain \
+                    and (pin is None or self._gc_floor < pin):
                 e = self._gc_floor
                 swarm.transport.delete_prefix(schema.weights_prefix(e))
                 swarm.transport.delete_prefix(schema.scores_prefix(e))
@@ -516,21 +595,38 @@ class EventDriver(EpochDriver):
 
     ``swarm.check_liveness`` (when present) is consulted while polling so
     a crashed actor surfaces as ``ActorDied`` instead of a timeout.
+
+    Graceful degradation (docs/CHAOS.md): with a KeySchema v4 transport
+    an ``ActorDied`` mid-epoch is survivable — the driver re-plans the
+    dead miner's remaining ticks onto a stage survivor and publishes the
+    revision under ``control/ep{E}/plan/r{R}`` (actors poll for it while
+    blocked); a dead validator just forfeits its score; a reducer lost
+    during the sharded merge fails over to the surviving redundant
+    copy's partner (the §5.2 redundancy — honest copies are
+    bit-identical, so the anchor stays bit-exact).
     """
+
+    failover_grace = 5.0     # partner-copy patience once one copy landed
 
     def __init__(self, poll_interval: float = 0.002, timeout: float = 120.0):
         super().__init__()
         self.phases = []            # the timeline is event-driven, not phased
         self.poll_interval = poll_interval
         self.timeout = timeout
+        self._ctl_floor = 0         # first epoch whose control keys remain
+        self._plan: dict = {}       # latest plan (incl. revisions) in flight
+        self._plan_rev = 0
+        self._dead_validators: set = set()
 
     # -- store polling ---------------------------------------------------
 
-    def _await(self, swarm, key: str) -> None:
+    def _await(self, swarm, key: str,
+               timeout: Optional[float] = None) -> None:
         tp = swarm.transport
         check = getattr(swarm, "check_liveness", None)
         wait_for = getattr(tp, "wait_for", None)
-        deadline = time.monotonic() + self.timeout
+        budget = self.timeout if timeout is None else timeout
+        deadline = time.monotonic() + budget
         polls = 0
         while True:
             if check is not None and polls % 25 == 0:
@@ -538,7 +634,8 @@ class EventDriver(EpochDriver):
             if wait_for is not None:
                 # park server-side (zero CPU) in bounded slices so the
                 # liveness check still runs between them
-                if wait_for(key, timeout=0.25, actor="orchestrator"):
+                slice_s = min(0.25, max(budget, 0.01))
+                if wait_for(key, timeout=slice_s, actor="orchestrator"):
                     return
                 polls += 25          # one slice ~ a liveness interval
             else:
@@ -548,8 +645,73 @@ class EventDriver(EpochDriver):
                 polls += 1
             if time.monotonic() >= deadline:
                 raise TimeoutError(
-                    f"event driver timed out after {self.timeout}s "
+                    f"event driver timed out after {budget}s "
                     f"awaiting {key!r}")
+
+    # -- graceful degradation --------------------------------------------
+
+    @staticmethod
+    def _death_of(err: Exception) -> Optional[str]:
+        """Duck-typed ``ActorDied`` detection (the actor module imports
+        this one; importing it back at module level would be circular)."""
+        name = getattr(err, "actor", None)
+        return name if isinstance(err, RuntimeError) and name else None
+
+    def _handle_actor_death(self, swarm, state: EpochState,
+                            err: Exception) -> None:
+        """Re-plan around a dead actor instead of aborting the epoch.
+
+        Dead validator: forget it, forfeit its score.  Dead miner:
+        compute a :func:`revise_plan` revision from the store's tick-loss
+        watermarks, publish it under ``plan_rev`` for blocked actors, and
+        rewrite the driver's own tick table.  Raises the original error
+        when the transport cannot carry revisions (schema < v4)."""
+        name = self._death_of(err)
+        supervisor = getattr(swarm, "supervisor", None)
+        if supervisor is not None:
+            supervisor.forget(name)
+        if not name.startswith("miner"):
+            self._dead_validators.add(name)
+            return
+        uid = int(name[len("miner"):])
+        dead_uids = getattr(swarm, "dead_uids", None)
+        if dead_uids is not None:
+            dead_uids.add(uid)
+        tp, schema = swarm.transport, swarm.transport.schema
+        if schema.version < 4:
+            raise err            # no revision channel: fail loudly
+        plan = self._plan
+        if uid in plan.get("dead", ()):
+            return               # already re-planned around this miner
+        epoch = state.epoch
+        done = {t for t, _u, _g in self._ticks
+                if tp.exists(schema.tick_loss(epoch, t))}
+        stage = plan["stage_of"][uid]
+        known_dead = set(plan.get("dead", ())) | {uid}
+        alive = sorted(u for u, st in plan["stage_of"].items()
+                       if st == stage and u not in known_dead)
+        survivor = alive[0] if alive else None
+        revision, n_replanned, _orphaned, dropped = revise_plan(
+            plan, done, uid, survivor,
+            gradient_missing=lambda t, uids: not tp.exists(
+                schema.gradient(epoch, t, stage - 1, uids[stage - 1])))
+        self._plan_rev += 1
+        revision["rev"] = self._plan_rev
+        tp.put(schema.plan_rev(epoch, self._plan_rev), revision,
+               actor="orchestrator")
+        self._plan = revision
+        state.replanned += n_replanned
+        # rewrite the driver's tick table: substituted pathways keep their
+        # slot (the survivor's loss arrives under the same tick key),
+        # dropped ticks leave the await loop as stalled
+        by_tick = {t: tuple(uids) for t, uids in revision["ticks"]}
+        new_ticks = []
+        for t, _uids, gt in self._ticks:
+            if t in dropped:
+                state.stalled += 1
+                continue
+            new_ticks.append((t, by_tick[t], gt))
+        self._ticks = new_ticks
 
     # -- the timeline ----------------------------------------------------
 
@@ -566,6 +728,8 @@ class EventDriver(EpochDriver):
         state = EpochState(epoch=epoch, snapshots={})
 
         plan = self._build_plan(swarm, state)
+        self._plan = plan
+        self._plan_rev = 0
         tp.publish(EpochPlanMsg(epoch), plan, actor="orchestrator")
         for tick, _uids, gt in self._ticks:
             batch = swarm.corpus.batch(gt)
@@ -575,35 +739,84 @@ class EventDriver(EpochDriver):
                        jnp.asarray(batch["labels"]), actor="orchestrator")
 
         # training watermarks: fold tick losses into PathwayRecords in tick
-        # order (actors may publish out of order; the records must not)
-        for tick, uids, _gt in self._ticks:
+        # order (actors may publish out of order; the records must not).
+        # An ActorDied surfaced by the liveness hook re-plans and retries
+        # the same slot — self._ticks may shrink (dropped) or be rewritten
+        # (survivor substitution) under us
+        i = 0
+        while i < len(self._ticks):
+            tick, uids, _gt = self._ticks[i]
             key = TickLossMsg(epoch, tick).key(schema)
-            self._await(swarm, key)
+            try:
+                self._await(swarm, key)
+            except RuntimeError as err:
+                if self._death_of(err) is None:
+                    raise
+                self._handle_actor_death(swarm, state, err)
+                continue
             state.records.append(clasp.PathwayRecord(
-                uids, float(tp.get(key, actor="orchestrator"))))
+                self._ticks[i][1],
+                float(tp.get(key, actor="orchestrator"))))
+            i += 1
 
-        self._collect_scores(swarm, state, plan)
+        self._collect_scores(swarm, state, self._plan)
 
         if state.merge_quorum:
-            for s in sorted(plan["qualified"]):
-                quids = plan["qualified"][s]
-                if S.sync_mode == "sharded":
-                    merged = self._reduce_sharded(swarm, state, s, quids)
-                else:
-                    merged = self._reduce_dense(swarm, state, s, quids)
-                self._outer_step_and_publish(swarm, state, s, merged)
+            for s in sorted(self._plan["qualified"]):
+                quids = tuple(self._plan["qualified"][s])
+                while True:
+                    try:
+                        if S.sync_mode == "sharded":
+                            merged = self._reduce_sharded(swarm, state, s,
+                                                          quids)
+                        else:
+                            merged = self._reduce_dense(swarm, state, s,
+                                                        quids)
+                    except RuntimeError as err:
+                        if self._death_of(err) is None:
+                            raise
+                        self._handle_actor_death(swarm, state, err)
+                        continue     # retry: dead uploads are now masked
+                    if merged is None:
+                        # every qualifier died pre-upload: republish the
+                        # unchanged anchor so survivors parked on the
+                        # full-sync download still unblock
+                        anchor_vec, _ = ravel_pytree(jax.tree.map(
+                            lambda x: x.astype(jnp.float32),
+                            swarm.anchors[s]))
+                        swarm.transport.publish(
+                            AnchorMsg(state.epoch, s),
+                            np.asarray(anchor_vec), actor="orchestrator")
+                    else:
+                        self._outer_step_and_publish(swarm, state, s,
+                                                     merged)
+                    break
             for s in sorted(state.executors):
                 for v in swarm.validators:
                     state.reduce_audits.append(v.audit_reduce(epoch, s))
 
         stats = self._finalize(swarm, state)
-        tp.delete_prefix(schema.control_prefix(stats.epoch))
+        # control-plane GC is a pinned floor like the weight/score planes:
+        # a crash-resume replay needs the plans/revisions back to its
+        # snapshot epoch, so respawns pin the floor (pin_retention) and
+        # the sweep stops there until released
+        pin = self._pin_floor()
+        limit = stats.epoch + 1
+        if pin is not None:
+            limit = min(limit, pin)
+        while self._ctl_floor < limit:
+            tp.delete_prefix(schema.control_prefix(self._ctl_floor))
+            self._ctl_floor += 1
         return stats
 
     # -- plan construction (all swarm RNG, lockstep order) ---------------
 
     def _build_plan(self, swarm, state: EpochState) -> dict:
         S = swarm.config
+        # miners that died in earlier epochs and have not respawned are
+        # not schedulable; the availability roll still happens for them so
+        # the RNG stream (and the no-death trajectory) is unchanged
+        dead = getattr(swarm, "dead_uids", None) or set()
         ticks = []
         for tick in range(S.inner_steps):
             gt = swarm.global_tick      # the batch index, like the lockstep
@@ -612,7 +825,8 @@ class EventDriver(EpochDriver):
             ok = True
             for s in range(S.n_stages):
                 avail = [m for m in swarm.stage_miners(s)
-                         if swarm.available(m, tick)]
+                         if swarm.available(m, tick)
+                         and m.uid not in dead]
                 if not avail:
                     ok = False
                     break
@@ -642,11 +856,19 @@ class EventDriver(EpochDriver):
         # validator assignment draws come after every training draw —
         # identical RNG order to the lockstep ValidationPhase
         uids_sorted = sorted(swarm.miners)
+        alive_sorted = [u for u in uids_sorted if u not in dead]
         tracked = {}
         if uids_sorted:
             for v in swarm.validators:
-                tracked[v.uid] = uids_sorted[
-                    swarm.rng.randint(len(uids_sorted))]
+                # draw over the full census (RNG parity), then remap a
+                # dead pick to a live miner — a validator must never be
+                # assigned a peer that cannot publish a snapshot
+                uid = uids_sorted[swarm.rng.randint(len(uids_sorted))]
+                if uid in dead:
+                    if not alive_sorted:
+                        continue
+                    uid = alive_sorted[uid % len(alive_sorted)]
+                tracked[v.uid] = uid
 
         return {
             "stop": False,
@@ -670,13 +892,28 @@ class EventDriver(EpochDriver):
             if uid is None:
                 continue
             msg = ScoreMsg(state.epoch, v.uid, uid)
-            self._await(swarm, msg.key(schema))
-            vec = np.asarray(swarm.transport.fetch(msg, actor="orchestrator"))
-            res = ValidationResult(uid, state.epoch, int(vec[1]),
-                                   int(vec[2]), float(vec[0]), float(vec[3]))
-            v.results.append(res)
-            swarm.ledger.record(uid, state.epoch, res.score, t_now)
-            state.validation.append(res)
+            while True:
+                if f"validator{v.uid}" in self._dead_validators:
+                    break            # died mid-replay: score forfeited
+                try:
+                    self._await(swarm, msg.key(schema))
+                except RuntimeError as err:
+                    if self._death_of(err) is None:
+                        raise
+                    # a death elsewhere in the fleet: re-plan (the
+                    # validator publishes a partial score if its tracked
+                    # miner is the casualty) and keep waiting
+                    self._handle_actor_death(swarm, state, err)
+                    continue
+                vec = np.asarray(swarm.transport.fetch(
+                    msg, actor="orchestrator"))
+                res = ValidationResult(uid, state.epoch, int(vec[1]),
+                                       int(vec[2]), float(vec[0]),
+                                       float(vec[3]))
+                v.results.append(res)
+                swarm.ledger.record(uid, state.epoch, res.score, t_now)
+                state.validation.append(res)
+                break
 
     # -- merge: await uploads, reduce, outer step, publish anchor --------
 
@@ -686,16 +923,27 @@ class EventDriver(EpochDriver):
         return int(vec.shape[0])
 
     def _reduce_dense(self, swarm, state: EpochState, s: int,
-                      quids: tuple) -> np.ndarray:
+                      quids: tuple) -> Optional[np.ndarray]:
         S = swarm.config
         schema = swarm.transport.schema
         vec_len = self._stage_vec_len(swarm, s)
+        # the merge layout is fixed at plan time (revise_plan never
+        # rewrites ``qualified``): a dead qualifier is *masked*, not
+        # relaid — its upload is used if it landed before the crash,
+        # skipped otherwise, and the butterfly's masked mean averages
+        # whatever arrived
+        dead = set(self._plan.get("dead", ()))
         uploads: dict[int, np.ndarray] = {}
         for idx, uid in enumerate(quids):
             msg = WeightUploadMsg(state.epoch, s, uid, codec=S.share_codec)
-            self._await(swarm, msg.key(schema))
+            key = msg.key(schema)
+            if uid in dead and not swarm.transport.exists(key):
+                continue
+            self._await(swarm, key)
             payload = swarm.transport.fetch(msg, actor="orchestrator")
             uploads[idx] = np.asarray(compression.decode(payload, vec_len))
+        if not uploads:
+            return None          # every qualifier died before uploading
         plan = butterfly.make_plan(len(quids), vec_len,
                                    seed=S.seed + state.epoch * 131 + s)
         copies = butterfly.reduce_with_copies(plan, uploads)
@@ -706,6 +954,7 @@ class EventDriver(EpochDriver):
     def _reduce_sharded(self, swarm, state: EpochState, s: int,
                         quids: tuple) -> np.ndarray:
         S = swarm.config
+        tp = swarm.transport
         vec_len = self._stage_vec_len(swarm, s)
         align = compression.INT8_BLOCK if S.share_codec == "int8" else 1
         plan = butterfly.make_plan(len(quids), vec_len,
@@ -714,12 +963,51 @@ class EventDriver(EpochDriver):
         ex = butterfly.ButterflyExecutor(
             plan, swarm.transport, epoch=state.epoch, stage=s,
             uids=list(quids), codec=S.share_codec)
+        # reducer failover (§5.2 redundancy): each shard has two
+        # independent reduced copies.  The first copy gets the full
+        # timeout; once one landed, its partner only gets a short grace —
+        # a reducer lost to a crash or a dropped put costs seconds, not
+        # the epoch.  Honest copies are bit-identical, so collect()
+        # assembling from the survivor keeps the anchor bit-exact.
+        # a reducer that died back in the tick phase is already in the
+        # plan's dead list — seed the failover set so its never-coming
+        # copy gets an exists-check, not a full-timeout await
+        dead_idx: set = {quids.index(u)
+                         for u in self._plan.get("dead", ())
+                         if u in quids}
         for shard, (i, j) in enumerate(plan.pairs):
             lo, hi = plan.shard_bounds(shard)
             if hi == lo:
                 continue
+            have = 0
             for r in (i, j):
-                self._await(swarm, ex.reduced_key(shard, r))
+                key = ex.reduced_key(shard, r)
+                if r in dead_idx:
+                    have += int(tp.exists(key))   # published before dying?
+                    continue
+                try:
+                    self._await(swarm, key,
+                                timeout=self.failover_grace if have
+                                else None)
+                    have += 1
+                except TimeoutError:
+                    if have == 0:
+                        raise        # neither copy: the merge is truly stuck
+                    # partner never arrived: fail over to the copy we have
+                except RuntimeError as err:
+                    name = self._death_of(err)
+                    if name is None:
+                        raise
+                    self._handle_actor_death(swarm, state, err)
+                    if name.startswith("miner"):
+                        uid = int(name[len("miner"):])
+                        if uid in quids:
+                            dead_idx.add(quids.index(uid))
+                    have += int(tp.exists(key))
+            if have == 0:
+                raise TimeoutError(
+                    f"both reduced copies of stage {s} shard {shard} are "
+                    f"lost (reducers {i} and {j}): cannot assemble anchor")
         merged, _, _ = ex.collect(actor="orchestrator")
         state.agreement[s] = ex.last_agreement
         state.executors[s] = ex

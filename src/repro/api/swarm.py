@@ -108,13 +108,22 @@ class Swarm:
                train_cfg: Optional[TrainConfig] = None,
                phases: Optional[Iterable[Phase]] = None,
                runtime: str = "inprocess",
-               store_address: Optional[tuple] = None) -> "Swarm":
+               store_address: Optional[tuple] = None,
+               snapshot_root: Optional[str] = None,
+               chaos: Any = None,
+               store_standby: bool = False) -> "Swarm":
         """Build a swarm.  ``runtime="inprocess"`` (default) is the
         lockstep oracle; ``runtime="actors"`` returns an ``ActorSwarm``
         whose miners/validators are concurrent OS processes over a socket
         store (own threaded server unless ``store_address`` points at an
         external one) — same loss trajectory at the same seed, remember
-        to ``shutdown()``."""
+        to ``shutdown()``.
+
+        Chaos knobs (actors only — docs/CHAOS.md): ``snapshot_root``
+        enables crash-resume snapshot caches, ``chaos`` (a
+        ``runtime.chaos.FaultSchedule``) wraps every actor's transport
+        in deterministic fault injection, ``store_standby`` runs a warm
+        store replica with client-side failover."""
         if runtime == "actors":
             if phases is not None or transport is not None:
                 raise ValueError(
@@ -124,7 +133,9 @@ class Swarm:
             from repro.runtime.actor import ActorSwarm
             return ActorSwarm(model_cfg, config or SwarmConfig(),
                               faults=faults, train_cfg=train_cfg,
-                              store_address=store_address)
+                              store_address=store_address,
+                              snapshot_root=snapshot_root,
+                              chaos=chaos, store_standby=store_standby)
         if runtime != "inprocess":
             raise ValueError(
                 f"unknown runtime {runtime!r}: 'inprocess' or 'actors'")
@@ -133,6 +144,11 @@ class Swarm:
                 "store_address= only applies to runtime='actors'; pass "
                 "transport=SocketTransport(address) for an in-process "
                 "swarm over a socket store")
+        if snapshot_root is not None or chaos is not None or store_standby:
+            raise ValueError(
+                "snapshot_root=/chaos=/store_standby= only apply to "
+                "runtime='actors' (the chaos toolkit wraps actor "
+                "processes; the lockstep oracle stays fault-free)")
         driver = EpochDriver(phases) if phases is not None else None
         return cls(model_cfg, config or SwarmConfig(), faults=faults,
                    transport=transport, train_cfg=train_cfg, driver=driver)

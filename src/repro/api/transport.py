@@ -37,7 +37,7 @@ import socket
 import threading
 import time
 from collections import defaultdict, deque
-from typing import Any, Optional, Protocol, runtime_checkable
+from typing import Any, Optional, Protocol, Sequence, runtime_checkable
 
 from repro.api import serde
 from repro.api.keys import KeySchema
@@ -312,8 +312,16 @@ class SocketTransport:
     def __init__(self, address: tuple, schema: Optional[KeySchema] = None,
                  connect_timeout: float = 10.0,
                  reconnect_attempts: int = 3,
-                 reconnect_backoff: float = 0.05):
+                 reconnect_backoff: float = 0.05,
+                 failover: Sequence[tuple] = ()):
         self.address = (str(address[0]), int(address[1]))
+        # warm-standby failover (docs/CHAOS.md): candidate store addresses
+        # tried in order when the active one stops answering.  The first
+        # address that dials is *promoted* (sticky): after the primary
+        # dies, every subsequent dial goes straight to the standby.
+        self.addresses = [self.address] + [(str(h), int(p))
+                                           for h, p in failover]
+        self._active = 0
         self.schema = schema or KeySchema()
         self.connect_timeout = connect_timeout
         self.reconnect_attempts = int(reconnect_attempts)
@@ -332,22 +340,36 @@ class SocketTransport:
     def _connect(self) -> socket.socket:
         """Dial with exponential backoff inside ``connect_timeout``: the
         server process may still be binding when the first request goes
-        out, and a hiccuping server deserves a breather between dials."""
+        out, and a hiccuping server deserves a breather between dials.
+
+        With ``failover`` addresses configured, every backoff round tries
+        each candidate starting from the currently active one; the first
+        that answers is promoted sticky (``self.address`` follows it), so
+        once the fleet fails over to the warm standby it stays there
+        instead of re-probing the dead primary on every reconnect."""
         deadline = time.monotonic() + self.connect_timeout
         delay = max(self.reconnect_backoff, 0.01)
         while True:
-            try:
-                sock = socket.create_connection(self.address, timeout=30.0)
+            for offset in range(len(self.addresses)):
+                idx = (self._active + offset) % len(self.addresses)
+                try:
+                    sock = socket.create_connection(self.addresses[idx],
+                                                    timeout=30.0)
+                except OSError:
+                    continue
                 sock.settimeout(None)   # the 30s covers dialing only: a
                 # large transfer on a slow link may legitimately take longer
                 sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+                if idx != self._active:
+                    self._active = idx
+                    self.address = self.addresses[idx]
                 return sock
-            except OSError:
-                now = time.monotonic()
-                if now >= deadline:
-                    raise
-                time.sleep(min(delay, deadline - now))
-                delay = min(delay * 2.0, 0.5)
+            now = time.monotonic()
+            if now >= deadline:
+                raise ConnectionError(
+                    f"no store server reachable at any of {self.addresses}")
+            time.sleep(min(delay, deadline - now))
+            delay = min(delay * 2.0, 0.5)
 
     def _conn_for(self, actor: str) -> _Conn:
         with self._conns_lock:

@@ -33,6 +33,23 @@ import numpy as np
 from repro.common import tree_paths
 
 
+class SnapshotCorrupt(IOError):
+    """A digest-verified restore found bytes that don't match the manifest.
+
+    Typed (rather than a bare ``IOError``/assert) so crash-recovery layers —
+    ``runtime.snapshot_cache.DiskSnapshotCache`` — can catch *exactly* this
+    condition and fall back to the previous good snapshot, while genuine
+    I/O errors (missing file, permission) still propagate.
+    """
+
+    def __init__(self, directory: str, leaf_path: str):
+        super().__init__(
+            f"checkpoint corruption detected at leaf '{leaf_path}' "
+            f"in {directory}")
+        self.directory = directory
+        self.leaf_path = leaf_path
+
+
 def _digest(arr: np.ndarray) -> str:
     h = hashlib.blake2b(digest_size=16)
     h.update(str(arr.shape).encode())
@@ -98,7 +115,7 @@ def restore_pytree(template: Any, directory: str,
             import ml_dtypes  # noqa: F401 — registers the dtypes
             arr = arr.view(np.dtype(entry["dtype"]))
         if verify and _digest(arr) != entry["digest"]:
-            raise IOError(f"checkpoint corruption detected at {path}")
+            raise SnapshotCorrupt(directory, path)
         out.append(arr)
     return jax.tree_util.tree_unflatten(treedef, out), manifest["metadata"]
 

@@ -34,9 +34,25 @@ Determinism: the driver does every swarm RNG draw at plan time in the
 lockstep order; actors interact only through bit-exact store payloads
 and each actor processes its own jobs in tick order, so per-miner update
 sequences — and the loss trajectory — equal the in-process oracle at the
-same seed.  Payload-corrupting faults (tamper, free-ride) live in the
-lockstep driver's process and are rejected here; drop/straggle are
-schedule-only and supported.
+same seed.  Payload-corrupting faults (tamper, free-ride) run *inside*
+the owning actor (each child seeds its own fault RNG from the spec), so
+adversarial scenarios work under the concurrent runtime too;
+drop/straggle stay schedule-only (plan-time rolls in the parent).
+
+Chaos additions (docs/CHAOS.md):
+
+  * crash-resume — ``ActorSpec.snapshot_dir`` gives a miner a
+    ``DiskSnapshotCache``; it snapshots at every epoch boundary and a
+    respawned process restores the newest good snapshot, catches up to
+    the newest visible anchor of its stage and fast-forwards to the
+    in-flight epoch;
+  * plan revisions — when the ``EventDriver`` re-plans around a death it
+    publishes ``control/ep{E}/plan/r{R}``; blocked actors notice via the
+    ``WorkQueue.abort_if`` hook (``WorkRescheduled``) and re-derive
+    their work from the latest revision;
+  * fault injection — ``ActorSpec.chaos`` wraps the child's transport in
+    a seeded ``ChaosTransport``; ``ActorSpec.store_failover`` hands the
+    child the warm-standby store addresses.
 """
 from __future__ import annotations
 
@@ -54,6 +70,7 @@ from repro.api import serde
 from repro.api.config import SwarmConfig
 from repro.api.keys import KeySchema
 from repro.api.messages import (
+    ActivationMsg,
     AnchorMsg,
     GradientMsg,
     HeartbeatMsg,
@@ -71,8 +88,10 @@ from repro.core import butterfly, compression
 from repro.optim import adamw
 from repro.optim.schedules import cosine_warmup
 from repro.runtime import stage_model as sm
+from repro.runtime.chaos import wrap_transport
 from repro.runtime.miner import Miner
-from repro.runtime.network import FaultModel
+from repro.runtime.network import FaultModel, MinerBehavior
+from repro.runtime.snapshot_cache import DiskSnapshotCache
 from repro.runtime.validator import COSINE_THRESHOLD
 
 
@@ -80,15 +99,27 @@ class ActorStopped(Exception):
     """Raised inside an actor when a stop request interrupts polling."""
 
 
+class WorkRescheduled(Exception):
+    """The work an actor was blocked on has been invalidated by a newer
+    plan revision (``control/ep{E}/plan/r{R}``) — re-derive the work
+    list from the latest revision instead of waiting for a key that may
+    never arrive."""
+
+
 class ActorDied(RuntimeError):
     """A spawned actor process exited while the swarm still needed it."""
 
-    def __init__(self, actor: str, exitcode: Optional[int]):
-        super().__init__(
-            f"actor process {actor!r} died (exit code {exitcode}) while "
-            f"the epoch was in flight")
+    def __init__(self, actor: str, exitcode: Optional[int],
+                 last: Optional[HeartbeatMsg] = None):
+        msg = (f"actor process {actor!r} died (exit code {exitcode}) "
+               f"while the epoch was in flight")
+        if last is not None:
+            msg += (f"; last heartbeat: epoch={last.epoch} "
+                    f"items_done={last.items_done} state={last.state!r}")
+        super().__init__(msg)
         self.actor = actor
         self.exitcode = exitcode
+        self.last = last
 
 
 class WorkQueue:
@@ -97,10 +128,12 @@ class WorkQueue:
 
     ``await_key`` blocks until the key appears, a stop request lands
     (``ActorStopped``), the ``liveness`` hook raises (driver-side: a
-    crashed peer), or ``timeout`` expires.  When the transport offers
-    ``wait_for`` (``SocketTransport`` against a ``StoreServer``) the
-    wait parks server-side on a condition variable in bounded slices —
-    zero CPU while idle; otherwise it falls back to exists-polling at
+    crashed peer), the ``abort_if`` hook reports the wait is moot
+    (``WorkRescheduled`` — a plan revision reassigned the work), or
+    ``timeout`` expires.  When the transport offers ``wait_for``
+    (``SocketTransport`` against a ``StoreServer``) the wait parks
+    server-side on a condition variable in bounded slices — zero CPU
+    while idle; otherwise it falls back to exists-polling at
     ``poll_interval``."""
 
     def __init__(self, transport, poll_interval: float = 0.001,
@@ -113,6 +146,10 @@ class WorkQueue:
         self.liveness = liveness
         self.stop_event = stop_event
         self.liveness_every = max(int(liveness_every), 1)
+        # chaos hook: a zero-arg callable; when it returns True the
+        # current wait is abandoned with WorkRescheduled (installed by
+        # actors while a plan revision may still land)
+        self.abort_if = None
 
     wait_slice = 0.25    # bounded server-side park: stop/liveness cadence
 
@@ -126,6 +163,8 @@ class WorkQueue:
             if self.liveness is not None \
                     and polls % self.liveness_every == 0:
                 self.liveness()
+            if self.abort_if is not None and self.abort_if():
+                raise WorkRescheduled(key)
             if wait_for is not None:
                 if wait_for(key, timeout=self.wait_slice):
                     return
@@ -164,7 +203,13 @@ class Actor(Protocol):
 class ActorSpec:
     """Picklable spawn arguments: everything a child process needs to
     rebuild its world deterministically (params re-derive from the seed,
-    they never cross the process boundary at spawn)."""
+    they never cross the process boundary at spawn).
+
+    Chaos fields: ``behavior`` makes the child run its own payload
+    faults (tamper/free-ride) with a per-uid seeded RNG;
+    ``snapshot_dir`` turns on the crash-resume ``DiskSnapshotCache``;
+    ``chaos`` (a ``runtime.chaos.FaultSchedule``) wraps the child's
+    transport; ``store_failover`` lists warm-standby store addresses."""
     kind: str                 # "miner" | "validator"
     uid: int
     stage: int                # -1 for validators
@@ -173,6 +218,10 @@ class ActorSpec:
     train_cfg: TrainConfig
     store_address: tuple
     start_epoch: int = 0
+    behavior: Optional[MinerBehavior] = None
+    snapshot_dir: Optional[str] = None
+    chaos: Any = None         # FaultSchedule | None
+    store_failover: tuple = ()
 
 
 class ActorProcess:
@@ -201,11 +250,52 @@ class ActorProcess:
 
     def setup(self) -> None:
         S = self.spec.config
-        self.transport = SocketTransport(self.spec.store_address,
-                                         schema=KeySchema(version=3))
+        self.transport = SocketTransport(
+            self.spec.store_address, schema=KeySchema(version=4),
+            failover=tuple(self.spec.store_failover or ()))
+        if self.spec.chaos is not None:
+            self.transport = wrap_transport(self.transport,
+                                            self.spec.chaos,
+                                            actor_tag=self.actor)
         self.queue = WorkQueue(self.transport, stop_event=self._stop)
         self.model_spec = sm.SwarmModelSpec(
             self.spec.model_cfg, S.n_stages, S.compress, S.bottleneck_dim)
+
+    # -- plan revisions (graceful degradation) ---------------------------
+
+    def _latest_plan(self, epoch: int, plan: dict) -> dict:
+        """Fold in every published plan revision for ``epoch`` and arm
+        the work queue's abort hook on the next (still unpublished) one,
+        so a blocked await abandons work a revision reassigns."""
+        schema = self.transport.schema
+        if schema.version < 4:
+            return plan
+        rev = int(plan.get("rev", 0))
+        while True:
+            key = schema.plan_rev(epoch, rev + 1)
+            if not self.transport.exists(key):
+                break
+            plan = self.transport.get(key, actor=self.actor)
+            rev = int(plan.get("rev", rev + 1))
+        nxt = schema.plan_rev(epoch, rev + 1)
+        self.queue.abort_if = lambda: self.transport.exists(nxt)
+        return plan
+
+    def _newest_plan_epoch(self) -> Optional[int]:
+        """Highest epoch with a visible plan — the fast-forward target
+        for an actor that fell behind the swarm (crash-resume)."""
+        schema = self.transport.schema
+        best = None
+        for key in self.transport.keys(""):
+            try:
+                parsed = schema.parse(key)
+            except ValueError:
+                continue
+            if parsed.kind == "plan":
+                ep = parsed.fields["epoch"]
+                if best is None or ep > best:
+                    best = ep
+        return best
 
     def status(self) -> HeartbeatMsg:
         import os
@@ -279,7 +369,15 @@ class ActorProcess:
                         self.queue.await_key(plan_key)
                         break
                     except TimeoutError:
-                        continue   # idle between epochs is not a failure
+                        # idle between epochs is not a failure — but a
+                        # resumed actor may be awaiting a plan the swarm
+                        # GC'd: fast-forward to the newest visible one
+                        newest = self._newest_plan_epoch()
+                        if newest is not None and newest > self.epoch:
+                            self.epoch = newest
+                            plan_key = self.transport.schema.plan(
+                                self.epoch)
+                        continue
                 plan = self.transport.get(plan_key, actor=self.actor)
                 if plan.get("stop"):
                     break
@@ -294,11 +392,28 @@ class ActorProcess:
 
 
 class MinerActor(ActorProcess):
-    """A ``runtime.Miner`` driven by the store instead of the driver."""
+    """A ``runtime.Miner`` driven by the store instead of the driver.
+
+    Crash-resume: with ``spec.snapshot_dir`` set the miner snapshots its
+    full state (params, opt state, inner step) to a
+    ``DiskSnapshotCache`` at every epoch boundary, *before* any tick
+    mutates it.  A respawned process restores the newest good snapshot,
+    downloads the newest anchor of its stage (the store's catch-up
+    artifact), fast-forwards to the in-flight epoch and rejoins — it
+    never restarts from the seed."""
 
     def __init__(self, spec: ActorSpec):
         super().__init__(spec)
         self.miner: Optional[Miner] = None
+        self._cache: Optional[DiskSnapshotCache] = None
+        self.resumed_from: Optional[int] = None
+        b = spec.behavior
+        self._behavior = b if b is not None and not b.honest else None
+        # the child's own fault RNG (the lockstep timeline draws from the
+        # parent's FaultModel; here corruption is owned by the actor)
+        self._faults = FaultModel(
+            {spec.uid: b} if b is not None else {},
+            seed=(spec.config.seed * 7919 + spec.uid) & 0x7FFFFFFF)
 
     def setup(self) -> None:
         super().setup()
@@ -313,6 +428,55 @@ class MinerActor(ActorProcess):
         self.miner = Miner(self.spec.uid, stage, self.model_spec,
                            jax.tree.map(jnp.copy, params), self.transport,
                            self.spec.train_cfg)
+        if self.spec.snapshot_dir:
+            self._cache = DiskSnapshotCache(self.spec.snapshot_dir)
+            self._try_resume()
+
+    # -- crash-resume ----------------------------------------------------
+
+    def _try_resume(self) -> None:
+        """Restore the newest good snapshot and replay forward: load the
+        newest visible anchor of this stage, then fast-forward the epoch
+        cursor to the newest visible plan (corrupt snapshots are
+        quarantined by the cache and the next older one used)."""
+        m = self.miner
+        got = self._cache.restore_latest(m.snapshot())
+        if got is None:
+            return                      # fresh actor: seed-derived state
+        snap_epoch, tree, _meta = got
+        m.params = jax.tree.map(jnp.asarray, tree["params"])
+        m.opt_state = jax.tree.map(jnp.asarray, tree["opt_state"])
+        m.inner_step = jnp.asarray(tree["inner_step"], jnp.int32)
+        self.epoch = max(self.epoch, snap_epoch)
+        self.resumed_from = snap_epoch
+        schema = self.transport.schema
+        best = None
+        for key in self.transport.keys(""):
+            try:
+                parsed = schema.parse(key)
+            except ValueError:
+                continue
+            if parsed.kind == "anchor" \
+                    and parsed.fields["stage"] == m.stage:
+                ep = parsed.fields["epoch"]
+                if ep >= snap_epoch and (best is None or ep > best):
+                    best = ep
+        if best is not None:
+            m.load_weights_vector(np.asarray(self.transport.get(
+                schema.anchor(best, m.stage), actor=self.actor)))
+            # an anchor for epoch E means E *completed* — replaying E is
+            # impossible anyway (its activation/gradient planes are GC'd
+            # at epoch end), so rejoin at the boundary after it
+            self.epoch = max(self.epoch, best + 1)
+        newest = self._newest_plan_epoch()
+        if newest is not None and newest > self.epoch:
+            self.epoch = newest
+        self.state = f"resumed@{snap_epoch}"
+        # store-side marker so scenarios can assert a real resume
+        self.transport.put(schema.heartbeat(self.actor),
+                           {"resumed_from": snap_epoch,
+                            "epoch": self.epoch},
+                           actor=self.actor)
 
     # -- the epoch -------------------------------------------------------
 
@@ -320,27 +484,94 @@ class MinerActor(ActorProcess):
         m = self.miner
         epoch = plan["epoch"]
         m.reset_epoch()
-        if m.uid in set(plan["tracked"].values()):
+        if self._cache is not None:
+            # epoch-boundary snapshot, before any tick mutates state: a
+            # respawn restores exactly here
+            self._cache.save(epoch, m.snapshot(),
+                             {"uid": m.uid, "stage": m.stage})
+        plan = self._latest_plan(epoch, plan)
+        if m.uid not in set(plan.get("dead", ())) \
+                and m.uid in set(plan["tracked"].values()):
             # epoch-start snapshot, before any tick mutates state: the
             # tracked validator replays from exactly here
             self.transport.publish(SnapshotMsg(epoch, m.uid), m.snapshot(),
                                    actor=self.actor)
-        for tick, uids in plan["ticks"]:
-            if uids[m.stage] != m.uid:
-                continue
-            self._process_tick(epoch, tick, uids)
-            self.items_done += 1
-        if plan["merge"]:
-            self._share_and_sync(epoch, plan)
+        done: set = set()
+        self._uploaded = False
+        self._reduced = False
+        self._shard_ex = None
+        while True:
+            dropped = set(plan.get("dropped", ()))
+            orphaned = set(plan.get("orphaned", ()))
+            try:
+                for tick, uids in plan["ticks"]:
+                    uids = tuple(uids)
+                    if uids[m.stage] != m.uid or tick in done \
+                            or tick in dropped:
+                        continue
+                    brk = self._orphan_break(plan, uids) \
+                        if tick in orphaned else None
+                    self._process_tick(epoch, tick, uids,
+                                       orphan_break=brk)
+                    done.add(tick)
+                    self.items_done += 1
+                # my ticks (under this fold of the plan) are done — but a
+                # revision can still hand me a dead peer's remaining work
+                # while I park at the full-sync anchor, so the anchor
+                # await keeps the revision abort armed and a reschedule
+                # re-enters the tick scan above.  Only the rev check
+                # keeps this loop finite.
+                rev = plan.get("rev", 0)
+                plan = self._latest_plan(epoch, plan)
+                if plan.get("rev", 0) != rev:
+                    continue           # fresh revision: rescan for work
+                if plan["merge"]:
+                    self._share_and_sync(epoch, plan)
+                break
+            except WorkRescheduled:
+                plan = self._latest_plan(epoch, plan)
+        self.queue.abort_if = None
 
-    def _process_tick(self, epoch: int, tick: int, uids: tuple) -> None:
+    @staticmethod
+    def _orphan_break(plan: dict, uids: tuple) -> Optional[int]:
+        """Lowest dead stage on this pathway: backward is broken *below*
+        it (the dead miner never forwarded its gradient), intact above."""
+        dead = set(plan.get("dead", ()))
+        stages = [plan["stage_of"][u] for u in uids if u in dead]
+        return min(stages) if stages else None
+
+    def _process_tick(self, epoch: int, tick: int, uids: tuple,
+                      orphan_break: Optional[int] = None) -> None:
         m, schema = self.miner, self.transport.schema
         s, last = m.stage, self.spec.config.n_stages - 1
         in_key = schema.tokens(epoch, tick) if s == 0 \
             else schema.activation(epoch, tick, s - 1, uids[s - 1])
         out_key = schema.activation(epoch, tick, s, m.uid)
+        if orphan_break is not None:
+            # an orphaned tick's forward chain completed before the
+            # death (its loss is published) — never re-forward, params
+            # may have moved since; only the backward may be pending
+            if s == last or s < orphan_break:
+                return               # chain broken below the casualty
+            g = m.backward(in_key, self._decode_gradient(
+                self.queue.get(schema.gradient_for(out_key), self.actor)))
+            if s > 0:
+                self._publish_gradient(epoch, tick, s - 1, uids[s - 1], g)
+            return
         self.queue.await_key(in_key)
-        m.forward(tick, in_key, out_key)
+        out = m.forward(tick, in_key, out_key)
+        b = self._behavior
+        if b is not None and s < last \
+                and (b.free_ride or b.tamper_activations > 0):
+            # adversarial republish over the honest output — validators
+            # catch the mismatch on replay, CLASP the loss inflation
+            # (mirrors the lockstep TrainingPhase, but actor-owned)
+            corrupted = self._faults.corrupt_activation(
+                m.uid, np.asarray(out, np.float32))
+            self.transport.publish(
+                ActivationMsg(epoch, tick, s, m.uid),
+                jnp.asarray(corrupted).astype(jnp.asarray(out).dtype),
+                actor=self.actor)
         if s == last:
             lab_key = schema.labels(epoch, tick)
             loss, g = m.backward_last(in_key,
@@ -384,41 +615,79 @@ class MinerActor(ActorProcess):
         schema = self.transport.schema
         qual = plan["qualified"].get(m.stage, ())
         if m.uid in qual:
-            vec = m.weights_vector()
-            if S.sync_mode == "sharded":
-                self._share_sharded(epoch, tuple(qual), vec)
-            else:
-                payload = compression.encode(jnp.asarray(vec), S.share_codec)
-                self.transport.publish(
-                    WeightUploadMsg(epoch, m.stage, m.uid,
-                                    codec=S.share_codec),
-                    payload, actor=self.actor)
+            if not self._uploaded:
+                # once per epoch: a reschedule from the anchor park below
+                # can re-enter here after re-planned ticks moved the
+                # weights, and republishing the upload key with different
+                # bits would be a digest conflict — the merge averages
+                # the pre-revision vector, which is what the plan-time
+                # layout expects
+                self._uploaded = True
+                vec = m.weights_vector()
+                b = self._behavior
+                if b is not None and b.tamper_weights > 0:
+                    # dishonest upload (the agreement matrix exposes it)
+                    vec = self._faults.corrupt_weights(
+                        m.uid, np.asarray(vec, np.float32))
+                if S.sync_mode == "sharded":
+                    self._shard_upload(epoch, tuple(qual), vec)
+                else:
+                    payload = compression.encode(jnp.asarray(vec),
+                                                 S.share_codec)
+                    self.transport.publish(
+                        WeightUploadMsg(epoch, m.stage, m.uid,
+                                        codec=S.share_codec),
+                        payload, actor=self.actor)
+            if S.sync_mode == "sharded" and not self._reduced:
+                self._reduce_shards(plan, tuple(qual))
         if m.stage in plan["qualified"]:
             # full sync: everyone in a merged stage (stragglers included)
-            # downloads the anchor the driver publishes
+            # downloads the anchor the driver publishes.  The await keeps
+            # the revision abort armed: WorkRescheduled propagates to the
+            # process_epoch loop, which folds the revision and rescans
+            # for re-planned ticks before parking here again.
             anchor = AnchorMsg(epoch, m.stage)
             self.queue.await_key(anchor.key(schema))
             m.load_weights_vector(self.transport.fetch(anchor,
                                                        actor=self.actor))
 
-    def _share_sharded(self, epoch: int, qual: tuple, vec) -> None:
+    def _shard_upload(self, epoch: int, qual: tuple, vec) -> None:
         m, S = self.miner, self.spec.config
         align = compression.INT8_BLOCK if S.share_codec == "int8" else 1
         plan_b = butterfly.make_plan(len(qual), int(vec.shape[0]),
                                      seed=S.seed + epoch * 131 + m.stage,
                                      align=align)
-        ex = butterfly.ButterflyExecutor(
+        self._shard_ex = butterfly.ButterflyExecutor(
             plan_b, self.transport, epoch=epoch, stage=m.stage,
             uids=list(qual), codec=S.share_codec)
-        idx = list(qual).index(m.uid)
-        ex.upload_vector(idx, vec, actor=self.actor)
-        # reduce_one masks *missing* uploads out of the merge, so every
-        # input must exist before reducing — await them all (the lockstep
-        # phase barrier, reduced to exactly the keys this reducer reads)
+        self._shard_ex.upload_vector(qual.index(m.uid), vec,
+                                     actor=self.actor)
+
+    def _reduce_shards(self, plan: dict, qual: tuple) -> None:
+        """Input barrier + reduce.  ``reduce_one`` masks *missing*
+        uploads out of the merge, so every input must exist before
+        reducing — await them all, except a dead peer's, which will
+        never come (the store is immutable, so every live reducer masks
+        the same set and the redundant copies stay bit-identical).  The
+        barrier keeps the revision abort armed — a mid-barrier death
+        reschedules and re-enters with the new ``dead`` list; only the
+        reduce itself publishes, and runs uninterruptible."""
+        m = self.miner
+        ex, idx = self._shard_ex, qual.index(m.uid)
+        dead = set(plan.get("dead", ()))
         for a in ex.assignments_for(idx):
-            for key in a.upload_keys:
+            for i, key in enumerate(a.upload_keys):
+                if qual[i] in dead:
+                    continue
                 self.queue.await_key(key)
-        m.run_reduce(ex, idx)
+        armed, self.queue.abort_if = self.queue.abort_if, None
+        try:
+            b = self._behavior
+            m.run_reduce(ex, idx,
+                         tamper=b.tamper_weights if b is not None else 0.0)
+        finally:
+            self.queue.abort_if = armed
+        self._reduced = True
 
 
 class ValidatorActor(ActorProcess):
@@ -444,60 +713,94 @@ class ValidatorActor(ActorProcess):
         S = self.spec.config
         schema = self.transport.schema
         epoch = plan["epoch"]
+        plan = self._latest_plan(epoch, plan)
         uid = plan["tracked"].get(self.spec.uid)
         if uid is None:
+            self.queue.abort_if = None
             return
         stage = plan["stage_of"][uid]
         role = self.model_spec.role(stage)
-        snap = self.queue.get(schema.snapshot(epoch, uid), self.actor)
-        params = jax.tree.map(jnp.asarray, snap["params"])
-        opt_state = jax.tree.map(jnp.asarray, snap["opt_state"])
-        inner_step = jnp.asarray(snap["inner_step"])
-
-        items = [(t, uids) for t, uids in plan["ticks"]
-                 if uids[stage] == uid]
-        if S.validate_max_items is not None:
-            items = items[:S.validate_max_items]
+        params = opt_state = inner_step = None
 
         checked = passed = 0
         validated = 0.0
         min_cos = 1.0
-        for tick, uids in items:
-            sample_key = schema.tokens(epoch, tick) if stage == 0 \
-                else schema.activation(epoch, tick, stage - 1,
-                                       uids[stage - 1])
-            out_key = schema.activation(epoch, tick, stage, uid)
-            x_in = self.queue.get(sample_key, self.actor)
-            mine = sm.stage_forward(params, x_in, self.model_spec, role)
-            theirs = self.queue.get(out_key, self.actor)
-            cos = float(cosine_similarity(jnp.asarray(mine, jnp.float32),
-                                          jnp.asarray(theirs, jnp.float32)))
-            checked += 1
-            min_cos = min(min_cos, cos)
-            ok = cos >= COSINE_THRESHOLD
-            passed += int(ok)
-            # every scheduled pathway item ran a backward; replay it so
-            # later items line up (same as Validator.validate_epoch)
-            if role == "last":
-                labels = self.queue.get(schema.labels(epoch, tick),
-                                        self.actor)
-                _, g_params, _ = sm.last_stage_loss_and_grads(
-                    params, x_in, labels, self.model_spec)
-            else:
-                g_out = self.queue.get(schema.gradient_for(out_key),
-                                       self.actor)
-                if isinstance(g_out, dict) and g_out.get("codec"):
-                    g_out = jnp.reshape(compression.decode(g_out),
-                                        g_out["shape"])
-                g_params, _ = sm.stage_backward(params, x_in, g_out,
-                                                self.model_spec, role)
-            params, opt_state = self.opt.update(g_params, opt_state,
-                                                params, inner_step)
-            inner_step = inner_step + 1
-            if ok:
-                validated += 1.0
-            self.items_done += 1
+        done: set = set()
+        while True:
+            if uid in set(plan.get("dead", ())):
+                # tracked miner is the casualty: publish the partial
+                # score over what was already checked (the driver's
+                # ledger is waiting on this watermark)
+                break
+            dropped = set(plan.get("dropped", ()))
+            orphaned = set(plan.get("orphaned", ()))
+            items = [(t, tuple(uids)) for t, uids in plan["ticks"]
+                     if tuple(uids)[stage] == uid and t not in dropped]
+            if S.validate_max_items is not None:
+                items = items[:S.validate_max_items]
+            try:
+                if params is None:
+                    snap = self.queue.get(schema.snapshot(epoch, uid),
+                                          self.actor)
+                    params = jax.tree.map(jnp.asarray, snap["params"])
+                    opt_state = jax.tree.map(jnp.asarray,
+                                             snap["opt_state"])
+                    inner_step = jnp.asarray(snap["inner_step"])
+                for tick, uids in items:
+                    if tick in done:
+                        continue
+                    brk = MinerActor._orphan_break(plan, uids) \
+                        if tick in orphaned else None
+                    sample_key = schema.tokens(epoch, tick) if stage == 0 \
+                        else schema.activation(epoch, tick, stage - 1,
+                                               uids[stage - 1])
+                    out_key = schema.activation(epoch, tick, stage, uid)
+                    x_in = self.queue.get(sample_key, self.actor)
+                    mine = sm.stage_forward(params, x_in, self.model_spec,
+                                            role)
+                    theirs = self.queue.get(out_key, self.actor)
+                    cos = float(cosine_similarity(
+                        jnp.asarray(mine, jnp.float32),
+                        jnp.asarray(theirs, jnp.float32)))
+                    checked += 1
+                    min_cos = min(min_cos, cos)
+                    ok = cos >= COSINE_THRESHOLD
+                    passed += int(ok)
+                    if brk is not None and stage < brk:
+                        # orphaned below the break: the miner never ran
+                        # this backward either — forward check only
+                        if ok:
+                            validated += 1.0
+                        done.add(tick)
+                        self.items_done += 1
+                        continue
+                    # every completed pathway item ran a backward; replay
+                    # it so later items line up (Validator.validate_epoch)
+                    if role == "last":
+                        labels = self.queue.get(schema.labels(epoch, tick),
+                                                self.actor)
+                        _, g_params, _ = sm.last_stage_loss_and_grads(
+                            params, x_in, labels, self.model_spec)
+                    else:
+                        g_out = self.queue.get(schema.gradient_for(out_key),
+                                               self.actor)
+                        if isinstance(g_out, dict) and g_out.get("codec"):
+                            g_out = jnp.reshape(compression.decode(g_out),
+                                                g_out["shape"])
+                        g_params, _ = sm.stage_backward(
+                            params, x_in, g_out, self.model_spec, role)
+                    params, opt_state = self.opt.update(
+                        g_params, opt_state, params, inner_step)
+                    inner_step = inner_step + 1
+                    if ok:
+                        validated += 1.0
+                    done.add(tick)
+                    self.items_done += 1
+                break
+            except WorkRescheduled:
+                plan = self._latest_plan(epoch, plan)
 
+        self.queue.abort_if = None
         self.transport.publish(
             ScoreMsg(epoch, self.spec.uid, uid),
             np.asarray([validated, checked, passed, min_cos], np.float32),
@@ -511,12 +814,17 @@ def _child_main(spec: ActorSpec, ready_queue: Any) -> None:
 
 
 class ActorSupervisor:
-    """Owns the actor process fleet: spawn, health pings, stop, and the
-    liveness check that turns a dead child into ``ActorDied``."""
+    """Owns the actor process fleet: spawn, health pings, stop, the
+    liveness check that turns a dead child into ``ActorDied``, and the
+    chaos controls — ``kill`` (hard crash), ``forget`` (drop a dead
+    child from liveness so the epoch can degrade around it) and
+    ``respawn`` (relaunch from the recorded spec, crash-resume)."""
 
     def __init__(self):
         self.procs: dict[str, Any] = {}
         self.health: dict[str, tuple] = {}
+        self.specs: dict[str, ActorSpec] = {}
+        self.last_seen: dict[str, HeartbeatMsg] = {}
 
     def spawn(self, specs: list) -> None:
         import multiprocessing as mp
@@ -530,6 +838,7 @@ class ActorSupervisor:
                                daemon=True, name=name)
             proc.start()
             self.procs[name] = proc
+            self.specs[name] = spec
         pending = len(specs)
         while pending:
             try:
@@ -539,7 +848,8 @@ class ActorSupervisor:
             except queue_mod.Empty:
                 for name, proc in self.procs.items():
                     if not proc.is_alive():
-                        raise ActorDied(name, proc.exitcode)
+                        raise ActorDied(name, proc.exitcode,
+                                        last=self.last_seen.get(name))
 
     def _health_request(self, name: str, op: str,
                         timeout: float = 5.0) -> HeartbeatMsg:
@@ -552,7 +862,23 @@ class ActorSupervisor:
         return serde.decode_message(frame)
 
     def ping(self, name: str) -> HeartbeatMsg:
-        return self._health_request(name, "ping")
+        hb = self._health_request(name, "ping")
+        self.last_seen[name] = hb
+        return hb
+
+    def progress(self) -> dict[str, HeartbeatMsg]:
+        """Last known ``HeartbeatMsg`` per actor — live pings where the
+        health endpoint answers, the cached heartbeat where it doesn't
+        (a stalled or dead child keeps its last report)."""
+        out: dict[str, HeartbeatMsg] = {}
+        for name in sorted(self.procs):
+            try:
+                out[name] = self.ping(name)
+            except (OSError, ConnectionError):
+                hb = self.last_seen.get(name)
+                if hb is not None:
+                    out[name] = hb
+        return out
 
     def stop(self, name: str) -> None:
         try:
@@ -560,12 +886,43 @@ class ActorSupervisor:
         except (OSError, ConnectionError):
             pass                     # already gone: stopping is idempotent
 
+    def kill(self, name: str) -> None:
+        """Hard-crash a child (SIGTERM, no cleanup) — the chaos
+        scenarios' crash primitive.  The dead process stays registered,
+        so the next ``check()`` surfaces ``ActorDied`` and the driver's
+        graceful degradation takes over."""
+        proc = self.procs[name]
+        if proc.is_alive():
+            proc.terminate()
+        proc.join(timeout=5.0)
+
+    def forget(self, name: str) -> None:
+        """Drop a dead child from liveness tracking (the driver calls
+        this after re-planning around it) so ``check()`` stops raising
+        for a casualty the epoch already degraded around."""
+        self.procs.pop(name, None)
+        self.health.pop(name, None)
+
+    def respawn(self, name: str,
+                start_epoch: Optional[int] = None) -> None:
+        """Relaunch a (dead) actor from its recorded spec.  With a
+        ``snapshot_dir`` in the spec the child crash-resumes from its
+        newest good snapshot; ``start_epoch`` seeds the epoch cursor."""
+        spec = self.specs[name]
+        if start_epoch is not None:
+            spec = dataclasses.replace(spec, start_epoch=start_epoch)
+        self.forget(name)
+        self.spawn([spec])
+
     def check(self) -> None:
         """Raise ``ActorDied`` if any child exited — called from await
-        loops so a crash surfaces immediately instead of as a timeout."""
+        loops so a crash surfaces immediately instead of as a timeout.
+        The error carries the casualty's last heartbeat (epoch,
+        items_done, state) for the post-mortem."""
         for name, proc in self.procs.items():
             if not proc.is_alive():
-                raise ActorDied(name, proc.exitcode)
+                raise ActorDied(name, proc.exitcode,
+                                last=self.last_seen.get(name))
 
     def join_all(self, timeout: float = 10.0) -> None:
         deadline = time.monotonic() + timeout
@@ -607,42 +964,68 @@ class ActorSwarm(Swarm):
                  faults: Optional[FaultModel] = None,
                  train_cfg: Optional[TrainConfig] = None,
                  store_address: Optional[tuple] = None,
-                 driver: Optional[EventDriver] = None):
+                 driver: Optional[EventDriver] = None,
+                 snapshot_root: Optional[str] = None,
+                 chaos: Any = None,
+                 store_standby: bool = False):
         config = config or SwarmConfig()
         faults = faults or FaultModel({}, seed=config.seed)
-        for uid, b in sorted(faults.behaviors.items()):
-            if not b.honest:
-                raise ValueError(
-                    f"runtime='actors' cannot inject payload-corrupting "
-                    f"faults (miner {uid}: tamper/free-ride): corruption "
-                    f"is driver-side in the lockstep timeline; use the "
-                    f"in-process runtime for adversarial scenarios")
         self._own_server = None
+        self._standby = None
         if store_address is None:
             from repro.runtime.store_server import StoreServer
             self._own_server = StoreServer().start()
             store_address = self._own_server.address
+            if store_standby:
+                # warm standby: the primary mirrors every mutation
+                # synchronously; clients carry the standby address and
+                # fail over when the primary drops
+                self._standby = StoreServer().start()
+                self._own_server.mirror_to(self._standby.address)
+        elif store_standby:
+            raise ValueError(
+                "store_standby=True needs the swarm-owned store (omit "
+                "store_address); an external store manages its own "
+                "replica")
         self.store_address = (str(store_address[0]), int(store_address[1]))
+        self._failover = ((self._standby.address,)
+                          if self._standby is not None else ())
         transport = SocketTransport(self.store_address,
-                                    schema=KeySchema(version=3))
+                                    schema=KeySchema(version=4),
+                                    failover=self._failover)
         super().__init__(model_cfg, config, faults=faults,
                          transport=transport, train_cfg=train_cfg,
                          driver=driver or EventDriver())
         self.supervisor = ActorSupervisor()
         self._started = False
+        self.dead_uids: set = set()
+        self.snapshot_root = snapshot_root
+        self.chaos = chaos
 
     # -- fleet lifecycle -------------------------------------------------
+
+    def _snapshot_dir(self, uid: int) -> Optional[str]:
+        if self.snapshot_root is None:
+            return None
+        import os
+        return os.path.join(self.snapshot_root, f"miner{uid}")
 
     def start(self) -> "ActorSwarm":
         if self._started:
             return self
         specs = [ActorSpec("miner", m.uid, m.stage, self.cfg, self.config,
                            self.train_cfg, self.store_address,
-                           start_epoch=self.epoch)
+                           start_epoch=self.epoch,
+                           behavior=self.faults.behaviors.get(m.uid),
+                           snapshot_dir=self._snapshot_dir(m.uid),
+                           chaos=self.chaos,
+                           store_failover=self._failover)
                  for m in self.miners.values()]
         specs += [ActorSpec("validator", v.uid, -1, self.cfg, self.config,
                             self.train_cfg, self.store_address,
-                            start_epoch=self.epoch)
+                            start_epoch=self.epoch,
+                            chaos=self.chaos,
+                            store_failover=self._failover)
                   for v in self.validators]
         self.supervisor.spawn(specs)
         self._started = True
@@ -654,9 +1037,62 @@ class ActorSwarm(Swarm):
         if self._started:
             self.supervisor.check()
 
+    # -- chaos controls --------------------------------------------------
+
+    def kill_miner(self, uid: int) -> None:
+        """Hard-crash a miner process mid-run.  The next driver await
+        surfaces ``ActorDied`` and graceful degradation re-plans the
+        epoch around the casualty."""
+        self.supervisor.kill(f"miner{uid}")
+
+    def respawn_miner(self, uid: int) -> None:
+        """Relaunch a killed miner.  Pins store GC retention at the
+        miner's newest snapshot epoch (the keys its forward replay needs
+        must survive), clears it from the dead census so the next plan
+        schedules it, and crash-resumes the process."""
+        name = f"miner{uid}"
+        spec = self.supervisor.specs[name]
+        snap_epoch = None
+        if spec.snapshot_dir:
+            snap_epoch = DiskSnapshotCache(spec.snapshot_dir).latest_epoch()
+        rejoin = snap_epoch if snap_epoch is not None else self.epoch
+        self.driver.pin_retention(name, rejoin)
+        self.dead_uids.discard(uid)
+        self.supervisor.respawn(name, start_epoch=rejoin)
+
+    def fail_primary(self) -> None:
+        """Kill the primary store server mid-run: every transport in the
+        swarm (parent and children) reconnects, fails over to the warm
+        standby and replays its pending requests there."""
+        if self._standby is None:
+            raise RuntimeError(
+                "no warm standby: construct with store_standby=True")
+        self._own_server.stop()
+        self._own_server, self._standby = self._standby, None
+        self.store_address = (str(self._own_server.address[0]),
+                              int(self._own_server.address[1]))
+        self._failover = ()
+
     def run_epoch(self):
         self.start()
-        return self.driver.run_epoch(self)
+        stats = self.driver.run_epoch(self)
+        self._release_caught_up_pins()
+        return stats
+
+    def _release_caught_up_pins(self) -> None:
+        """Retention pins hold GC only while the respawned miner is
+        behind; once its heartbeat shows it reached the swarm's epoch
+        the pin is dropped and the GC floors advance again."""
+        for tag in list(getattr(self.driver, "_pins", {})):
+            if tag not in self.supervisor.procs:
+                self.driver.release_retention(tag)
+                continue
+            try:
+                hb = self.supervisor.ping(tag)
+            except (OSError, ConnectionError):
+                continue
+            if hb.epoch >= self.epoch:
+                self.driver.release_retention(tag)
 
     def shutdown(self, stop_server: bool = True) -> None:
         """Stop the fleet (stop plan for the next epoch + health-endpoint
@@ -679,6 +1115,9 @@ class ActorSwarm(Swarm):
         if self._own_server is not None and stop_server:
             self._own_server.stop()
             self._own_server = None
+        if self._standby is not None and stop_server:
+            self._standby.stop()
+            self._standby = None
         self.transport.close()
 
     def __enter__(self) -> "ActorSwarm":

@@ -1,0 +1,288 @@
+"""Deterministic fault injection: ``ChaosTransport`` + ``FaultSchedule``.
+
+The paper's operating environment is a permissionless swarm on consumer
+links: puts get dropped, connections reset mid-epoch, payloads arrive
+corrupted, the store partitions.  ``runtime.network.FaultModel`` injects
+*behavioral* faults (a miner straggles or tampers); this module injects
+*infrastructure* faults at the transport seam, so every scenario in
+``repro.scenarios`` can compose them with any runtime — lockstep,
+simulated-network, socket, or the spawned actor fleet — without touching
+a single core-loop line.
+
+``ChaosTransport`` wraps any ``Transport`` (``InProcessTransport`` and
+``SocketTransport`` compose unchanged) and consults a seeded
+``FaultSchedule`` on every operation.  The determinism contract, pinned
+by tests and documented in docs/CHAOS.md: the schedule's RNG draws
+happen in this wrapper's own operation order, so the same seed over the
+same workload produces the same fault sequence — and because every
+injected fault is one the system is built to absorb, the same loss
+trajectory:
+
+  * **dropped puts** are terminal but restricted to redundant planes
+    (``drop_kinds``, default the butterfly's ``shard_reduced`` copies:
+    §5.2 gives every shard two independent reducers precisely so one
+    copy can vanish);
+  * **dropped gets** model a flaky read: the first attempt "fails"
+    (costing ``latency_s``) and the wrapper retries — the application
+    never sees the fault, only the delay;
+  * **injected latency** sleeps on a seeded coin flip (slow-link
+    scenarios; trajectory-neutral by construction);
+  * **connection resets** sever the inner ``SocketTransport``'s TCP
+    sockets *without* clearing its pipeline — exercising the bounded
+    reconnect + pending-replay path on a live workload;
+  * **payload corruption** perturbs eligible puts (``corrupt_kinds``) —
+    the consensus collect / reduce audit must catch it downstream;
+  * **store partitions** are visibility blackouts: for a window of
+    operations, ``exists``/``wait_for``/``keys`` report nothing new.
+    Await-based consumers (``WorkQueue``, ``EventDriver``) simply wait
+    out the window.  Do NOT enable partitions for lockstep *sharded*
+    sync: ``ButterflyExecutor.reduce_one`` masks "missing" uploads out
+    of the merge, so a hidden upload silently changes the anchor.
+
+Everything is counted in ``chaos_report()`` so benchmarks can record
+faults injected alongside recovery latency.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import time
+import zlib
+from typing import Any, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSchedule:
+    """Seeded, picklable description of what goes wrong and how often.
+
+    ``seed`` is mandatory and first: a scenario must *declare* its fault
+    schedule seed (the swarmlint ``scenario-conformance`` rule checks
+    this), because the determinism contract — same seed, same fault
+    sequence, same trajectory — is the whole point."""
+    seed: int
+    drop_put: float = 0.0          # P(terminally drop an eligible put)
+    drop_kinds: tuple = ("shard_reduced",)
+    drop_get: float = 0.0          # P(first read attempt fails; retried)
+    latency_prob: float = 0.0      # P(an op pays latency_s)
+    latency_s: float = 0.0
+    reset_every: int = 0           # sever TCP conns every N ops (0 = never)
+    corrupt_put: float = 0.0       # P(corrupt an eligible put's payload)
+    corrupt_kinds: tuple = ("shard_reduced",)
+    corrupt_scale: float = 0.25    # additive offset (tamper semantics)
+    partition_every: int = 0       # open a blackout every N ops (0 = never)
+    partition_ops: int = 0         # ...hiding the next N visibility reads
+
+    def __post_init__(self):
+        for p in (self.drop_put, self.drop_get, self.latency_prob,
+                  self.corrupt_put):
+            assert 0.0 <= p <= 1.0, f"probabilities must be in [0,1]: {p}"
+
+
+class ChaosTransport:
+    """A ``Transport`` that injects a ``FaultSchedule`` between the caller
+    and any inner transport.  Unknown attributes (``wire_report``,
+    ``ping``, ``stop_server``, ``store`` ...) delegate to the inner
+    transport, so the wrapper is drop-in everywhere the inner one was."""
+
+    def __init__(self, inner, schedule: FaultSchedule,
+                 actor_tag: str = ""):
+        self.inner = inner
+        self.schedule = schedule
+        self.schema = inner.schema
+        # per-wrapper RNG: each wrapped transport draws in its own op
+        # order (deterministic per actor process / per lockstep run)
+        self._rng = np.random.RandomState(
+            (schedule.seed ^ zlib.crc32(actor_tag.encode())) & 0x7FFFFFFF)
+        self._ops = 0
+        self._partition_until = -1
+        self.injected = {"dropped_puts": 0, "retried_gets": 0, "delays": 0,
+                         "resets": 0, "corrupted_puts": 0, "partitions": 0}
+
+    # -- schedule machinery ----------------------------------------------
+
+    def _tick(self) -> None:
+        """One operation: advance counters, fire reset/partition/latency."""
+        self._ops += 1
+        sch = self.schedule
+        if sch.reset_every and self._ops % sch.reset_every == 0:
+            self._sever()
+        if (sch.partition_every and sch.partition_ops
+                and self._ops % sch.partition_every == 0
+                and self._ops > self._partition_until):
+            self._partition_until = self._ops + sch.partition_ops
+            self.injected["partitions"] += 1
+        if sch.latency_prob and self._rng.rand() < sch.latency_prob:
+            self._delay()
+
+    def _delay(self) -> None:
+        if self.schedule.latency_s > 0:
+            time.sleep(self.schedule.latency_s)
+        self.injected["delays"] += 1
+
+    def _partitioned(self) -> bool:
+        return self._ops <= self._partition_until
+
+    def _sever(self) -> None:
+        """Simulate a peer RST: close the inner transport's live sockets
+        *without* clearing its pipelined state — the next request must
+        reconnect and replay (``SocketTransport._io``)."""
+        conns = getattr(self.inner, "_conns", None)
+        if conns is None:
+            return                       # in-process inner: nothing to sever
+        for conn in list(conns.values()):
+            sock = conn.sock
+            if sock is not None:
+                try:
+                    sock.close()
+                except OSError:
+                    pass
+                conn.sock = None
+        self.injected["resets"] += 1
+
+    def _kind(self, key: str) -> Optional[str]:
+        try:
+            return self.schema.parse(key).kind
+        except ValueError:
+            return None
+
+    def _corrupt(self, value: Any) -> Any:
+        """Additive perturbation of the float payload (the same semantics
+        as ``FaultModel`` tamper, so agreement/audit thresholds apply)."""
+        off = np.float32(self.schedule.corrupt_scale)
+
+        def bend(x):
+            arr = np.asarray(x)
+            if arr.dtype.kind == "f":
+                return arr + off.astype(arr.dtype)
+            return x
+
+        if isinstance(value, dict):
+            return {k: bend(v) if not isinstance(v, (dict, str, tuple))
+                    else v for k, v in value.items()}
+        return bend(value)
+
+    def chaos_report(self) -> dict:
+        return dict(self.injected, ops=self._ops)
+
+    # -- typed plane -----------------------------------------------------
+
+    def publish(self, msg, payload: Any, actor: str = "?",
+                meta: Optional[dict] = None) -> str:
+        return self.put(msg.key(self.schema), payload, actor=actor,
+                        meta=meta)
+
+    def fetch(self, msg, actor: str = "?") -> Any:
+        return self.get(msg.key(self.schema), actor=actor)
+
+    # -- raw plane -------------------------------------------------------
+
+    def put(self, key: str, value: Any, actor: str = "?",
+            codec: Optional[str] = None,
+            meta: Optional[dict] = None) -> str:
+        self._tick()
+        sch = self.schedule
+        kind = None
+        if sch.drop_put or sch.corrupt_put:
+            kind = self._kind(key)
+        if sch.drop_put and kind in sch.drop_kinds \
+                and self._rng.rand() < sch.drop_put:
+            # terminal drop: the payload never reaches the store.  The
+            # digest of what WOULD have been stored is still returned —
+            # callers treat put as fire-and-forget, redundancy absorbs it
+            from repro.runtime.state_store import _digest
+            self.injected["dropped_puts"] += 1
+            return _digest(value)
+        if sch.corrupt_put and kind in sch.corrupt_kinds \
+                and self._rng.rand() < sch.corrupt_put:
+            value = self._corrupt(value)
+            self.injected["corrupted_puts"] += 1
+        return self.inner.put(key, value, actor=actor, codec=codec,
+                              meta=meta)
+
+    def get(self, key: str, actor: str = "?") -> Any:
+        self._tick()
+        if self.schedule.drop_get \
+                and self._rng.rand() < self.schedule.drop_get:
+            # flaky read: first attempt fails, pay the latency, retry —
+            # the caller sees the delay, never the failure
+            self._delay()
+            self.injected["retried_gets"] += 1
+        return self.inner.get(key, actor=actor)
+
+    def exists(self, key: str) -> bool:
+        self._tick()
+        if self._partitioned():
+            return False
+        return self.inner.exists(key)
+
+    def wait_for(self, key: str, timeout: float = 0.5,
+                 actor: str = "?") -> bool:
+        self._tick()
+        if self._partitioned():
+            time.sleep(min(timeout, 0.05))   # blackout: nothing to see
+            return False
+        inner_wait = getattr(self.inner, "wait_for", None)
+        if inner_wait is not None:
+            return inner_wait(key, timeout=timeout, actor=actor)
+        # emulate over transports without a server-side wait op
+        deadline = time.monotonic() + timeout
+        while not self.inner.exists(key):
+            if time.monotonic() >= deadline:
+                return False
+            time.sleep(0.002)
+        return True
+
+    def delete_prefix(self, prefix: str) -> int:
+        self._tick()
+        return self.inner.delete_prefix(prefix)
+
+    def keys(self, prefix: str = "") -> list[str]:
+        self._tick()
+        if self._partitioned():
+            return []
+        return self.inner.keys(prefix)
+
+    # -- timing / accounting ---------------------------------------------
+
+    @contextlib.contextmanager
+    def parallel(self):
+        with self.inner.parallel():
+            yield
+
+    def traffic_report(self) -> dict:
+        return self.inner.traffic_report()
+
+    def link_report(self) -> dict:
+        return self.inner.link_report()
+
+    def elapsed_seconds(self) -> float:
+        return self.inner.elapsed_seconds()
+
+    # -- lifecycle / passthrough -----------------------------------------
+
+    def close(self) -> None:
+        close = getattr(self.inner, "close", None)
+        if close is not None:
+            close()
+
+    def __getattr__(self, name: str):
+        # everything else (wire_report, ping, reset_store, store, ...)
+        # behaves exactly like the inner transport
+        return getattr(self.inner, name)
+
+    def __enter__(self) -> "ChaosTransport":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+def wrap_transport(inner, schedule: Optional[FaultSchedule],
+                   actor_tag: str = ""):
+    """Wrap ``inner`` when a schedule is given; identity otherwise — the
+    one-liner actor/scenario code uses so 'no chaos' stays zero-cost."""
+    if schedule is None:
+        return inner
+    return ChaosTransport(inner, schedule, actor_tag=actor_tag)

@@ -1,0 +1,99 @@
+"""``DiskSnapshotCache``: crash-recovery snapshots for swarm actors.
+
+The icetrust production pattern (ROADMAP item 2): every miner keeps a
+small rolling cache of *local* epoch-boundary snapshots on disk, written
+atomically (``checkpoint.save_pytree``'s tmp+rename) and restored with
+digest verification.  A killed miner process respawns, restores the
+newest good snapshot, and replays forward from the store's ``control/``
+watermarks — instead of re-deriving epoch 0 state from the seed and
+poisoning the epoch it rejoins.
+
+Corruption handling (the reason restores go through the typed
+``SnapshotCorrupt``): a crash *during* a write can't corrupt anything
+(atomic rename), but disks rot and operators truncate files.  On a
+digest mismatch ``restore_latest`` quarantines the bad epoch directory
+(renames it ``ep_NNNN.corrupt`` so it is never retried and an operator
+can inspect it) and falls back to the previous good snapshot.
+"""
+from __future__ import annotations
+
+import os
+import shutil
+from typing import Any, Optional
+
+from repro.checkpoint.checkpoint import (
+    SnapshotCorrupt,
+    restore_pytree,
+    save_pytree,
+)
+
+
+class DiskSnapshotCache:
+    """Rolling per-actor cache of epoch-boundary snapshots.
+
+    Layout: ``<root>/ep_00000003/`` (one ``save_pytree`` dir per epoch).
+    ``keep`` bounds disk usage; at least 2 are kept so a corrupt newest
+    snapshot always has a fallback.
+    """
+
+    def __init__(self, root: str, keep: int = 2):
+        assert keep >= 2, "keep >= 2: corruption fallback needs a spare"
+        self.root = root
+        self.keep = keep
+        os.makedirs(root, exist_ok=True)
+
+    def _dir(self, epoch: int) -> str:
+        return os.path.join(self.root, f"ep_{epoch:08d}")
+
+    def epochs(self) -> list[int]:
+        """Epochs with a (non-quarantined, non-tmp) snapshot, ascending."""
+        out = []
+        for name in os.listdir(self.root):
+            if not name.startswith("ep_") or "." in name:
+                continue   # skips ep_*.tmp and ep_*.corrupt
+            try:
+                out.append(int(name.split("_")[1]))
+            except (IndexError, ValueError):
+                continue
+        return sorted(out)
+
+    def latest_epoch(self) -> Optional[int]:
+        eps = self.epochs()
+        return eps[-1] if eps else None
+
+    def save(self, epoch: int, tree: Any,
+             metadata: Optional[dict] = None) -> None:
+        """Atomically snapshot ``tree`` for ``epoch``, then GC old epochs."""
+        save_pytree(tree, self._dir(epoch),
+                    dict(metadata or {}, epoch=epoch))
+        for old in self.epochs()[:-self.keep]:
+            shutil.rmtree(self._dir(old), ignore_errors=True)
+
+    def restore(self, template: Any, epoch: int) -> tuple[Any, dict]:
+        return restore_pytree(template, self._dir(epoch))
+
+    def restore_latest(self, template: Any
+                       ) -> Optional[tuple[int, Any, dict]]:
+        """Restore the newest snapshot that verifies.
+
+        Returns ``(epoch, tree, metadata)``, or ``None`` when no usable
+        snapshot exists (fresh actor — derive state from the seed).  A
+        snapshot failing digest verification is quarantined and the next
+        older one is tried.
+        """
+        for epoch in reversed(self.epochs()):
+            try:
+                tree, meta = self.restore(template, epoch)
+                return epoch, tree, meta
+            except SnapshotCorrupt:
+                self._quarantine(epoch)
+        return None
+
+    def _quarantine(self, epoch: int) -> None:
+        src = self._dir(epoch)
+        dst = src + ".corrupt"
+        shutil.rmtree(dst, ignore_errors=True)
+        try:
+            os.rename(src, dst)
+        except OSError:
+            shutil.rmtree(src, ignore_errors=True)

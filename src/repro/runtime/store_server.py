@@ -59,7 +59,12 @@ class _Handler(socketserver.BaseRequestHandler):
     def handle(self) -> None:  # pragma: no cover - exercised via sockets
         self.request.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
         while True:
-            body = serde.recv_frame(self.request)
+            try:
+                body = serde.recv_frame(self.request)
+            except OSError:
+                # stop()/fail_primary() closed this socket under a blocked
+                # recv — a normal shutdown path, not a request error
+                return
             if body is None:
                 return
             try:
@@ -114,6 +119,10 @@ class StoreServer(socketserver.ThreadingTCPServer):
         self._thread: Optional[threading.Thread] = None
         self._handlers: dict = {}          # thread -> client socket
         self._handlers_lock = threading.Lock()
+        # warm-standby replication (docs/CHAOS.md): socket to a mirror
+        # server that receives every mutation synchronously
+        self._mirror_sock: Optional[socket.socket] = None
+        self._mirror_addr: Optional[tuple] = None
 
     # -- handler bookkeeping (deterministic shutdown) ---------------------
 
@@ -131,6 +140,45 @@ class StoreServer(socketserver.ThreadingTCPServer):
         host, port = self.server_address[:2]
         return host, port
 
+    # -- warm-standby mirroring ------------------------------------------
+
+    def mirror_to(self, address: tuple) -> None:
+        """Synchronously replicate every mutation (``put``,
+        ``delete_prefix``, ``reset``) to a warm-standby ``StoreServer`` at
+        ``address``.  Forwarding happens under the dispatch lock, so the
+        standby sees mutations in exactly the primary's serialization
+        order — when the primary dies, clients failing over
+        (``SocketTransport(failover=...)``) find an identical store.
+
+        Connects eagerly (a missing standby at setup is an operator
+        error); a standby dying *later* degrades silently — the primary
+        keeps serving, replication just stops (logged once on stderr)."""
+        addr = (str(address[0]), int(address[1]))
+        sock = socket.create_connection(addr, timeout=10.0)
+        sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        with self._lock:
+            self._mirror_addr = addr
+            self._mirror_sock = sock
+
+    def _mirror(self, req: dict) -> None:
+        """Forward one mutation to the standby (caller holds the lock)."""
+        if self._mirror_sock is None:
+            return
+        try:
+            serde.send_frame(self._mirror_sock, serde.dumps(req))
+            body = serde.recv_frame(self._mirror_sock)
+            if body is None:
+                raise ConnectionError("standby closed the connection")
+        except Exception as e:  # noqa: BLE001 - degrade, don't die
+            import sys
+            print(f"store mirror to {self._mirror_addr} lost ({e}); "
+                  f"continuing unreplicated", file=sys.stderr, flush=True)
+            try:
+                self._mirror_sock.close()
+            except OSError:
+                pass
+            self._mirror_sock = None
+
     # -- request dispatch ------------------------------------------------
 
     def dispatch(self, req: dict) -> dict:
@@ -141,6 +189,7 @@ class StoreServer(socketserver.ThreadingTCPServer):
                     req["key"], req["value"], actor=req.get("actor", "?"),
                     codec=req.get("codec"), meta=req.get("meta"))
                 self._cond.notify_all()      # wake any blocked "wait" ops
+                self._mirror(req)
                 return {"ok": True, "digest": entry.digest,
                         "nbytes": entry.nbytes}
             if op == "wait":
@@ -165,8 +214,9 @@ class StoreServer(socketserver.ThreadingTCPServer):
             if op == "exists":
                 return {"ok": True, "exists": self.store.exists(req["key"])}
             if op == "delete_prefix":
-                return {"ok": True,
-                        "deleted": self.store.delete_prefix(req["prefix"])}
+                deleted = self.store.delete_prefix(req["prefix"])
+                self._mirror(req)
+                return {"ok": True, "deleted": deleted}
             if op == "keys":
                 return {"ok": True,
                         "keys": self.store.keys(req.get("prefix", ""))}
@@ -175,6 +225,7 @@ class StoreServer(socketserver.ThreadingTCPServer):
             if op == "reset":
                 self.store = StateStore()
                 self._cond.notify_all()      # waiters re-check the new store
+                self._mirror(req)
                 return {"ok": True}
             if op == "ping":
                 import os
@@ -201,6 +252,12 @@ class StoreServer(socketserver.ThreadingTCPServer):
         self._stopping = True
         with self._lock:
             self._cond.notify_all()   # unpark blocked "wait" handlers now
+            if self._mirror_sock is not None:
+                try:
+                    self._mirror_sock.close()
+                except OSError:
+                    pass
+                self._mirror_sock = None
         self.shutdown()
         self.close_handlers()
         self.server_close()

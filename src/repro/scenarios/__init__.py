@@ -1,0 +1,47 @@
+"""repro.scenarios — deterministic chaos scenarios over the actor swarm.
+
+The chaos-engineering layer of the repo (docs/CHAOS.md): a ``Scenario``
+is a fault schedule plus a phase list over the public ``ActorSwarm``
+surface — kills, respawns, store failover, plain epochs — executed by
+``run_scenario`` with the measurements (convergence, recovery latency,
+re-planned ticks) folded into a ``ScenarioResult``.  ``SCENARIOS`` is
+the catalog the ``bench_chaos`` matrix and the smoke-test chaos shard
+both draw from.
+"""
+from __future__ import annotations
+
+from repro.scenarios.base import (
+    FailPrimaryStore,
+    KillMiner,
+    RespawnMiner,
+    RunEpochs,
+    Scenario,
+    ScenarioPhase,
+    ScenarioResult,
+    run_scenario,
+)
+from repro.scenarios.library import (
+    SCENARIOS,
+    flapping_joiner,
+    kill_n_miners,
+    slow_link,
+    store_failover,
+    tampering_under_churn,
+)
+
+__all__ = [
+    "SCENARIOS",
+    "FailPrimaryStore",
+    "KillMiner",
+    "RespawnMiner",
+    "RunEpochs",
+    "Scenario",
+    "ScenarioPhase",
+    "ScenarioResult",
+    "flapping_joiner",
+    "kill_n_miners",
+    "run_scenario",
+    "slow_link",
+    "store_failover",
+    "tampering_under_churn",
+]

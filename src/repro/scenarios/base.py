@@ -1,0 +1,220 @@
+"""Scenario harness: deterministic chaos experiments over the actor swarm.
+
+A :class:`Scenario` is a *phase list + fault schedule* — the same shape
+as the lockstep timeline's ``Phase`` objects, lifted to the fleet level:
+each :class:`ScenarioPhase` is one step of the chaos timeline (run
+epochs, arm a mid-epoch kill, respawn a casualty, fail the primary
+store), and the mandatory ``fault_seed`` pins every random choice the
+scenario makes (the ``ChaosTransport`` schedule, behavior RNGs), so the
+determinism contract holds end to end: same seed => same fault schedule
+=> same trajectory.
+
+``run_scenario`` owns the swarm lifecycle: build the ``ActorSwarm`` from
+the scenario's knobs, execute the phases in order, fold the per-epoch
+stats plus the chaos bookkeeping (recovery latency, re-planned ticks,
+convergence) into a :class:`ScenarioResult`, and always shut the fleet
+down.  No core-loop edits: scenarios only compose public swarm surface
+(``kill_miner`` / ``respawn_miner`` / ``fail_primary`` / ``run_epoch``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Any, Optional, Protocol, runtime_checkable
+
+from repro.api.config import EpochStats, SwarmConfig
+from repro.api.swarm import Swarm
+from repro.configs.base import ModelConfig
+from repro.runtime.chaos import FaultSchedule
+from repro.runtime.network import FaultModel, MinerBehavior
+
+
+@runtime_checkable
+class ScenarioPhase(Protocol):
+    """One step of a chaos timeline (mirrors the driver ``Phase`` shape:
+    a ``name`` and a ``run`` over mutable shared state)."""
+    name: str
+
+    def run(self, swarm: Any, result: "ScenarioResult") -> None: ...
+
+
+@dataclasses.dataclass
+class ScenarioResult:
+    """What a scenario run measured — the row BENCH_chaos.json records."""
+    name: str
+    fault_seed: int
+    stats: list = dataclasses.field(default_factory=list)
+    converged: bool = False
+    first_loss: float = float("nan")
+    final_loss: float = float("nan")
+    recovery_seconds: float = 0.0
+    replanned_ticks: int = 0
+    kills: int = 0
+    notes: list = dataclasses.field(default_factory=list)
+
+    def row(self) -> dict:
+        return {
+            "scenario": self.name,
+            "fault_seed": self.fault_seed,
+            "epochs": len(self.stats),
+            "converged": bool(self.converged),
+            "first_loss": float(self.first_loss),
+            "final_loss": float(self.final_loss),
+            "recovery_seconds": float(self.recovery_seconds),
+            "replanned_ticks": int(self.replanned_ticks),
+            "kills": int(self.kills),
+            "notes": list(self.notes),
+        }
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """A named chaos experiment: swarm knobs + phase list.
+
+    ``fault_seed`` is mandatory and feeds both the ``ChaosTransport``
+    schedule (when ``schedule_of`` builds one) and any behavior faults —
+    the swarmlint ``scenario-conformance`` rule enforces that every
+    scenario declares it."""
+    name: str
+    fault_seed: int
+    phases: tuple                       # ScenarioPhase steps, in order
+    schedule: Optional[FaultSchedule] = None
+    behaviors: Any = None               # dict[int, MinerBehavior] | None
+    config: Any = None                  # SwarmConfig | None
+    snapshots: bool = True
+    store_standby: bool = False
+
+
+class RunEpochs:
+    """Advance the swarm ``n`` epochs, folding stats into the result."""
+    name = "run-epochs"
+
+    def __init__(self, n: int = 1):
+        self.n = n
+
+    def run(self, swarm, result: ScenarioResult) -> None:
+        for _ in range(self.n):
+            stats: EpochStats = swarm.run_epoch()
+            result.stats.append(stats)
+            result.replanned_ticks += stats.replanned_ticks
+
+
+class KillMiner:
+    """Arm a mid-epoch crash: a watcher thread kills ``uid`` as soon as
+    the ``after_tick``-th tick loss of epoch ``at_epoch`` lands in the
+    store — a *watermark* trigger, so the kill lands at the same logical
+    point of the timeline on every run."""
+    name = "kill-miner"
+
+    def __init__(self, uid: int, at_epoch: int, after_tick: int = 0):
+        self.uid = uid
+        self.at_epoch = at_epoch
+        self.after_tick = after_tick
+
+    def run(self, swarm, result: ScenarioResult) -> None:
+        schema = swarm.transport.schema
+        key = schema.tick_loss(self.at_epoch, self.after_tick)
+        uid = self.uid
+
+        def watch():
+            deadline = time.monotonic() + 120.0
+            while time.monotonic() < deadline:
+                if swarm.epoch > self.at_epoch:
+                    # the epoch raced past the watermark (tiny models can
+                    # finish an epoch inside the poll interval): a late
+                    # kill would hit a later epoch — or a respawn — so
+                    # stand down and record the miss
+                    result.notes.append(
+                        f"kill of miner{uid} missed ep{self.at_epoch}")
+                    return
+                try:
+                    if swarm.transport.exists(key):
+                        break
+                except (OSError, ConnectionError):
+                    return
+                time.sleep(0.02)
+            result.notes.append(
+                f"killed miner{uid} at ep{self.at_epoch} "
+                f"tick>{self.after_tick}")
+            result.kills += 1
+            result.__dict__.setdefault("_killed_at", {})[uid] = \
+                time.monotonic()
+            swarm.kill_miner(uid)
+
+        t = threading.Thread(target=watch, name=f"kill-miner{uid}",
+                             daemon=True)
+        t.start()
+
+
+class RespawnMiner:
+    """Relaunch a killed miner; records recovery latency from the kill
+    timestamp to the respawned child reporting ready."""
+    name = "respawn-miner"
+
+    def __init__(self, uid: int):
+        self.uid = uid
+
+    def run(self, swarm, result: ScenarioResult) -> None:
+        swarm.respawn_miner(self.uid)
+        killed = result.__dict__.get("_killed_at", {}).get(self.uid)
+        if killed is not None:
+            result.recovery_seconds = max(result.recovery_seconds,
+                                          time.monotonic() - killed)
+        result.notes.append(f"respawned miner{self.uid}")
+
+
+class FailPrimaryStore:
+    """Kill the primary store server; clients fail over to the warm
+    standby.  Records the failover as recovery latency (the time for the
+    next epoch's first watermark to land is the observable)."""
+    name = "fail-primary-store"
+
+    def run(self, swarm, result: ScenarioResult) -> None:
+        t0 = time.monotonic()
+        swarm.fail_primary()
+        # first post-failover roundtrip proves the standby took over
+        swarm.transport.exists(
+            swarm.transport.schema.plan(max(swarm.epoch - 1, 0)))
+        result.recovery_seconds = max(result.recovery_seconds,
+                                      time.monotonic() - t0)
+        result.notes.append("primary store failed over to standby")
+
+
+def _default_config() -> SwarmConfig:
+    return SwarmConfig(n_stages=2, miners_per_stage=2, validators=1,
+                       inner_steps=4, b_min=1, retain_epochs=None)
+
+
+def run_scenario(scenario: Scenario, model_cfg: ModelConfig, *,
+                 snapshot_root: Optional[str] = None,
+                 converge_factor: float = 1.05) -> ScenarioResult:
+    """Execute a scenario end to end and fold the measurements.
+
+    ``converged`` means the final epoch's mean loss is finite and no
+    worse than ``converge_factor`` x the first epoch's — chaos must not
+    stop the model training (scenario tests pin tighter, oracle-relative
+    tolerances on top of this)."""
+    config = scenario.config or _default_config()
+    faults = (FaultModel(dict(scenario.behaviors), seed=config.seed)
+              if scenario.behaviors else None)
+    swarm = Swarm.create(
+        model_cfg, config, runtime="actors", faults=faults,
+        chaos=scenario.schedule,
+        snapshot_root=(snapshot_root if scenario.snapshots else None),
+        store_standby=scenario.store_standby)
+    result = ScenarioResult(name=scenario.name,
+                            fault_seed=scenario.fault_seed)
+    try:
+        for phase in scenario.phases:
+            phase.run(swarm, result)
+    finally:
+        swarm.shutdown()
+    losses = [s.mean_loss for s in result.stats
+              if s.mean_loss == s.mean_loss]      # drop NaN (no records)
+    if losses:
+        result.first_loss = losses[0]
+        result.final_loss = losses[-1]
+        result.converged = (result.final_loss
+                            <= result.first_loss * converge_factor)
+    return result

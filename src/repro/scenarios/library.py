@@ -1,0 +1,129 @@
+"""The scenario catalog: the five chaos experiments the bench matrix runs.
+
+Each builder returns a :class:`Scenario` — a fault schedule plus a phase
+list over the public swarm surface — with its ``fault_seed`` declared up
+front (the swarmlint ``scenario-conformance`` gate).  docs/CHAOS.md
+documents what each scenario stresses and what its pass condition is.
+
+  * ``kill_n_miners``        — N mid-epoch crashes + crash-resume respawn
+  * ``flapping_joiner``      — a miner that dies and rejoins repeatedly
+  * ``slow_link``            — seeded latency + flaky reads, no crashes
+  * ``tampering_under_churn``— a weight-tamperer survives a crash epoch
+                               (audit attribution must still name it)
+  * ``store_failover``       — primary store dies mid-run, warm standby
+                               takes over
+"""
+from __future__ import annotations
+
+from repro.api.config import SwarmConfig
+from repro.runtime.chaos import FaultSchedule
+from repro.runtime.network import MinerBehavior
+from repro.scenarios.base import (
+    FailPrimaryStore,
+    KillMiner,
+    RespawnMiner,
+    RunEpochs,
+    Scenario,
+)
+
+
+def _config(**over) -> SwarmConfig:
+    base = dict(n_stages=2, miners_per_stage=2, validators=1,
+                inner_steps=4, b_min=1, retain_epochs=None)
+    base.update(over)
+    return SwarmConfig(**base)
+
+
+def kill_n_miners(n: int = 1, fault_seed: int = 1301) -> Scenario:
+    """Crash ``n`` miners mid-epoch (watermark-triggered), degrade the
+    epoch gracefully, then respawn them from their snapshot caches.
+    Pass: loss keeps converging; each respawn resumes, not restarts."""
+    phases = [RunEpochs(1)]
+    # one casualty per stage (uid = stage * miners_per_stage + slot), so
+    # every stage keeps a survivor and the epoch degrades, never stalls
+    uids = [i * 2 for i in range(n)]
+    for i, uid in enumerate(uids):
+        phases.append(KillMiner(uid=uid, at_epoch=1, after_tick=1 + i))
+    phases += [RunEpochs(1)]
+    phases += [RespawnMiner(uid=uid) for uid in uids]
+    phases += [RunEpochs(2)]
+    return Scenario(name=f"kill-{n}-miners", fault_seed=fault_seed,
+                    phases=tuple(phases), config=_config())
+
+
+def flapping_joiner(fault_seed: int = 1303) -> Scenario:
+    """One miner flaps: killed mid-epoch, respawned, killed again the
+    next epoch, respawned again.  Pass: the swarm never stalls and the
+    flapper's rejoins ride its snapshot cache both times."""
+    return Scenario(
+        name="flapping-joiner", fault_seed=fault_seed,
+        phases=(
+            RunEpochs(1),
+            KillMiner(uid=0, at_epoch=1, after_tick=1),
+            RunEpochs(1),
+            RespawnMiner(uid=0),
+            RunEpochs(1),
+            KillMiner(uid=0, at_epoch=3, after_tick=0),
+            RunEpochs(1),
+            RespawnMiner(uid=0),
+            RunEpochs(1),
+        ),
+        config=_config())
+
+
+def slow_link(fault_seed: int = 1307) -> Scenario:
+    """No crashes — a degraded network: seeded per-op latency and flaky
+    (retried) reads on every actor's transport.  Pass: trajectory equals
+    the clean run (latency faults are terminal-free), just slower."""
+    return Scenario(
+        name="slow-link", fault_seed=fault_seed,
+        phases=(RunEpochs(3),),
+        schedule=FaultSchedule(seed=fault_seed, latency_prob=0.05,
+                               latency_s=0.01, drop_get=0.05),
+        config=_config())
+
+
+def tampering_under_churn(fault_seed: int = 1311) -> Scenario:
+    """A weight-tampering miner plus a mid-epoch crash of an *honest*
+    peer: graceful degradation must not launder the tamperer — the
+    reduce audit still attributes it from wire artifacts alone.  Pass:
+    converged and the agreement matrix flags the tamperer's copies."""
+    return Scenario(
+        name="tampering-under-churn", fault_seed=fault_seed,
+        phases=(
+            RunEpochs(1),
+            KillMiner(uid=0, at_epoch=1, after_tick=1),
+            RunEpochs(1),
+            RespawnMiner(uid=0),
+            RunEpochs(1),
+        ),
+        # the agreement check is bit-exact, so even a tiny tamper flags;
+        # keeping it small lets the run also *converge* under the merged
+        # (slightly corrupted) anchor — the scenario gates attribution,
+        # not tamper survival
+        behaviors={3: MinerBehavior(tamper_weights=0.01)},
+        config=_config(sync_mode="sharded", share_codec="none"))
+
+
+def store_failover(fault_seed: int = 1313) -> Scenario:
+    """Warm-standby store: the primary dies between epochs; every client
+    reconnects to the standby and replays pending requests.  Pass: the
+    run completes and converges with no visible seam."""
+    return Scenario(
+        name="store-failover", fault_seed=fault_seed,
+        phases=(
+            RunEpochs(1),
+            FailPrimaryStore(),
+            RunEpochs(2),
+        ),
+        store_standby=True,
+        config=_config())
+
+
+SCENARIOS = {
+    "kill-n-miners": kill_n_miners,
+    "flapping-joiner": flapping_joiner,
+    "slow-link": slow_link,
+    "tampering-under-churn": tampering_under_churn,
+    "store-failover": store_failover,
+}

@@ -360,10 +360,24 @@ def test_create_rejects_store_address_for_inprocess():
                      store_address=("127.0.0.1", 1))
 
 
-def test_actor_swarm_rejects_payload_corrupting_faults():
+def test_actor_swarm_accepts_payload_corrupting_faults():
+    # chaos-first runtime: tamper/free-ride are actor-owned now — the
+    # behavior rides the spawn spec instead of being rejected
     faults = FaultModel({1: MinerBehavior(tamper_activations=0.5)})
-    with pytest.raises(ValueError, match="tamper"):
-        ActorSwarm(_mcfg(), SwarmConfig(), faults=faults)
+    swarm = ActorSwarm(_mcfg(n_layers=2), SwarmConfig(n_stages=2),
+                       faults=faults)
+    try:
+        specs = [ActorSpec("miner", m.uid, m.stage, swarm.cfg,
+                           swarm.config, swarm.train_cfg,
+                           swarm.store_address,
+                           behavior=swarm.faults.behaviors.get(m.uid))
+                 for m in swarm.miners.values()]
+        by_uid = {s.uid: s for s in specs}
+        assert by_uid[1].behavior is not None
+        assert by_uid[1].behavior.tamper_activations == 0.5
+        assert by_uid[0].behavior is None
+    finally:
+        swarm.shutdown()
 
 
 def test_actor_swarm_accepts_schedule_only_faults():

@@ -17,8 +17,8 @@ import pytest
 from conftest import SRC, run_py
 from repro.analysis import (
     ALL_RULES, ActorRuntimeRule, KeyLiteralRule, ModuleSource,
-    NoPickleEvalRule, ProtocolConformanceRule, SerdeCoverageRule,
-    SpawnSafetyRule, run_rules,
+    NoPickleEvalRule, ProtocolConformanceRule, ScenarioConformanceRule,
+    SerdeCoverageRule, SpawnSafetyRule, run_rules,
 )
 from repro.analysis.__main__ import main as lint_main
 
@@ -360,6 +360,64 @@ def test_actor_runtime_skips_unknown_bases():
         ''',
     }), [ActorRuntimeRule])
     assert found == []       # out-of-scope base: cannot judge statically
+
+
+# ---------------------------------------------------------------------------
+# scenario-conformance
+# ---------------------------------------------------------------------------
+
+
+def test_scenario_conformance_flags_missing_fault_seed():
+    found = lint({"src/repro/scenarios/custom.py": '''
+        from repro.scenarios.base import Scenario, RunEpochs
+
+        def my_experiment():
+            return Scenario(name="my-exp", phases=(RunEpochs(2),))
+    '''}, [ScenarioConformanceRule])
+    assert [f.line for f in found] == [5]
+    assert "fault_seed" in found[0].message
+
+
+def test_scenario_conformance_accepts_pinned_seed():
+    found = lint({"src/repro/scenarios/custom.py": '''
+        from repro.scenarios.base import Scenario, RunEpochs
+
+        def keyword(seed=7):
+            return Scenario(name="a", fault_seed=seed,
+                            phases=(RunEpochs(1),))
+
+        def positional():
+            return Scenario("b", 11, (RunEpochs(1),))
+    '''}, [ScenarioConformanceRule])
+    assert found == []
+
+
+def test_scenario_conformance_flags_key_literals_in_scenarios():
+    found = lint({"src/repro/scenarios/custom.py": '''
+        WATCH = "control/ep1/t0/loss"
+    '''}, [ScenarioConformanceRule])
+    assert [f.line for f in found] == [2]
+    assert "KeySchema" in found[0].message
+
+
+def test_scenario_conformance_scoped_to_scenarios_package():
+    # the same source outside repro/scenarios/ is out of scope (other
+    # rules own those namespaces)
+    found = lint({"src/repro/runtime/elsewhere.py": '''
+        def build(Scenario):
+            return Scenario(name="x", phases=())
+    '''}, [ScenarioConformanceRule])
+    assert found == []
+
+
+def test_scenario_conformance_suppression():
+    found = lint({"src/repro/scenarios/custom.py": '''
+        from repro.scenarios.base import Scenario
+
+        def exempt():
+            return Scenario(name="x", phases=())  # swarmlint: disable=scenario-conformance
+    '''}, [ScenarioConformanceRule])
+    assert found == []
 
 
 # ---------------------------------------------------------------------------
