@@ -8,11 +8,15 @@ which an already-running bench harness cannot do).
 
 The artifact records, per benchmark: us/step, final loss after the fixed
 step budget, on-wire bytes per boundary hop (int8 scales accounted), the
-schedule's bubble fraction and the peak activation-stash estimate.  The
-derived block checks the PR acceptance claims:
+timetable-measured bubble fraction and the peak activation-stash
+estimate.  The derived block checks the PR acceptance claims:
   * int8 wire codes cut wire_bytes_per_hop >= 1.9x vs bf16 at matching loss
   * 1F1B shrinks the stash vs GPipe at n_micro >= 2 * n_stages, with both
     schedules agreeing on loss to tolerance
+  * zerobubble/interleaved(V=2) land strictly below 1F1B's bubble
+    (<= 0.14 / <= 0.158 at P=4, M=8) at matching loss
+  * the int8 stash never exceeds the bf16 stash on the ring schedules
+    (the rings hold the codes+scales pair, not decoded activations)
 
 ``BENCH_QUICK=1`` shrinks the grid/steps (smoke.sh schema validation).
 """
@@ -39,12 +43,14 @@ def artifact_path() -> str:
         else ARTIFACT
 
 SCHEMA_KEYS = {"schema", "arch", "config", "benchmarks", "derived"}
-BENCH_KEYS = {"name", "schedule", "wire_codec", "us_per_step", "final_loss",
-              "wire_bytes_per_hop", "bubble_fraction", "peak_stash_bytes",
-              "stash_codes", "loop_length"}
+BENCH_KEYS = {"name", "schedule", "virtual_stages", "wire_codec",
+              "us_per_step", "final_loss", "wire_bytes_per_hop",
+              "bubble_fraction", "peak_stash_bytes", "stash_codes",
+              "grad_ring_codes", "loop_length"}
 
 
-def _scenario(name: str, schedule: str, codec: str, cfg: dict) -> dict:
+def _scenario(name: str, schedule: str, codec: str, cfg: dict,
+              virtual_stages: int = 1) -> dict:
     """One training run in a subprocess; returns the benchmark record."""
     with tempfile.NamedTemporaryFile(suffix=".jsonl", delete=False) as f:
         metrics_path = f.name
@@ -65,6 +71,10 @@ def _scenario(name: str, schedule: str, codec: str, cfg: dict) -> dict:
         "--seq-len", str(cfg["seq"]), "--log-every", str(cfg["steps"]),
         "--lr", "0.1", "--metrics-out", metrics_path,
     ]
+    if virtual_stages > 1:
+        # interleaved needs layers divisible by stages * virtual stages
+        cmd += ["--pipeline-virtual-stages", str(virtual_stages),
+                "--n-layers", str(cfg["n_stages"] * virtual_stages)]
     try:
         proc = subprocess.run(cmd, capture_output=True, text=True, env=env,
                               cwd=ROOT, timeout=1800)
@@ -78,13 +88,17 @@ def _scenario(name: str, schedule: str, codec: str, cfg: dict) -> dict:
     return {
         "name": name,
         "schedule": schedule,
+        "virtual_stages": stats.get("virtual_stages", 1),
         "wire_codec": codec,
         "us_per_step": final["us_per_step"],
         "final_loss": round(final["loss"], 6),
         "wire_bytes_per_hop": stats["wire_bytes_per_hop"],
+        # timetable-measured idle fraction (schedule_stats derives it from
+        # the compiled Timetable, not the closed form)
         "bubble_fraction": round(stats["bubble_fraction"], 4),
         "peak_stash_bytes": stats["stash_bytes"],
         "stash_codes": stats["stash_codes"],
+        "grad_ring_codes": stats.get("grad_ring_codes", 0),
         "loop_length": stats["loop_length"],
     }
 
@@ -101,17 +115,27 @@ def run() -> None:
         "bottleneck_dim": 16,
     }
     grid = [
-        ("gpipe_bf16", "gpipe", "none"),
-        ("gpipe_int8", "gpipe", "int8"),
-        ("1f1b_bf16", "1f1b", "none"),
-        ("1f1b_int8", "1f1b", "int8"),
+        ("gpipe_bf16", "gpipe", "none", 1),
+        ("gpipe_int8", "gpipe", "int8", 1),
+        ("1f1b_bf16", "1f1b", "none", 1),
+        ("1f1b_int8", "1f1b", "int8", 1),
+        ("zerobubble_bf16", "zerobubble", "none", 1),
+        ("zerobubble_int8", "zerobubble", "int8", 1),
+        # V=2 doubles the layer count (8 layers as 4 stages x 2 chunks),
+        # so us_per_step is not comparable to the 4-layer rows; the bubble
+        # and stash columns are the point
+        ("interleaved_v2_bf16", "interleaved", "none", 2),
+        ("interleaved_v2_int8", "interleaved", "int8", 2),
     ]
     if quick:
-        grid = [("gpipe_bf16", "gpipe", "none"), ("1f1b_int8", "1f1b", "int8")]
+        grid = [("gpipe_bf16", "gpipe", "none", 1),
+                ("1f1b_int8", "1f1b", "int8", 1),
+                ("zerobubble_bf16", "zerobubble", "none", 1),
+                ("interleaved_v2_bf16", "interleaved", "none", 2)]
 
     benches = []
-    for name, schedule, codec in grid:
-        rec = _scenario(name, schedule, codec, cfg)
+    for name, schedule, codec, v in grid:
+        rec = _scenario(name, schedule, codec, cfg, virtual_stages=v)
         benches.append(rec)
         emit(f"pipeline/{name}", rec["us_per_step"],
              f"loss={rec['final_loss']};bytes_hop={rec['wire_bytes_per_hop']};"
@@ -148,9 +172,33 @@ def run() -> None:
                 < by["gpipe_bf16"]["peak_stash_bytes"]),
             "1f1b_loss_match_1pct": derived["loss_gap_1f1b_vs_gpipe"] < 0.01,
         }
+    # ISSUE 9 acceptance: the new schedules' timetable-measured bubbles
+    # land strictly below 1F1B's, and the int8 ring stash regression
+    # (codes stashed alongside decoded bf16) stays fixed
+    acc = derived.setdefault("acceptance", {})
+    base_bubble = by["1f1b_bf16"]["bubble_fraction"] if "1f1b_bf16" in by \
+        else (cfg["n_stages"] - 1) / (cfg["n_microbatches"]
+                                      + cfg["n_stages"] - 1)
+    if "zerobubble_bf16" in by:
+        zb = by["zerobubble_bf16"]
+        acc["zerobubble_bubble_le_0p14"] = zb["bubble_fraction"] <= 0.14
+        acc["zerobubble_beats_1f1b"] = zb["bubble_fraction"] < base_bubble
+        derived["loss_gap_zerobubble_vs_gpipe"] = round(
+            gap(zb["final_loss"], by["gpipe_bf16"]["final_loss"]), 6)
+        acc["zerobubble_loss_match_1pct"] = \
+            derived["loss_gap_zerobubble_vs_gpipe"] < 0.01
+    if "interleaved_v2_bf16" in by:
+        il = by["interleaved_v2_bf16"]
+        acc["interleaved_bubble_le_0p158"] = il["bubble_fraction"] <= 0.158
+        acc["interleaved_beats_1f1b"] = il["bubble_fraction"] < base_bubble
+    for sched in ("1f1b", "zerobubble", "interleaved_v2"):
+        b16, i8 = f"{sched}_bf16", f"{sched}_int8"
+        if b16 in by and i8 in by:
+            acc[f"{sched}_int8_stash_not_larger"] = (
+                by[i8]["peak_stash_bytes"] <= by[b16]["peak_stash_bytes"])
 
     artifact = {
-        "schema": "bench_pipeline/v1",
+        "schema": "bench_pipeline/v2",
         "arch": f"{cfg['arch']} (smoke)",
         "config": {k: v for k, v in cfg.items() if k != "arch"},
         "quick": quick,
@@ -171,7 +219,7 @@ def validate_artifact(path: str | None = None) -> dict:
         art = json.load(f)
     missing = SCHEMA_KEYS - set(art)
     assert not missing, f"BENCH_pipeline.json missing keys: {missing}"
-    assert art["schema"] == "bench_pipeline/v1", art["schema"]
+    assert art["schema"] == "bench_pipeline/v2", art["schema"]
     assert art["benchmarks"], "no benchmark records"
     for rec in art["benchmarks"]:
         miss = BENCH_KEYS - set(rec)

@@ -25,7 +25,9 @@
 # kill-and-resume and store-failover scenarios from repro.scenarios on a
 # real spawned fleet — docs/CHAOS.md), a short 1F1B+int8 pipelined
 # training run
-# (launch/train.py --strategy pipeline), and `benchmarks/run.py --quick`
+# (launch/train.py --strategy pipeline), an interleaved virtual-stage run
+# (--pipeline-schedule interleaved --pipeline-virtual-stages 2, exercising
+# the schedule compiler's V>1 chunk path), and `benchmarks/run.py --quick`
 # (reduced pipeline + butterfly + chaos-matrix benches that
 # hard-validate the BENCH_pipeline.json / BENCH_butterfly.json /
 # BENCH_chaos.json schemas).
@@ -82,6 +84,16 @@ XLA_FLAGS=--xla_force_host_platform_device_count=2 \
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
 python -m repro.launch.train --arch llama3.2-1b --smoke \
     --strategy pipeline --pipeline-schedule 1f1b --wire-codec int8 \
+    --pipeline-microbatches 4 --steps 6 --batch-size 4 --seq-len 16 \
+    --log-every 3
+
+echo
+echo "== smoke: interleaved pipeline quickstart (2 stages x 2 virtual) =="
+XLA_FLAGS=--xla_force_host_platform_device_count=2 \
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+python -m repro.launch.train --arch llama3.2-1b --smoke \
+    --strategy pipeline --pipeline-schedule interleaved \
+    --pipeline-virtual-stages 2 --n-layers 4 --wire-codec int8 \
     --pipeline-microbatches 4 --steps 6 --batch-size 4 --seq-len 16 \
     --log-every 3
 

@@ -23,6 +23,7 @@ from repro.analysis.rules_keys import KeyLiteralRule
 from repro.analysis.rules_protocol import ProtocolConformanceRule
 from repro.analysis.rules_safety import NoPickleEvalRule, SpawnSafetyRule
 from repro.analysis.rules_scenario import ScenarioConformanceRule
+from repro.analysis.rules_schedule import ScheduleRegistryRule
 from repro.analysis.rules_serde import SerdeCoverageRule
 
 ALL_RULES = (
@@ -33,6 +34,7 @@ ALL_RULES = (
     NoPickleEvalRule,
     SpawnSafetyRule,
     ScenarioConformanceRule,
+    ScheduleRegistryRule,
 )
 
 __all__ = [
@@ -46,6 +48,7 @@ __all__ = [
     "ProtocolConformanceRule",
     "Rule",
     "ScenarioConformanceRule",
+    "ScheduleRegistryRule",
     "SerdeCoverageRule",
     "SpawnSafetyRule",
     "load_paths",

@@ -1,0 +1,121 @@
+"""schedule-registry: pipeline schedule names come from the compiler.
+
+PR 9 made ``repro.core.pipeline.SCHEDULES`` the single registry of
+compiled schedules (the ``Timetable`` builder validates every member).
+A stringly-typed schedule elsewhere — ``schedule="zb-h1"`` in a config,
+``cfg.pipeline_schedule == "1f1b "`` in a branch — would silently miss
+the compiler's validation and either assert deep inside shard_map or,
+worse, fall through an if/else chain to the wrong executor.  This rule
+makes the registry authoritative: any string literal used as a
+``schedule=``/``pipeline_schedule=`` value, default, or comparison
+operand outside ``repro/core/pipeline.py`` must be a registry member.
+
+The registry is read from the *scanned* pipeline module's AST (the
+``SCHEDULES = (...)`` tuple), not imported — swarmlint never imports
+jax.  Scan roots that exclude ``repro.core.pipeline`` yield no findings
+(nothing to check against).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, Iterator, Optional
+
+from repro.analysis.framework import Finding, Project, Rule
+
+REGISTRY_MODULE = "repro.core.pipeline"
+REGISTRY_NAME = "SCHEDULES"
+# names whose string values this rule treats as schedule identifiers
+SCHEDULE_NAMES = ("schedule", "pipeline_schedule")
+
+
+def _registry_values(tree: ast.AST) -> Optional[frozenset]:
+    """The string members of the module-level ``SCHEDULES = (...)``."""
+    for node in ast.walk(tree):
+        value = None
+        if isinstance(node, ast.Assign):
+            if any(isinstance(t, ast.Name) and t.id == REGISTRY_NAME
+                   for t in node.targets):
+                value = node.value
+        elif isinstance(node, ast.AnnAssign):
+            if (isinstance(node.target, ast.Name)
+                    and node.target.id == REGISTRY_NAME):
+                value = node.value
+        if isinstance(value, (ast.Tuple, ast.List)):
+            vals = [e.value for e in value.elts
+                    if isinstance(e, ast.Constant)
+                    and isinstance(e.value, str)]
+            if vals:
+                return frozenset(vals)
+    return None
+
+
+def _is_schedule_ref(node: ast.AST) -> bool:
+    """Does this expression name a schedule field/variable?"""
+    if isinstance(node, ast.Name):
+        return node.id in SCHEDULE_NAMES
+    if isinstance(node, ast.Attribute):
+        return node.attr in SCHEDULE_NAMES
+    return False
+
+
+def _str_consts(node: ast.AST) -> Iterator[ast.Constant]:
+    """String constants in an expression, descending into tuples/lists
+    (``x.schedule in ("gpipe", "1f1b")`` compares against each member)."""
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        yield node
+    elif isinstance(node, (ast.Tuple, ast.List, ast.Set)):
+        for e in node.elts:
+            yield from _str_consts(e)
+
+
+class ScheduleRegistryRule(Rule):
+    name = "schedule-registry"
+    description = ("schedule string literals outside repro/core/pipeline.py "
+                   "must name members of the compiler registry (SCHEDULES)")
+
+    def check_project(self, project: Project) -> Iterable[Finding]:
+        reg_mod = project.find(REGISTRY_MODULE)
+        if reg_mod is None:
+            return
+        registry = _registry_values(reg_mod.tree)
+        if registry is None:
+            yield Finding(
+                self.name, reg_mod.rel, 1,
+                f"{REGISTRY_NAME} tuple of string literals not found in "
+                f"{REGISTRY_MODULE} — the schedule registry must stay "
+                f"statically readable")
+            return
+        for m in project.modules:
+            if m.module == REGISTRY_MODULE:
+                continue
+            for node in ast.walk(m.tree):
+                yield from self._check_node(m, node, registry)
+
+    def _check_node(self, module, node: ast.AST,
+                    registry: frozenset) -> Iterator[Finding]:
+        candidates: list[ast.Constant] = []
+        if isinstance(node, ast.Call):
+            # Swarm-/PipelineSpec-style constructor keywords:
+            #   PipelineSpec(..., schedule="1f1b")
+            for kw in node.keywords:
+                if kw.arg in SCHEDULE_NAMES:
+                    candidates.extend(_str_consts(kw.value))
+        elif isinstance(node, (ast.Assign, ast.AnnAssign)):
+            # defaults/field declarations: pipeline_schedule: str = "gpipe"
+            targets = (node.targets if isinstance(node, ast.Assign)
+                       else [node.target])
+            if any(_is_schedule_ref(t) for t in targets) and node.value:
+                candidates.extend(_str_consts(node.value))
+        elif isinstance(node, ast.Compare):
+            # cfg.schedule == "1f1b" / spec.schedule in ("gpipe", "1f1b")
+            sides = [node.left, *node.comparators]
+            if any(_is_schedule_ref(s) for s in sides):
+                for s in sides:
+                    candidates.extend(_str_consts(s))
+        for const in candidates:
+            if const.value not in registry:
+                yield Finding(
+                    self.name, module.rel, const.lineno,
+                    f"schedule literal {const.value!r} is not in "
+                    f"{REGISTRY_MODULE}.{REGISTRY_NAME} "
+                    f"{tuple(sorted(registry))}")

@@ -38,8 +38,12 @@ class SwarmConfig:
     # scenario, the dequantized codes are what miners train on)
     wire_codec: str = "none"
     # on-mesh pipeline-engine knobs, surfaced so scenarios/benches mint
-    # their PipelineSpec from the swarm config (see pipeline_spec())
-    pipeline_schedule: str = "gpipe"  # "gpipe" | "1f1b"
+    # their PipelineSpec from the swarm config (see pipeline_spec()).
+    # pipeline_schedule must name a compiled schedule from
+    # repro.core.pipeline.SCHEDULES; pipeline_virtual_stages > 1 splits
+    # each device's model slice into V chunks (interleaved only)
+    pipeline_schedule: str = "gpipe"
+    pipeline_virtual_stages: int = 1
     pipeline_microbatches: int = 8
     outer_lr: float = 0.7
     outer_momentum: float = 0.9
@@ -59,8 +63,14 @@ class SwarmConfig:
         # a typo'd codec would silently fall through to the uncompressed
         # gradient wire (TrainingPhase gates on the exact string) — fail loud
         assert self.wire_codec in ("none", "int8"), self.wire_codec
-        assert self.pipeline_schedule in ("gpipe", "1f1b"), \
-            self.pipeline_schedule
+        # schedule names come from the compiler registry, not a literal
+        # tuple kept in sync by hand (swarmlint enforces the same rule on
+        # call sites); imported lazily so merely importing this module
+        # stays jax-free
+        from repro.core.pipeline import SCHEDULES
+        assert self.pipeline_schedule in SCHEDULES, self.pipeline_schedule
+        assert self.pipeline_virtual_stages >= 1, \
+            self.pipeline_virtual_stages
         assert self.sync_mode in ("dense", "sharded"), self.sync_mode
         assert self.retain_epochs is None or self.retain_epochs >= 1, \
             f"retain_epochs must be None or >= 1: {self.retain_epochs}"
@@ -85,6 +95,7 @@ class SwarmConfig:
             bottleneck_dim=self.bottleneck_dim,
             schedule=self.pipeline_schedule,
             wire_codec=self.wire_codec,
+            virtual_stages=self.pipeline_virtual_stages,
         )
 
 

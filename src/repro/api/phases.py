@@ -105,6 +105,14 @@ class TrainingPhase:
 
     def run(self, swarm, state: EpochState) -> None:
         S = swarm.config
+        if getattr(S, "pipeline_virtual_stages", 1) != 1:
+            # one miner owns one contiguous stage slice; an interleaved
+            # timetable would need each miner to hold V disjoint chunks
+            # and the store schema to key activations by chunk, not stage
+            raise NotImplementedError(
+                "store-path training is stage-granular: "
+                "pipeline_virtual_stages > 1 only applies to the on-mesh "
+                "engine (repro.core.pipeline / launch.train)")
         tp, schema = swarm.transport, swarm.transport.schema
         for tick in range(S.inner_steps):
             batch = swarm.corpus.batch(swarm.global_tick)

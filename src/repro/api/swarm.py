@@ -124,6 +124,15 @@ class Swarm:
         ``runtime.chaos.FaultSchedule``) wraps every actor's transport
         in deterministic fault injection, ``store_standby`` runs a warm
         store replica with client-side failover."""
+        config = config or SwarmConfig()
+        # fail fast: compile the pipeline timetable these knobs describe
+        # (schedule registry membership, microbatch/virtual-stage
+        # divisibility) before any store or actor machinery spins up —
+        # a bad combination should not surface mid-epoch in a subprocess
+        from repro.core.pipeline import compile_timetable
+        compile_timetable(config.pipeline_schedule, config.n_stages,
+                          config.pipeline_microbatches,
+                          config.pipeline_virtual_stages)
         if runtime == "actors":
             if phases is not None or transport is not None:
                 raise ValueError(
@@ -131,7 +140,7 @@ class Swarm:
                     "phases=/transport= only apply to the in-process "
                     "runtime")
             from repro.runtime.actor import ActorSwarm
-            return ActorSwarm(model_cfg, config or SwarmConfig(),
+            return ActorSwarm(model_cfg, config,
                               faults=faults, train_cfg=train_cfg,
                               store_address=store_address,
                               snapshot_root=snapshot_root,
@@ -150,7 +159,7 @@ class Swarm:
                 "runtime='actors' (the chaos toolkit wraps actor "
                 "processes; the lockstep oracle stays fault-free)")
         driver = EpochDriver(phases) if phases is not None else None
-        return cls(model_cfg, config or SwarmConfig(), faults=faults,
+        return cls(model_cfg, config, faults=faults,
                    transport=transport, train_cfg=train_cfg, driver=driver)
 
     # ------------------------------------------------------------------

@@ -1,12 +1,12 @@
-"""Pipeline-parallel engine (paper C1 + C3 on-mesh): GPipe and 1F1B
+"""Pipeline-parallel engine (paper C1 + C3 on-mesh): a schedule *compiler*
 
-schedules in ``shard_map`` with the ``model`` mesh axis as the stage axis,
-streaming microbatch activations stage-to-stage via ``ppermute`` — and, when
-``compress=True``, streaming the paper's *bottleneck codes* (width d_b)
-instead of full-width activations, cutting inter-stage bytes by
-d_model/d_b (64x for the paper's 2048->32).  ``wire_codec="int8"`` quantizes
-the codes on the wire (per-block symmetric int8, one fp32 scale per block),
-doubling 64x to the paper's headline 128x.
+plus one generalized slot executor, in ``shard_map`` with the ``model`` mesh
+axis as the stage axis, streaming microbatch activations stage-to-stage via
+``ppermute`` — and, when ``compress=True``, streaming the paper's
+*bottleneck codes* (width d_b) instead of full-width activations, cutting
+inter-stage bytes by d_model/d_b (64x for the paper's 2048->32).
+``wire_codec="int8"`` ships quantized codes on the wire (per-block symmetric
+int8, one fp32 scale per block), doubling 64x to the paper's headline 128x.
 
 Faithfulness map:
   miners on one layer-slice   -> devices in one model-axis row
@@ -16,29 +16,39 @@ Faithfulness map:
                                  the previous boundary)
   DP across pipeline replicas -> ``data`` (x ``pod``) axes
 
-Schedules (``PipelineSpec.schedule``):
-  * ``"gpipe"``  — the golden reference: T = n_micro + n_stages - 1 ticks;
-    autodiff through the tick scan gives the backward pipeline automatically
-    (transpose of ppermute = reverse-direction ppermute), so gradients of
-    the wire codes are compressed exactly like activations — the paper's
-    symmetrical 128x.  The checkpointed tick body stashes one wire code per
-    tick: stash ~ (n_micro + n_stages - 1) codes.
-  * ``"1f1b"``   — one-forward-one-backward: an explicit-backward slot loop
-    (``jax.vjp`` per stage inside the scan, ``jax.custom_vjp`` over the
-    whole step so ``jax.grad`` still works) that caps in-flight microbatches
-    at ``n_stages - stage``, shrinking the activation stash to a
-    min(n_stages, n_micro)-slot ring of wire codes.  Slot timetable
-    (equal F/B cost, slot granularity; stage s of P, micro m of M):
+Schedules (``PipelineSpec.schedule``; registry ``SCHEDULES``) are all
+compiled by ``compile_timetable`` into one ``Timetable``: per-stage,
+per-slot role tables over {idle, F, B, W} plus a ring-stash plan (which
+ring slot every arriving wire code is written to, and which ring slot every
+unit reads).  The timetable is the single source of truth for execution
+order, stash lifetime, wire hops, and bubble accounting:
+
+  * ``"gpipe"``  — the golden reference: T = n_micro + n_stages - 1 forward
+    ticks; autodiff through the tick scan gives the backward pipeline
+    automatically (transpose of ppermute = reverse-direction ppermute), so
+    gradients of the wire codes are compressed exactly like activations —
+    the paper's symmetrical 128x.  The tick loop's ingest/collect index
+    tables are derived from the compiled timetable.  Bubble
+    (P-1)/(M+P-1); stash ~ one wire code per tick (checkpointed carry).
+  * ``"1f1b"``   — one-forward-one-backward, run by the slot executor.
+    Slot maps (equal F/B cost, slot granularity; stage s of P, micro m):
         f(s, m) = s + m              for m <  P - s   (warmup)
-        f(s, m) = 2m + s             for m >= P - s   (steady: F paired
-                                                       with B(s, m-(P-s)))
+        f(s, m) = 2m + s             for m >= P - s   (steady)
         b(s, m) = 2P - 1 - s + 2m
-    Forward sends are consumed exactly one slot later (f(s+1,m) = f(s,m)+1),
-    likewise backward sends, so each slot is one ppermute in each direction.
-    F and B slots never collide on a stage (disjoint parity), matching the
-    real schedule's one-unit-of-work-per-slot; in the lockstep SPMD body
-    both paths are computed and mask-selected, which is the usual price of
-    expressing an asymmetric schedule as one SPMD program.
+    Same bubble as GPipe but the activation stash shrinks to a
+    min(P, M)-slot ring of wire codes.
+  * ``"interleaved"`` — Megatron-style virtual stages: each device hosts
+    V > 1 *chunks* (chunk c on device c % P, local index c // P), walked
+    in groups of P microbatches with a depth-staggered warmup, shrinking
+    the bubble to (P-1)/(V*M+P-1).  Needs M % P == 0.  Chunk boundaries
+    all carry the wire codec, so interleaved (P, V) is the *same model* as
+    gpipe at P*V stages — the loss-parity oracle used by the tests.
+  * ``"zerobubble"`` — ZB-H1-style split of backward slots into
+    activation-grad ``B`` (sends the upstream cotangent as early as 1F1B
+    does) and weight-grad ``W`` (fills former idle slots).  Bubble drops
+    to ~1 - 3M/K ≈ 0.11 at P=4/M=8; the W slots re-run the stage forward
+    from the stashed code (recompute-from-wire design), and the cotangent
+    ring keeps each B's seed alive until its W consumes it.
 
 Boundary codecs: the stage-exit encode (RMSNorm -> W_down -> wire cast) and
 stage-entry decode (alpha * (z @ W_up)) run as fused Pallas kernels
@@ -47,7 +57,14 @@ write of the 64x-smaller code.  Dispatch follows the ``kernels/ops.py``
 policy — compiled Pallas on TPU, the identical-math ref.py oracle on other
 backends, the kernel bodies under interpret=True when
 ``REPRO_FORCE_PALLAS_INTERPRET=1`` (how the CPU equivalence suite pins
-kernel == oracle).
+kernel == oracle).  Under ``wire_codec="int8"`` the slot executor ships and
+*stashes* the physical (int8 codes, fp32 scales) pair — the ring holds the
+compressed form and dequantizes at consumption (bit-identical to the old
+dequantize-then-stash, since q * scale is exact in f32), so the int8 stash
+is ~2x smaller than bf16 instead of 2x larger.  The GPipe autodiff carry
+must stay a float tensor (an int8 carry would sever the straight-through
+gradient channel across the scan transpose), so only the explicit-schedule
+rings get the compressed stash.
 
 Used by ``--strategy pipeline`` in launch/train.py + launch/dryrun.py and by
 benchmarks/bench_pipeline.py (BENCH_pipeline.json).
@@ -55,6 +72,7 @@ benchmarks/bench_pipeline.py (BENCH_pipeline.json).
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Any
 
 import jax
@@ -78,8 +96,18 @@ from repro.models.layers import logits as logits_fn
 from repro.common import shard_map_unchecked as _shard_map
 
 
-SCHEDULES = ("gpipe", "1f1b")
+SCHEDULES = ("gpipe", "1f1b", "interleaved", "zerobubble")
 WIRE_CODECS = ("none", "int8")
+
+# Timetable roles: every (stage, slot) cell does exactly one of these.
+ROLE_IDLE, ROLE_F, ROLE_B, ROLE_W = 0, 1, 2, 3
+ROLE_NAMES = ("idle", "F", "B", "W")
+
+_NEVER = 1 << 30
+
+
+class ScheduleError(ValueError):
+    """A (schedule, P, M, V) combination the compiler rejects."""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -89,24 +117,360 @@ class PipelineSpec:
     compress: bool = True            # stream bottleneck codes, not residuals
     bottleneck_dim: int = 32
     wire_dtype: Any = jnp.bfloat16
-    schedule: str = "gpipe"          # "gpipe" (golden) | "1f1b"
+    schedule: str = "gpipe"          # one of SCHEDULES (compiler registry)
     wire_codec: str = "none"         # "none" | "int8" (quantized codes)
     fuse_boundary: bool = True       # fused Pallas boundary encode/decode
+    virtual_stages: int = 1          # chunks per device (interleaved only)
 
     def __post_init__(self):
-        assert self.schedule in SCHEDULES, self.schedule
         assert self.wire_codec in WIRE_CODECS, self.wire_codec
         assert self.wire_codec == "none" or self.compress, \
             "int8 wire codec quantizes bottleneck codes; needs compress=True"
+        # one compile validates schedule name, V, and M % P constraints
+        # (lru-cached, so every later timetable() call is free)
+        compile_timetable(self.schedule, self.n_stages, self.n_microbatches,
+                          self.virtual_stages)
+
+    @property
+    def n_chunks(self) -> int:
+        """Model chunks = codec boundaries + 1: P * V."""
+        return self.n_stages * self.virtual_stages
+
+    def timetable(self) -> "Timetable":
+        return compile_timetable(self.schedule, self.n_stages,
+                                 self.n_microbatches, self.virtual_stages)
 
     def wire_width(self, cfg: ModelConfig) -> int:
         return self.bottleneck_dim if self.compress else cfg.d_model
 
     def carry_dtype(self):
-        """On-device dtype of the wire carry.  int8 codes dequantize to
-        exact f32 products (q * scale), so the carry holds f32; the on-wire
-        bytes are what ``wire_bytes_per_hop`` accounts."""
+        """On-device dtype of a *decoded* wire code.  int8 codes dequantize
+        to exact f32 products (q * scale), so decoded carries hold f32; the
+        explicit-schedule rings stash the (int8, scales) pair instead
+        (``schedule_stats``/``wire_bytes_per_hop`` account both honestly)."""
         return jnp.float32 if self.wire_codec == "int8" else self.wire_dtype
+
+
+# ---------------------------------------------------------------------------
+# Schedule compiler: (schedule, P, M, V) -> Timetable
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class Timetable:
+    """Compiled slot program for one pipeline schedule.
+
+    All per-slot tables are (P, K) int32, indexed [stage, slot].  ``role``
+    says what the stage does that slot; ``micro``/``vstage`` which
+    (microbatch, local chunk) the unit works on (0 when idle).  The ring
+    plan: ``z_arrive[d, t]`` is the forward-ring slot an arriving wire code
+    is written to at slot t (-1: no arrival); ``z_src[d, t]`` the ring slot
+    this slot's unit reads its input code from.  ``g_arrive``/``g_src``
+    are the same for the backward (cotangent) ring — for ``zerobubble`` a
+    cotangent stays live from its B until its W consumes it.
+
+    ``f_slot``/``b_slot``/``w_slot`` are the raw (C, M) slot maps (w_slot
+    is -1 outside zerobubble) kept for tests and accounting.
+    """
+    schedule: str
+    n_stages: int
+    n_virtual: int
+    n_micro: int
+    n_slots: int
+    role: np.ndarray
+    micro: np.ndarray
+    vstage: np.ndarray
+    z_ring: int
+    g_ring: int
+    z_arrive: np.ndarray
+    z_src: np.ndarray
+    g_arrive: np.ndarray
+    g_src: np.ndarray
+    f_slot: np.ndarray
+    b_slot: np.ndarray
+    w_slot: np.ndarray
+
+    @property
+    def n_chunks(self) -> int:
+        return self.n_stages * self.n_virtual
+
+    def work_units(self) -> int:
+        return int((self.role != ROLE_IDLE).sum())
+
+    def bubble_fraction(self) -> float:
+        """Measured idle fraction of the executed timetable (not a closed
+        form): 1 - work cells / (P * K)."""
+        return 1.0 - self.work_units() / (self.n_stages * self.n_slots)
+
+
+def _interleaved_slots(Pn: int, M: int, V: int):
+    """Megatron-order virtual-stage schedule: per device, M//P groups of P
+    microbatches walk the V chunks (forward: shallow->deep, backward:
+    deep->shallow) with a depth-staggered warmup of (V-1)*P + (P-d)
+    forwards, then strict B/F alternation; units dispatch in list order as
+    soon as their producer's hand-off (one-slot transit) has arrived.
+    Hits the ideal K = 2(VM + P - 1), i.e. bubble (P-1)/(VM+P-1)."""
+    C = Pn * V
+    orders = []
+    for d in range(Pn):
+        fseq = [("F", v * Pn + d, g * Pn + i)
+                for g in range(M // Pn) for v in range(V) for i in range(Pn)]
+        bseq = [("B", v * Pn + d, g * Pn + i)
+                for g in range(M // Pn) for v in reversed(range(V))
+                for i in range(Pn)]
+        warm = min((V - 1) * Pn + (Pn - d), len(fseq))
+        order = list(fseq[:warm])
+        fi, bi = warm, 0
+        while fi < len(fseq) or bi < len(bseq):
+            if bi < len(bseq):
+                order.append(bseq[bi])
+                bi += 1
+            if fi < len(fseq):
+                order.append(fseq[fi])
+                fi += 1
+        orders.append(order)
+
+    f: dict = {}
+    b: dict = {}
+    ptr = [0] * Pn
+    t = 0
+    while any(ptr[d] < len(orders[d]) for d in range(Pn)):
+        for d in range(Pn):
+            if ptr[d] >= len(orders[d]):
+                continue
+            kind, c, m = orders[d][ptr[d]]
+            if kind == "F":
+                ready = c == 0 or f.get((c - 1, m), _NEVER) + 1 <= t
+            elif c == C - 1:
+                ready = f.get((c, m), _NEVER) + 1 <= t
+            else:
+                ready = ((c, m) in f
+                         and b.get((c + 1, m), _NEVER) + 1 <= t)
+            if ready:
+                (f if kind == "F" else b)[(c, m)] = t
+                ptr[d] += 1
+        t += 1
+        if t > 4 * (V * M + Pn) + 8:
+            raise ScheduleError(
+                f"interleaved dispatch deadlocked at P={Pn} M={M} V={V}")
+    return f, b, max(b.values()) + 1
+
+
+def _slot_maps(schedule: str, Pn: int, M: int, V: int):
+    """(f, b, w) slot dicts keyed (chunk, micro) plus loop length K."""
+    f: dict = {}
+    b: dict = {}
+    w: dict = {}
+    if schedule == "gpipe":
+        Kf = M + Pn - 1
+        for s in range(Pn):
+            for m in range(M):
+                f[(s, m)] = s + m
+                b[(s, m)] = Kf + (Pn - 1 - s) + m
+        K = 2 * Kf
+    elif schedule in ("1f1b", "zerobubble"):
+        for s in range(Pn):
+            for m in range(M):
+                f[(s, m)] = s + m if m < Pn - s else 2 * m + s
+                b[(s, m)] = 2 * Pn - 1 - s + 2 * m
+        K = 2 * (M + Pn - 1)
+        if schedule == "zerobubble":
+            # W(s, m) fills the first idle slot after its own B(s, m) —
+            # in-order per stage, so the cotangent ring frees FIFO
+            for s in range(Pn):
+                used = ({f[(s, m)] for m in range(M)}
+                        | {b[(s, m)] for m in range(M)})
+                t = 0
+                for m in range(M):
+                    t = max(t, b[(s, m)] + 1)
+                    while t in used:
+                        t += 1
+                    w[(s, m)] = t
+                    used.add(t)
+            K = max(K, max(w.values()) + 1)
+    else:
+        f, b, K = _interleaved_slots(Pn, M, V)
+    return f, b, w, K
+
+
+def _greedy_ring(entries: dict):
+    """First-free interval allocation: {key: (arrive, last_use)} ->
+    ({key: ring_slot}, capacity).  A ring slot frees the slot after its
+    entry's last consumer."""
+    free_at: list = []
+    assign: dict = {}
+    for key, (arrive, last) in sorted(entries.items(),
+                                      key=lambda kv: (kv[1][0], kv[0])):
+        for i, fa in enumerate(free_at):
+            if fa <= arrive:
+                assign[key] = i
+                free_at[i] = last + 1
+                break
+        else:
+            assign[key] = len(free_at)
+            free_at.append(last + 1)
+    return assign, max(1, len(free_at))
+
+
+def _check_timetable(tt: "Timetable"):
+    """Self-check: one unit per cell, F < B < W per (chunk, micro) with
+    one-slot transit between neighbours, every send matched by a receive,
+    and ring lifetimes within the declared capacities."""
+    Pn, V, M, K = tt.n_stages, tt.n_virtual, tt.n_micro, tt.n_slots
+    C = Pn * V
+    for c in range(C):
+        d = c % Pn
+        for m in range(M):
+            fs, bs = int(tt.f_slot[c, m]), int(tt.b_slot[c, m])
+            if not 0 <= fs < bs < K:
+                raise ScheduleError(f"F/B order broken: chunk {c} micro {m}")
+            if c > 0 and fs < int(tt.f_slot[c - 1, m]) + 1:
+                raise ScheduleError(f"F transit broken: chunk {c} micro {m}")
+            if c < C - 1 and bs < int(tt.b_slot[c + 1, m]) + 1:
+                raise ScheduleError(f"B transit broken: chunk {c} micro {m}")
+            ws = int(tt.w_slot[c, m])
+            if ws >= 0 and not bs < ws < K:
+                raise ScheduleError(f"W order broken: chunk {c} micro {m}")
+            if c > 0:
+                # the code sent at f(c-1, m) must be received into the ring
+                # one slot later on this chunk's device
+                if int(tt.z_arrive[d, int(tt.f_slot[c - 1, m]) + 1]) < 0:
+                    raise ScheduleError(
+                        f"unmatched F send: chunk {c - 1} micro {m}")
+            if c < C - 1:
+                if int(tt.g_arrive[d, int(tt.b_slot[c + 1, m]) + 1]) < 0:
+                    raise ScheduleError(
+                        f"unmatched B send: chunk {c + 1} micro {m}")
+    counts = [(tt.role == r).sum() for r in (ROLE_F, ROLE_B, ROLE_W)]
+    expect_w = C * M if (tt.w_slot >= 0).any() else 0
+    if counts[0] != C * M or counts[1] != C * M or counts[2] != expect_w:
+        raise ScheduleError(f"role counts off: {counts}")
+    if (tt.z_arrive >= tt.z_ring).any() or (tt.z_src >= tt.z_ring).any():
+        raise ScheduleError("z ring index out of capacity")
+    if (tt.g_arrive >= tt.g_ring).any() or (tt.g_src >= tt.g_ring).any():
+        raise ScheduleError("g ring index out of capacity")
+
+
+@functools.lru_cache(maxsize=None)
+def compile_timetable(schedule: str, n_stages: int, n_micro: int,
+                      n_virtual: int = 1) -> Timetable:
+    """Compile + validate the slot program for one schedule point."""
+    if schedule not in SCHEDULES:
+        raise ScheduleError(
+            f"unknown schedule {schedule!r}; registry: {SCHEDULES}")
+    Pn, M, V = int(n_stages), int(n_micro), int(n_virtual)
+    if Pn < 1 or M < 1:
+        raise ScheduleError(f"need n_stages, n_micro >= 1: {Pn}, {M}")
+    if schedule == "interleaved":
+        if V < 2:
+            raise ScheduleError(
+                "interleaved needs virtual_stages >= 2 (V=1 is exactly "
+                "1f1b; use that)")
+        if Pn < 2:
+            raise ScheduleError("interleaved needs n_stages >= 2")
+        if M % Pn != 0:
+            raise ScheduleError(
+                f"interleaved walks microbatches in groups of P: need "
+                f"n_microbatches % n_stages == 0, got {M} % {Pn}")
+    elif V != 1:
+        raise ScheduleError(
+            f"{schedule} runs one chunk per device (virtual_stages=1)")
+
+    C = Pn * V
+    f, b, w, K = _slot_maps(schedule, Pn, M, V)
+
+    role = np.zeros((Pn, K), np.int32)
+    micro = np.zeros((Pn, K), np.int32)
+    vstage = np.zeros((Pn, K), np.int32)
+    for tbl, r in ((f, ROLE_F), (b, ROLE_B), (w, ROLE_W)):
+        for (c, m), t in tbl.items():
+            d = c % Pn
+            if role[d, t] != ROLE_IDLE:
+                raise ScheduleError(
+                    f"slot conflict: stage {d} slot {t} "
+                    f"({ROLE_NAMES[role[d, t]]} vs {ROLE_NAMES[r]})")
+            role[d, t] = r
+            micro[d, t] = m
+            vstage[d, t] = c // Pn
+
+    # ring plans: a stashed input code lives arrival -> last recompute
+    # (W if the schedule splits backward, else B); a cotangent lives
+    # arrival -> its consumer (B, and W for zerobubble)
+    def last_use(c, m):
+        return w[(c, m)] if w else b[(c, m)]
+
+    z_assign: dict = {}
+    g_assign: dict = {}
+    z_cap = g_cap = 1
+    for d in range(Pn):
+        z_entries = {(c, m): (f[(c - 1, m)] + 1, last_use(c, m))
+                     for c in range(C) for m in range(M)
+                     if c % Pn == d and c > 0}
+        g_entries = {(c, m): (b[(c + 1, m)] + 1, last_use(c, m))
+                     for c in range(C) for m in range(M)
+                     if c % Pn == d and c < C - 1}
+        za, zc = _greedy_ring(z_entries)
+        ga, gc = _greedy_ring(g_entries)
+        z_assign.update(za)
+        g_assign.update(ga)
+        z_cap, g_cap = max(z_cap, zc), max(g_cap, gc)
+
+    z_arrive = np.full((Pn, K), -1, np.int32)
+    z_src = np.zeros((Pn, K), np.int32)
+    g_arrive = np.full((Pn, K), -1, np.int32)
+    g_src = np.zeros((Pn, K), np.int32)
+    for (c, m), ring_i in z_assign.items():
+        d = c % Pn
+        z_arrive[d, f[(c - 1, m)] + 1] = ring_i
+        z_src[d, f[(c, m)]] = ring_i
+        z_src[d, b[(c, m)]] = ring_i
+        if w:
+            z_src[d, w[(c, m)]] = ring_i
+    for (c, m), ring_i in g_assign.items():
+        d = c % Pn
+        g_arrive[d, b[(c + 1, m)] + 1] = ring_i
+        g_src[d, b[(c, m)]] = ring_i
+        if w:
+            g_src[d, w[(c, m)]] = ring_i
+
+    def slot_arr(tbl):
+        out = np.full((C, M), -1, np.int32)
+        for (c, m), t in tbl.items():
+            out[c, m] = t
+        return out
+
+    tt = Timetable(
+        schedule=schedule, n_stages=Pn, n_virtual=V, n_micro=M, n_slots=K,
+        role=role, micro=micro, vstage=vstage,
+        z_ring=z_cap, g_ring=g_cap,
+        z_arrive=z_arrive, z_src=z_src, g_arrive=g_arrive, g_src=g_src,
+        f_slot=slot_arr(f), b_slot=slot_arr(b), w_slot=slot_arr(w))
+    _check_timetable(tt)
+    return tt
+
+
+def _gpipe_io_tables(n_stages: int, n_micro: int):
+    """The GPipe tick loop's ingest/collect indices, re-derived from the
+    compiled timetable (bit-identical to the old clip arithmetic): per
+    forward tick t, (microbatch stage 0 ingests, collector index on the
+    last stage, collector-write flag)."""
+    tt = compile_timetable("gpipe", n_stages, n_micro)
+    T = n_micro + n_stages - 1
+    in_m = np.zeros(T, np.int32)
+    out_m = np.zeros(T, np.int32)
+    out_ok = np.zeros(T, bool)
+    cur = 0
+    for t in range(T):
+        if tt.role[0, t] == ROLE_F:
+            cur = int(tt.micro[0, t])
+        in_m[t] = cur
+    cur = 0
+    for t in range(T):
+        if tt.role[-1, t] == ROLE_F:
+            cur = int(tt.micro[-1, t])
+            out_ok[t] = True
+        out_m[t] = cur
+    return in_m, out_m, out_ok
 
 
 # ---------------------------------------------------------------------------
@@ -117,42 +481,54 @@ class PipelineSpec:
 def init_pipeline_params(key, cfg: ModelConfig, spec: PipelineSpec) -> dict:
     """Stage-stacked layout: every leading axis ``n_stages`` shards over
 
-    ``model``.  Stage s owns: its block slice, W_down of boundary s (encode
-    at exit; unused on the last stage) and W_up of boundary s-1 (decode at
-    entry; unused on stage 0)."""
+    ``model``; with ``virtual_stages=V > 1`` a second axis V follows it
+    (position [d, v] holds chunk c = v*P + d).  Chunk c owns: its block
+    slice, W_down of boundary c (encode at exit; unused on the last chunk)
+    and W_up of boundary c-1 (decode at entry; unused on chunk 0).  RNG
+    folds by *global chunk index*, so interleaved (P, V) params equal
+    gpipe params at P*V stages chunk-for-chunk — the loss-parity oracle."""
     kinds = blk.period_kinds(cfg)
     assert kinds in (["attn_dense"], ["attn_moe"]), (
         "pipeline strategy supports uniform decoder stacks; "
         f"{cfg.arch_id} period={kinds}")
     kind = kinds[0]
-    assert cfg.n_layers % spec.n_stages == 0, (cfg.n_layers, spec.n_stages)
-    l_per = cfg.n_layers // spec.n_stages
+    Pn, V, C = spec.n_stages, spec.virtual_stages, spec.n_chunks
+    assert cfg.n_layers % C == 0, (cfg.n_layers, C)
+    l_per = cfg.n_layers // C
 
     ks = jax.random.split(key, 4)
-    stages = []
-    for s in range(spec.n_stages):
-        layers = [blk.init_block(jax.random.fold_in(ks[0], s * 1000 + l),
+
+    def chunk_blocks(c):
+        layers = [blk.init_block(jax.random.fold_in(ks[0], c * 1000 + l),
                                  kind, cfg) for l in range(l_per)]
-        stages.append(jax.tree.map(lambda *xs: jnp.stack(xs), *layers))
-    stage_blocks = jax.tree.map(lambda *xs: jnp.stack(xs), *stages)
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *layers)
+
+    def stack_chunks(make):
+        """(P, ...) for V == 1 (seed-exact layout), else (P, V, ...)."""
+        if V == 1:
+            return jax.tree.map(lambda *xs: jnp.stack(xs),
+                                *[make(c) for c in range(C)])
+        rows = [jax.tree.map(lambda *xs: jnp.stack(xs),
+                             *[make(v * Pn + d) for v in range(V)])
+                for d in range(Pn)]
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *rows)
 
     d, db = cfg.d_model, spec.bottleneck_dim
     params = {
         "embeds": init_embeddings(ks[1], cfg),
         "final_norm": norm_init(cfg.d_model),
-        "stages": {"blocks": stage_blocks},
+        "stages": {"blocks": stack_chunks(chunk_blocks)},
     }
     if spec.compress:
-        params["stages"]["enc_norm"] = jnp.ones((spec.n_stages, d), jnp.float32)
-        params["stages"]["w_down"] = jnp.stack([
-            dense_init(jax.random.fold_in(ks[2], s), d, db)
-            for s in range(spec.n_stages)])
-        params["stages"]["w_up_prev"] = jnp.stack([
-            dense_init(jax.random.fold_in(ks[3], s), db, d,
-                       scale=1.0 / np.sqrt(db))
-            for s in range(spec.n_stages)])
-        params["stages"]["alpha_dec"] = jnp.full((spec.n_stages,),
-                                                 0.5, jnp.float32)
+        params["stages"]["enc_norm"] = stack_chunks(
+            lambda c: jnp.ones((d,), jnp.float32))
+        params["stages"]["w_down"] = stack_chunks(
+            lambda c: dense_init(jax.random.fold_in(ks[2], c), d, db))
+        params["stages"]["w_up_prev"] = stack_chunks(
+            lambda c: dense_init(jax.random.fold_in(ks[3], c), db, d,
+                                 scale=1.0 / np.sqrt(db)))
+        params["stages"]["alpha_dec"] = stack_chunks(
+            lambda c: jnp.asarray(0.5, jnp.float32))
     return params
 
 
@@ -232,12 +608,18 @@ def pipeline_apply(params, x_micro, cfg: ModelConfig, spec: PipelineSpec,
     """x_micro: (n_micro, B, S, d_model) embedded microbatches (B = global
 
     batch / n_micro).  Returns (n_micro, B, S, d_model) block-stack outputs.
+    GPipe-structured forward sweep (virtual_stages == 1 layouts only).
     """
+    assert spec.virtual_stages == 1, \
+        "pipeline_apply is the V=1 forward; interleaved runs the executor"
     kind = blk.period_kinds(cfg)[0]
     n_stages, n_micro = spec.n_stages, spec.n_microbatches
     d_wire = spec.wire_width(cfg)
     S = x_micro.shape[2]
     positions = jnp.arange(S, dtype=jnp.int32)[None]
+    in_m, out_m, out_ok = _gpipe_io_tables(n_stages, n_micro)
+    in_tbl, out_tbl = jnp.asarray(in_m), jnp.asarray(out_m)
+    ok_tbl = jnp.asarray(out_ok)
 
     def body(x_all, stages):
         # local views: x_all (n_micro, B_loc, S, D); stages leading dim == 1
@@ -254,7 +636,7 @@ def pipeline_apply(params, x_micro, cfg: ModelConfig, spec: PipelineSpec,
             z, outputs = carry
             # ---- stage entry: ingest (stage 0) or decode the wire code ----
             x_in = jax.lax.dynamic_index_in_dim(
-                x_all, jnp.clip(t, 0, n_micro - 1), 0, keepdims=False)
+                x_all, in_tbl[t], 0, keepdims=False)
             r = _decode_boundary(z, stages, spec, compute_dtype)
             x = jnp.where(stage == 0, x_in, r)
             # ---- stage compute ----
@@ -262,9 +644,8 @@ def pipeline_apply(params, x_micro, cfg: ModelConfig, spec: PipelineSpec,
             # ---- stage exit: encode the wire code ----
             z_out = _encode_boundary(x, stages, cfg, spec)
             # ---- collect finished microbatches on the last stage ----
-            out_idx = jnp.clip(t - (n_stages - 1), 0, n_micro - 1)
-            is_out = ((stage == n_stages - 1) & (t >= n_stages - 1)
-                      & (t - (n_stages - 1) < n_micro))
+            out_idx = out_tbl[t]
+            is_out = (stage == n_stages - 1) & ok_tbl[t]
             cur = jax.lax.dynamic_index_in_dim(outputs, out_idx, 0,
                                                keepdims=False)
             outputs = jax.lax.dynamic_update_index_in_dim(
@@ -299,6 +680,11 @@ def pipeline_apply(params, x_micro, cfg: ModelConfig, spec: PipelineSpec,
 def pipeline_loss(params, batch, cfg: ModelConfig, spec: PipelineSpec, mesh,
                   batch_axes: tuple[str, ...] = ("data",), z_loss: float = 1e-4,
                   compute_dtype=jnp.bfloat16):
+    if spec.virtual_stages > 1:
+        # interleaved layouts only exist for the slot executor
+        loss, _ = pipeline_timetable_grads(params, batch, cfg, spec, mesh,
+                                           batch_axes, z_loss, compute_dtype)
+        return loss
     tokens, labels = batch["tokens"], batch["labels"]
     B, S = tokens.shape
     n_micro = spec.n_microbatches
@@ -347,36 +733,57 @@ def wire_bytes_per_hop(cfg: ModelConfig, spec: PipelineSpec,
 
 def schedule_stats(cfg: ModelConfig, spec: PipelineSpec, global_batch: int,
                    seq: int, data_shards: int = 1) -> dict:
-    """Static schedule accounting, derived from the real carry structures:
+    """Schedule accounting derived from the compiled timetable and the real
+    carry structures:
 
-    * ``bubble_fraction``   — idle fraction of the tick/slot loop
-    * ``stash_bytes``       — per-device activation stash: GPipe saves the
-      checkpointed tick carry's wire code once per tick (T codes); 1F1B
-      allocates a min(n_stages, n_micro)-slot ring of codes in the carry
-    * ``carry_code_bytes``  — one in-flight wire code (B_loc, S, d_wire)
+    * ``bubble_fraction``   — idle fraction of the *executed timetable*
+      (``Timetable.bubble_fraction``, not a closed form; equals
+      (P-1)/(M+P-1) for gpipe/1f1b — the tests pin that identity)
+    * ``stash_codes/bytes`` — per-device activation stash: GPipe saves the
+      checkpointed tick carry's wire code once per tick (T float codes —
+      an int8 carry would sever the straight-through gradient, so the
+      autodiff path cannot stash pairs); explicit schedules allocate the
+      compiler's z-ring, which under int8 stashes the physical
+      (codes, scales) pair
+    * ``grad_ring_codes``   — cotangent-ring slots (zerobubble keeps each
+      B's seed alive until its W)
+    * ``carry_code_bytes``  — one decoded in-flight code (B_loc, S, d_wire)
     * ``wire_bytes_per_hop``— on-wire bytes per boundary per sweep
     """
     Pn, M = spec.n_stages, spec.n_microbatches
+    tt = spec.timetable()
     width = spec.wire_width(cfg)
     B_loc = max(global_batch // M // data_shards, 1)
     code_bytes = (B_loc * seq * width
                   * jnp.dtype(spec.carry_dtype()).itemsize)
-    ticks = M + Pn - 1
-    if spec.schedule == "1f1b":
-        loop_len = 2 * ticks
-        stash_codes = min(Pn, M)
+    if spec.wire_codec == "int8":
+        ring_code_bytes = qs.wire_nbytes((B_loc, seq, width))
     else:
+        ring_code_bytes = code_bytes
+    ticks = M + Pn - 1
+    if spec.schedule == "gpipe":
         loop_len = ticks
         stash_codes = ticks
+        stash_bytes = ticks * code_bytes
+        grad_ring = 0
+    else:
+        loop_len = tt.n_slots
+        stash_codes = tt.z_ring
+        stash_bytes = tt.z_ring * ring_code_bytes
+        grad_ring = tt.g_ring
     return {
         "schedule": spec.schedule,
         "n_stages": Pn,
         "n_microbatches": M,
+        "virtual_stages": spec.virtual_stages,
         "loop_length": loop_len,
-        "bubble_fraction": (Pn - 1) / ticks,
+        "timetable_slots": tt.n_slots,
+        "bubble_fraction": tt.bubble_fraction(),
         "carry_code_bytes": int(code_bytes),
+        "ring_code_bytes": int(ring_code_bytes),
         "stash_codes": int(stash_codes),
-        "stash_bytes": int(stash_codes * code_bytes),
+        "stash_bytes": int(stash_bytes),
+        "grad_ring_codes": int(grad_ring),
         "wire_bytes_per_hop": int(
             wire_bytes_per_hop(cfg, spec, global_batch, seq,
                                data_shards=data_shards)),
@@ -400,17 +807,24 @@ def pipeline_loss_fused(params, batch, cfg: ModelConfig, spec: PipelineSpec,
     537 MB x 2 x ticks GSPMD resharding permutes and the 4.5 GB output
     all-reduce of the v1 layout — inter-stage traffic is then just the
     (compressed) wire codes, i.e. the paper's §4 claim made visible on-mesh.
+    The tick loop's ingest/collect indices come from the compiled gpipe
+    timetable (``_gpipe_io_tables``).
     """
     kind = blk.period_kinds(cfg)[0]
     tokens, labels = batch["tokens"], batch["labels"]
     B, S = tokens.shape
     n_stages, n_micro = spec.n_stages, spec.n_microbatches
     assert B % n_micro == 0
+    assert spec.virtual_stages == 1, \
+        "the fused autodiff loop is the V=1 golden path"
     d_wire = spec.wire_width(cfg)
     Bm = B // n_micro
     tokens_m = tokens.reshape(n_micro, Bm, S)
     labels_m = labels.reshape(n_micro, Bm, S)
     positions = jnp.arange(S, dtype=jnp.int32)[None]
+    in_m, out_m, out_ok = _gpipe_io_tables(n_stages, n_micro)
+    in_tbl, out_tbl = jnp.asarray(in_m), jnp.asarray(out_m)
+    ok_tbl = jnp.asarray(out_ok)
 
     def body(toks, labs, embed_tbl, unembed_tbl, final_gamma, stages):
         stages = jax.tree.map(lambda a: a[0], stages)
@@ -432,7 +846,7 @@ def pipeline_loss_fused(params, batch, cfg: ModelConfig, spec: PipelineSpec,
         def tick(carry, t):
             z, outputs = carry
             t_in = jax.lax.dynamic_index_in_dim(
-                toks, jnp.clip(t, 0, n_micro - 1), 0, keepdims=False)
+                toks, in_tbl[t], 0, keepdims=False)
             # stage 0 ingests tokens (paper: first-layer miners tokenize);
             # the embedding gather is tiny next to a full-width activation
             x_in = jnp.take(embed_tbl, t_in, axis=0).astype(compute_dtype)
@@ -440,8 +854,8 @@ def pipeline_loss_fused(params, batch, cfg: ModelConfig, spec: PipelineSpec,
             x = jnp.where(stage == 0, x_in, r)
             x = _stage_forward(stages["blocks"], x, cfg, kind, pos, True)
             z_out = _encode_boundary(x, stages, cfg, spec)
-            out_idx = jnp.clip(t - last, 0, n_micro - 1)
-            is_out = (stage == last) & (t >= last) & (t - last < n_micro)
+            out_idx = out_tbl[t]
+            is_out = (stage == last) & ok_tbl[t]
             cur = jax.lax.dynamic_index_in_dim(outputs, out_idx, 0,
                                                keepdims=False)
             outputs = jax.lax.dynamic_update_index_in_dim(
@@ -491,31 +905,37 @@ def pipeline_loss_fused(params, batch, cfg: ModelConfig, spec: PipelineSpec,
 
 
 # ---------------------------------------------------------------------------
-# 1F1B: explicit-backward slot loop (loss AND grads in one shard_map)
+# Generalized slot executor: runs any compiled explicit-backward timetable
+# (1f1b / interleaved / zerobubble) — loss AND grads in one shard_map
 # ---------------------------------------------------------------------------
 
 
-def pipeline_1f1b_grads(params, batch, cfg: ModelConfig, spec: PipelineSpec,
-                        mesh, batch_axes: tuple[str, ...] = ("data",),
-                        z_loss: float = 1e-4, compute_dtype=jnp.bfloat16):
-    """One shard_map computing ``(loss, grads)`` under the 1F1B timetable
+def pipeline_timetable_grads(params, batch, cfg: ModelConfig,
+                             spec: PipelineSpec, mesh,
+                             batch_axes: tuple[str, ...] = ("data",),
+                             z_loss: float = 1e-4,
+                             compute_dtype=jnp.bfloat16):
+    """One shard_map computing ``(loss, grads)`` by replaying the compiled
 
-    (module docstring).  Each slot dispatches on its timetable role via
-    ``lax.switch`` — idle, forward, or backward — so a stage only pays for
-    the work its slot actually does: forward slots run the primal blocks
-    alone (no loss head, no pullback), backward slots re-run the stage's
-    forward from the stashed *wire code* under ``jax.vjp`` (decode ->
-    blocks -> encode + loss head), seed the cotangent from the incoming
-    backward wire code (or 1.0 for the last stage's loss), and accumulate
-    param grads.  ``lax.switch`` on the per-device role is legal under
-    shard_map here because the branches contain no collectives — the two
-    ``ppermute`` hand-offs stay outside, executed by every device each
-    slot.  (The previous revision ran the full vjp + vocab head in *every*
-    slot, masked; on CPU that lockstep compute made 1F1B ~26% slower per
-    step than GPipe.  The retrace sanitizer in repro.analysis confirmed
-    steady-state slots never retrace — the cost was real compute, not
-    recompilation.)  The activation stash is a min(n_stages, n_micro)-slot
-    ring of codes — the 1F1B memory claim, vs GPipe's one code per tick.
+    ``Timetable``.  Each slot dispatches its table role via ``lax.switch``
+    — idle, F, B, or (zerobubble) W — so a stage only pays for the work its
+    slot actually does: F slots run the primal blocks alone (no loss head,
+    no pullback); B slots re-run the chunk's forward from the stashed
+    *wire code* under ``jax.vjp`` (decode -> blocks -> encode + loss head),
+    seed the cotangent from the cotangent ring (or 1.0 for the final
+    chunk's loss), and — for 1f1b/interleaved — accumulate param grads in
+    the same pullback; zerobubble's B pulls back to the activation only
+    (the upstream hand-off leaves as early as 1F1B's) while its W re-runs
+    the same vjp restricted to params in a former idle slot, consuming the
+    cotangent the ring kept alive.  ``lax.switch`` on the per-device role
+    is legal under shard_map here because the branches contain no
+    collectives — the two ``ppermute`` hand-offs stay outside, executed by
+    every device each slot.  Ring writes/reads use the compiler's
+    ring-stash plan verbatim; under ``wire_codec="int8"`` the rings and
+    hand-offs carry the physical (int8 codes, fp32 scales) pair and
+    dequantize at consumption — bit-identical values to the old
+    dequantize-then-stash (q * scale is exact in f32), at ~half the bf16
+    ring bytes.
 
     Returns grads matching ``jax.grad(pipeline_loss_fused)``: per-stage
     params stay per-stage, shared params (embeddings, final norm) are
@@ -524,15 +944,27 @@ def pipeline_1f1b_grads(params, batch, cfg: ModelConfig, spec: PipelineSpec,
     kind = blk.period_kinds(cfg)[0]
     tokens, labels = batch["tokens"], batch["labels"]
     B, S = tokens.shape
-    Pn, M = spec.n_stages, spec.n_microbatches
+    Pn, M, V = spec.n_stages, spec.n_microbatches, spec.virtual_stages
     assert B % M == 0
     d_wire = spec.wire_width(cfg)
     Bm = B // M
     tokens_m = tokens.reshape(M, Bm, S)
     labels_m = labels.reshape(M, Bm, S)
     positions = jnp.arange(S, dtype=jnp.int32)[None]
-    R = min(Pn, M)                       # stash ring slots (in-flight cap)
-    K = 2 * (M + Pn - 1)                 # total schedule slots
+    tt = spec.timetable()
+    K = tt.n_slots
+    zb = spec.schedule == "zerobubble"
+    is_int8 = spec.wire_codec == "int8"
+
+    # (P, K) tables baked as constants; [stage, t] gathers give each device
+    # its compiled unit for the slot
+    role_tbl = jnp.asarray(tt.role)
+    micro_tbl = jnp.asarray(tt.micro)
+    vst_tbl = jnp.asarray(tt.vstage)
+    zarr_tbl = jnp.asarray(tt.z_arrive)
+    zsrc_tbl = jnp.asarray(tt.z_src)
+    garr_tbl = jnp.asarray(tt.g_arrive)
+    gsrc_tbl = jnp.asarray(tt.g_src)
 
     def body(toks, labs, embed_tbl, unembed_tbl, final_gamma, stages):
         stages = jax.tree.map(lambda a: a[0], stages)
@@ -543,126 +975,217 @@ def pipeline_1f1b_grads(params, batch, cfg: ModelConfig, spec: PipelineSpec,
         pad_mask = (jnp.arange(unembed_tbl.shape[0]) >= cfg.vocab_size
                     ) * (-1e9)
 
-        def stage_fn(stage_p, z_in, emb, unemb, fgamma, toks_t, labs_t):
-            """This stage's forward from its received wire code (or tokens
-            on stage 0), through its blocks, to its exit code AND the loss
-            head — one function so one vjp yields every cotangent; the
-            where() gates route grads to the right owners (embed on stage
-            0, head params on the last stage) automatically."""
+        code_shape = (B_loc, S, d_wire)
+        if is_int8:
+            n_code = B_loc * S * d_wire
+            blk_w = qs.wire_block(n_code, d_wire)
+
+            def wire_zero():
+                return (jnp.zeros(code_shape, jnp.int8),
+                        jnp.zeros((n_code // blk_w,), jnp.float32))
+
+            def wire_pack(z_f):
+                # f32 code -> the physically shipped/stashed (q, scales)
+                return ops.wire_encode(z_f)
+
+            def wire_unpack(wz):
+                # exact dequantized f32 (== ops.int8_wire_roundtrip output)
+                return ops.wire_decode(*wz)
+        else:
+            def wire_zero():
+                return jnp.zeros(code_shape, spec.carry_dtype())
+
+            def wire_pack(z_f):
+                return z_f
+
+            def wire_unpack(wz):
+                return wz
+
+        def ring_zero(n):
+            return jax.tree.map(
+                lambda a: jnp.zeros((n,) + a.shape, a.dtype), wire_zero())
+
+        def ring_read(ring, i):
+            return jax.tree.map(
+                lambda a: jax.lax.dynamic_index_in_dim(a, i, 0,
+                                                       keepdims=False), ring)
+
+        def ring_write(ring, val, i, ok):
+            def upd(a, v):
+                cur = jax.lax.dynamic_index_in_dim(a, i, 0, keepdims=False)
+                return jax.lax.dynamic_update_index_in_dim(
+                    a, jnp.where(ok, v, cur), i, 0)
+            return jax.tree.map(upd, ring, val)
+
+        def chunk_params(v_idx):
+            if V == 1:
+                return stages
+            return jax.tree.map(
+                lambda a: jax.lax.dynamic_index_in_dim(a, v_idx, 0,
+                                                       keepdims=False),
+                stages)
+
+        def acc_chunk_grads(g_acc, g_chunk, v_idx):
+            if V == 1:
+                return jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32), g_acc, g_chunk)
+
+            def upd(a, g):
+                cur = jax.lax.dynamic_index_in_dim(a, v_idx, 0,
+                                                   keepdims=False)
+                return jax.lax.dynamic_update_index_in_dim(
+                    a, cur + g.astype(jnp.float32), v_idx, 0)
+            return jax.tree.map(upd, g_acc, g_chunk)
+
+        def stage_fn(chunk_p, z_in, emb, unemb, fgamma, toks_t, labs_t,
+                     is_first):
+            """One chunk's forward from its received wire code (or tokens
+            on the first chunk), through its blocks, to its exit code AND
+            the loss head — one function so one vjp yields every cotangent;
+            the where() gates route grads to the right owners (embed on the
+            first chunk, head params on the last) automatically."""
             x_e = jnp.take(emb, toks_t, axis=0).astype(compute_dtype)
-            r = _decode_boundary(z_in, stage_p, spec, compute_dtype)
-            x = jnp.where(stage == 0, x_e, r)
-            x = _stage_forward(stage_p["blocks"], x, cfg, kind, pos, False)
-            z_out = _encode_boundary(x, stage_p, cfg, spec, codec=False)
+            r = _decode_boundary(z_in, chunk_p, spec, compute_dtype)
+            x = jnp.where(is_first, x_e, r)
+            x = _stage_forward(chunk_p["blocks"], x, cfg, kind, pos, False)
+            z_out = _encode_boundary(x, chunk_p, cfg, spec, codec=False)
             h = rmsnorm(x, fgamma, cfg.norm_eps)
             lgts = jnp.einsum("bsd,vd->bsv", h.astype(jnp.float32),
                               unemb.astype(jnp.float32)) + pad_mask
             loss_t = next_token_loss(lgts, labs_t, z_loss)
             return z_out, loss_t
 
-        def fwd_sched(t, s):
-            """(valid, micro) the stage-s forward timetable assigns slot t:
-            f(s,m) = s + m while m < P - s (warmup), else 2m + s (steady,
-            throttled so in-flight microbatches stay capped at P - s)."""
-            w_cap = jnp.minimum(Pn - s, M)
-            warm_m = t - s
-            warm_ok = (warm_m >= 0) & (warm_m < w_cap)
-            steady_m = (t - s) // 2
-            steady_ok = (((t - s) % 2 == 0) & (steady_m >= Pn - s)
-                         & (steady_m < M))
-            m = jnp.clip(jnp.where(warm_ok, warm_m, steady_m), 0, M - 1)
-            return warm_ok | steady_ok, m
-
         def slot(carry, t):
-            z_wire, g_wire, stash, grads, loss_acc = carry
-            # ---- arrival: a code sent by stage-1 last slot enters the ring
-            # (at the warmup->steady seam a code arrives up to P - s slots
-            # before its forward slot, so it must be stashed on arrival —
-            # the single-slot z_wire register would lose it)
-            a_ok, ma = fwd_sched(t - 1, stage - 1)
-            a_ok = a_ok & (stage > 0)
-            a_idx = ma % R
-            cur = jax.lax.dynamic_index_in_dim(stash, a_idx, 0,
-                                               keepdims=False)
-            stash = jax.lax.dynamic_update_index_in_dim(
-                stash, jnp.where(a_ok, z_wire, cur), a_idx, 0)
-            # ---- timetable: which (if any) micro this stage works on ----
-            f_ok, mf = fwd_sched(t, stage)
-            bn = t - (2 * Pn - 1 - stage)
-            mb = jnp.clip(bn // 2, 0, M - 1)
-            b_ok = (bn >= 0) & (bn % 2 == 0) & (bn // 2 < M)
-            # F and B slots are disjoint by parity; both read the stash
-            # ring — the forward its just-arrived code, the backward the
-            # code stashed at its forward slot (entries live from arrival
-            # to b(s,m); ring reuse starts strictly later)
-            m_idx = jnp.where(f_ok, mf, mb)
-            z_src = jax.lax.dynamic_index_in_dim(stash, m_idx % R, 0,
-                                                 keepdims=False)
+            z_wire, g_wire, z_ring, g_ring, grads, loss_acc = carry
+            # ---- arrivals: last slot's hand-offs enter their compiled
+            # ring slots (at the warmup->steady seam a code arrives up to
+            # P - s slots before its forward slot, so it must be stashed on
+            # arrival — a single-slot register would lose it)
+            za = zarr_tbl[stage, t]
+            z_ring = ring_write(z_ring, z_wire, jnp.maximum(za, 0), za >= 0)
+            ga = garr_tbl[stage, t]
+            g_ring = ring_write(g_ring, g_wire, jnp.maximum(ga, 0), ga >= 0)
+            # ---- this slot's compiled unit ----
+            role_id = role_tbl[stage, t]
+            m_idx = micro_tbl[stage, t]
+            v_idx = vst_tbl[stage, t]
+            z_src = ring_read(z_ring, zsrc_tbl[stage, t])
+            ct_src = ring_read(g_ring, gsrc_tbl[stage, t])
             toks_t = jax.lax.dynamic_index_in_dim(toks, m_idx, 0,
                                                   keepdims=False)
             labs_t = jax.lax.dynamic_index_in_dim(labs, m_idx, 0,
                                                   keepdims=False)
+            chunk_p = chunk_params(v_idx)
+            is_first = (stage == 0) & (v_idx == 0)
+            is_last = (stage == last) & (v_idx == V - 1)
+
+            def seed_cts(z_out, loss_t):
+                """Cotangent seeds: the final chunk seeds its loss with 1,
+                everyone else the ring-held upstream activation grad."""
+                ct_z = jnp.where(is_last, jnp.zeros_like(z_out),
+                                 wire_unpack(ct_src).astype(z_out.dtype))
+                ct_loss = jnp.where(is_last, jnp.ones_like(loss_t),
+                                    jnp.zeros_like(loss_t))
+                return ct_z, ct_loss
+
+            def gate_g(g_send):
+                # the first chunk has no upstream; with wraparound perms
+                # (V > 1) its send would otherwise corrupt the last device
+                return jax.tree.map(
+                    lambda a: jnp.where(is_first, jnp.zeros_like(a), a),
+                    g_send)
 
             # ---- role dispatch: pay only for what this slot does --------
             # (branches close over loop-invariant tracers; no collectives
             # inside, so per-device switch is shard_map-legal)
-            def idle(z_src, toks_t, labs_t, g_in, grads, loss_acc):
-                zeros = jnp.zeros((B_loc, S, d_wire), spec.carry_dtype())
-                return zeros, zeros, grads, loss_acc
+            def idle(grads, loss_acc):
+                return wire_zero(), wire_zero(), grads, loss_acc
 
-            def fwd_slot(z_src, toks_t, labs_t, g_in, grads, loss_acc):
+            def fwd_slot(grads, loss_acc):
                 # primal blocks only: no loss head, no pullback
                 x_e = jnp.take(embed_tbl, toks_t,
                                axis=0).astype(compute_dtype)
-                r = _decode_boundary(z_src, stages, spec, compute_dtype)
-                x = jnp.where(stage == 0, x_e, r)
-                x = _stage_forward(stages["blocks"], x, cfg, kind, pos,
+                r = _decode_boundary(wire_unpack(z_src), chunk_p, spec,
+                                     compute_dtype)
+                x = jnp.where(is_first, x_e, r)
+                x = _stage_forward(chunk_p["blocks"], x, cfg, kind, pos,
                                    False)
-                z_send = _encode_boundary(x, stages, cfg, spec,
-                                          codec=False)
-                if spec.wire_codec == "int8":
-                    z_send = ops.int8_wire_roundtrip(z_send)
-                return (z_send, jnp.zeros_like(z_send), grads, loss_acc)
+                z_out = _encode_boundary(x, chunk_p, cfg, spec, codec=False)
+                return wire_pack(z_out), wire_zero(), grads, loss_acc
 
-            def bwd_slot(z_src, toks_t, labs_t, g_in, grads, loss_acc):
+            def bwd_full(grads, loss_acc):
+                z_in = wire_unpack(z_src)
                 (z_out, loss_t), vjp = jax.vjp(
-                    lambda sp, z, e, u, f: stage_fn(sp, z, e, u, f,
-                                                    toks_t, labs_t),
-                    stages, z_src, embed_tbl, unembed_tbl, final_gamma)
-                ct_z = jnp.where(stage == last, jnp.zeros_like(z_out),
-                                 g_in.astype(z_out.dtype))
-                ct_loss = jnp.where(stage == last, jnp.ones_like(loss_t),
-                                    jnp.zeros_like(loss_t))
-                g_stages, g_z, g_emb, g_unemb, g_fg = vjp((ct_z, ct_loss))
-                grads = jax.tree.map(
-                    lambda acc, g: acc + g.astype(jnp.float32),
-                    grads, (g_stages, g_emb, g_unemb, g_fg))
-                g_send = g_z.astype(spec.carry_dtype())
-                if spec.wire_codec == "int8":
-                    g_send = ops.int8_wire_roundtrip(g_send)
-                g_send = jnp.where(stage > 0, g_send,
-                                   jnp.zeros_like(g_send))
-                loss_acc = loss_acc + jnp.where(stage == last, loss_t,
+                    lambda cp, z, e, u, fg: stage_fn(cp, z, e, u, fg,
+                                                     toks_t, labs_t,
+                                                     is_first),
+                    chunk_p, z_in, embed_tbl, unembed_tbl, final_gamma)
+                ct_z, ct_loss = seed_cts(z_out, loss_t)
+                g_cp, g_z, g_emb, g_unemb, g_fg = vjp((ct_z, ct_loss))
+                grads = (acc_chunk_grads(grads[0], g_cp, v_idx),
+                         grads[1] + g_emb.astype(jnp.float32),
+                         grads[2] + g_unemb.astype(jnp.float32),
+                         grads[3] + g_fg.astype(jnp.float32))
+                g_send = gate_g(wire_pack(g_z.astype(spec.carry_dtype())))
+                loss_acc = loss_acc + jnp.where(is_last, loss_t,
                                                 jnp.zeros_like(loss_t))
-                return (jnp.zeros_like(g_send), g_send, grads, loss_acc)
+                return wire_zero(), g_send, grads, loss_acc
 
-            role = jnp.where(b_ok, 2, f_ok.astype(jnp.int32))
+            def bwd_act(grads, loss_acc):
+                # zerobubble B: activation grad only — the upstream
+                # hand-off leaves as early as 1F1B's; params wait for W
+                z_in = wire_unpack(z_src)
+                (z_out, loss_t), vjp = jax.vjp(
+                    lambda z: stage_fn(chunk_p, z, embed_tbl, unembed_tbl,
+                                       final_gamma, toks_t, labs_t,
+                                       is_first),
+                    z_in)
+                ct_z, ct_loss = seed_cts(z_out, loss_t)
+                (g_z,) = vjp((ct_z, ct_loss))
+                g_send = gate_g(wire_pack(g_z.astype(spec.carry_dtype())))
+                loss_acc = loss_acc + jnp.where(is_last, loss_t,
+                                                jnp.zeros_like(loss_t))
+                return wire_zero(), g_send, grads, loss_acc
+
+            def wgrad_slot(grads, loss_acc):
+                # zerobubble W: the same vjp restricted to params, run in a
+                # former idle slot; the cotangent ring kept the seed alive
+                z_in = wire_unpack(z_src)
+                (z_out, loss_t), vjp = jax.vjp(
+                    lambda cp, e, u, fg: stage_fn(cp, z_in, e, u, fg,
+                                                  toks_t, labs_t, is_first),
+                    chunk_p, embed_tbl, unembed_tbl, final_gamma)
+                ct_z, ct_loss = seed_cts(z_out, loss_t)
+                g_cp, g_emb, g_unemb, g_fg = vjp((ct_z, ct_loss))
+                grads = (acc_chunk_grads(grads[0], g_cp, v_idx),
+                         grads[1] + g_emb.astype(jnp.float32),
+                         grads[2] + g_unemb.astype(jnp.float32),
+                         grads[3] + g_fg.astype(jnp.float32))
+                return wire_zero(), wire_zero(), grads, loss_acc
+
+            branches = ([idle, fwd_slot, bwd_act, wgrad_slot] if zb
+                        else [idle, fwd_slot, bwd_full])
             z_send, g_send, grads, loss_acc = jax.lax.switch(
-                role, [idle, fwd_slot, bwd_slot],
-                z_src, toks_t, labs_t, g_wire, grads, loss_acc)
-            # ---- hand-offs: consumed exactly one slot later --------------
-            z_wire = jax.lax.ppermute(
-                z_send, "model", [(i, i + 1) for i in range(Pn - 1)])
-            g_wire = jax.lax.ppermute(
-                g_send, "model", [(i + 1, i) for i in range(Pn - 1)])
-            return (z_wire, g_wire, stash, grads, loss_acc), None
+                role_id, branches, grads, loss_acc)
+            # ---- hand-offs: consumed exactly one slot later; chunk
+            # boundaries wrap devices only when V > 1 ----------------------
+            if V == 1:
+                fperm = [(i, i + 1) for i in range(Pn - 1)]
+                bperm = [(i + 1, i) for i in range(Pn - 1)]
+            else:
+                fperm = [(i, (i + 1) % Pn) for i in range(Pn)]
+                bperm = [((i + 1) % Pn, i) for i in range(Pn)]
+            z_wire = jax.tree.map(
+                lambda a: jax.lax.ppermute(a, "model", fperm), z_send)
+            g_wire = jax.tree.map(
+                lambda a: jax.lax.ppermute(a, "model", bperm), g_send)
+            return (z_wire, g_wire, z_ring, g_ring, grads, loss_acc), None
 
-        z0 = jnp.zeros((B_loc, S, d_wire), spec.carry_dtype())
-        stash0 = jnp.zeros((R, B_loc, S, d_wire), spec.carry_dtype())
         grads0 = jax.tree.map(lambda a: jnp.zeros(a.shape, jnp.float32),
                               (stages, embed_tbl, unembed_tbl, final_gamma))
-        carry0 = (z0, jnp.zeros_like(z0), stash0, grads0, _traced_zero(toks))
-        (_, _, _, grads, loss_acc), _ = jax.lax.scan(
+        carry0 = (wire_zero(), wire_zero(), ring_zero(tt.z_ring),
+                  ring_zero(tt.g_ring), grads0, _traced_zero(toks))
+        (_, _, _, _, grads, loss_acc), _ = jax.lax.scan(
             slot, carry0, jnp.arange(K, dtype=jnp.int32))
 
         g_stages, g_emb, g_unemb, g_fg = grads
@@ -697,23 +1220,33 @@ def pipeline_1f1b_grads(params, batch, cfg: ModelConfig, spec: PipelineSpec,
     return loss, grads
 
 
+def pipeline_1f1b_grads(params, batch, cfg: ModelConfig, spec: PipelineSpec,
+                        mesh, batch_axes: tuple[str, ...] = ("data",),
+                        z_loss: float = 1e-4, compute_dtype=jnp.bfloat16):
+    """Back-compat name for the generalized executor (PR 2/6 API)."""
+    return pipeline_timetable_grads(params, batch, cfg, spec, mesh,
+                                    batch_axes, z_loss, compute_dtype)
+
+
 def pipeline_loss_1f1b(params, batch, cfg: ModelConfig, spec: PipelineSpec,
                        mesh, batch_axes: tuple[str, ...] = ("data",),
                        z_loss: float = 1e-4, compute_dtype=jnp.bfloat16):
-    """`jax.grad`-compatible 1F1B loss: the explicit schedule computes the
-
-    gradients in its own forward pass, so the custom_vjp backward just hands
-    them to autodiff (scaled by the incoming cotangent)."""
+    """`jax.grad`-compatible explicit-schedule loss: the slot executor
+    computes the gradients in its own forward pass, so the custom_vjp
+    backward just hands them to autodiff (scaled by the incoming
+    cotangent).  Works for any executor schedule (1f1b / interleaved /
+    zerobubble)."""
 
     @jax.custom_vjp
     def run(p):
-        loss, _ = pipeline_1f1b_grads(p, batch, cfg, spec, mesh, batch_axes,
-                                      z_loss, compute_dtype)
+        loss, _ = pipeline_timetable_grads(p, batch, cfg, spec, mesh,
+                                           batch_axes, z_loss, compute_dtype)
         return loss
 
     def fwd(p):
-        loss, grads = pipeline_1f1b_grads(p, batch, cfg, spec, mesh,
-                                          batch_axes, z_loss, compute_dtype)
+        loss, grads = pipeline_timetable_grads(p, batch, cfg, spec, mesh,
+                                               batch_axes, z_loss,
+                                               compute_dtype)
         return loss, (grads, p)
 
     def bwd(res, g):
@@ -732,10 +1265,12 @@ def pipeline_loss_and_grads(params, batch, cfg: ModelConfig,
                             z_loss: float = 1e-4,
                             compute_dtype=jnp.bfloat16):
     """Schedule dispatcher for the training hot path: GPipe differentiates
-    the tick scan; 1F1B computes grads explicitly in one pass."""
-    if spec.schedule == "1f1b":
-        return pipeline_1f1b_grads(params, batch, cfg, spec, mesh,
-                                   batch_axes, z_loss, compute_dtype)
-    return jax.value_and_grad(
-        lambda p: pipeline_loss_fused(p, batch, cfg, spec, mesh, batch_axes,
-                                      z_loss, compute_dtype))(params)
+    the tick scan; every other schedule replays its compiled timetable in
+    the slot executor, computing grads explicitly in one pass."""
+    if spec.schedule == "gpipe":
+        return jax.value_and_grad(
+            lambda p: pipeline_loss_fused(p, batch, cfg, spec, mesh,
+                                          batch_axes, z_loss,
+                                          compute_dtype))(params)
+    return pipeline_timetable_grads(params, batch, cfg, spec, mesh,
+                                    batch_axes, z_loss, compute_dtype)

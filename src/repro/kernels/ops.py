@@ -148,6 +148,33 @@ def int8_wire_roundtrip(z):
     return _ref_wire_roundtrip(z)
 
 
+def wire_encode(z):
+    """Quantize a wire-code tensor into the physically shipped/stashed
+    (int8 codes, fp32 scales) pair.  ``wire_decode(*wire_encode(z))`` is
+    bit-identical to ``int8_wire_roundtrip(z)`` in f32 — both compose the
+    same quantize/dequantize with the same wire block — so the slot
+    executor can keep the compressed pair in its stash rings without
+    changing numerics.  Not differentiated (the executor quantizes outside
+    its vjps, exactly where the old roundtrip sat)."""
+    if _use_pallas():
+        from repro.kernels import quant_stream as qs
+        q, s, _ = qs.quantize_wire(z, interpret=_interpret())
+        return q, s
+    blk = ref.wire_code_block(z.size, z.shape[-1])
+    q, s = ref.quantize_int8(z.astype(jnp.float32).reshape(-1), block=blk)
+    return q.reshape(z.shape), s
+
+
+def wire_decode(q, scales):
+    """Exact f32 dequantization of a ``wire_encode`` pair (q * scale)."""
+    blk = ref.wire_code_block(q.size, q.shape[-1])
+    if _use_pallas():
+        from repro.kernels import quant_stream as qs
+        return qs.dequantize_wire(q, scales, blk, interpret=_interpret())
+    return ref.dequantize_int8(
+        q.reshape(-1), scales, block=blk).reshape(q.shape)
+
+
 # ---------------------------------------------------------------------------
 # Butterfly shard merge
 # ---------------------------------------------------------------------------

@@ -14,8 +14,9 @@ examples and integration tests.
 ``--strategy pipeline`` drives the ``repro.core.pipeline`` engine instead:
 stages shard over the devices' ``model`` axis (forced host devices work —
 set XLA_FLAGS=--xla_force_host_platform_device_count=N *before* launch),
-with the schedule (``gpipe``/``1f1b``) and wire codec (``none``/``int8``)
-selectable per docs/PERF.md.  The first metrics record carries the static
+with the schedule (``gpipe``/``1f1b``/``interleaved``/``zerobubble``),
+virtual-stage count and wire codec (``none``/``int8``) selectable per
+docs/PERF.md.  The first metrics record carries the static
 schedule accounting (wire bytes per hop, bubble fraction, stash bytes).
 
 Usage:
@@ -39,6 +40,7 @@ import numpy as np
 
 from repro import configs
 from repro.checkpoint import CheckpointManager
+from repro.core.pipeline import SCHEDULES
 from repro.data.pipeline import DataConfig, SyntheticCorpus
 from repro.models.model import build_model
 
@@ -66,7 +68,13 @@ def main(argv=None) -> dict:
                     help="stage count (default: all visible devices)")
     ap.add_argument("--pipeline-microbatches", type=int, default=None)
     ap.add_argument("--pipeline-schedule", default="gpipe",
-                    choices=["gpipe", "1f1b"])
+                    choices=list(SCHEDULES))
+    ap.add_argument("--pipeline-virtual-stages", type=int, default=1,
+                    help="virtual stages (model chunks) per device; >1 "
+                         "requires --pipeline-schedule interleaved")
+    ap.add_argument("--n-layers", type=int, default=None,
+                    help="override layer count (must split evenly into "
+                         "stages x virtual stages)")
     ap.add_argument("--wire-codec", default="none", choices=["none", "int8"])
     ap.add_argument("--bottleneck-dim", type=int, default=None)
     ap.add_argument("--no-compress", action="store_true",
@@ -153,11 +161,15 @@ def _pipeline_main(args, cfg) -> dict:
                 or args.kill_at_step is not None), \
         "--strategy pipeline does not support checkpoint/preemption flags yet"
     mcfg = cfg.model
+    if args.n_layers:
+        import dataclasses
+        mcfg = dataclasses.replace(mcfg, n_layers=args.n_layers)
     n_dev = jax.device_count()
     n_stages = args.pipeline_stages or n_dev
+    n_chunks = n_stages * args.pipeline_virtual_stages
     assert n_dev % n_stages == 0, (n_dev, n_stages)
-    assert mcfg.n_layers % n_stages == 0, \
-        f"{mcfg.n_layers} layers cannot split into {n_stages} stages"
+    assert mcfg.n_layers % n_chunks == 0, \
+        f"{mcfg.n_layers} layers cannot split into {n_chunks} chunks"
     data_shards = n_dev // n_stages
     spec = PipelineSpec(
         n_stages=n_stages,
@@ -169,6 +181,7 @@ def _pipeline_main(args, cfg) -> dict:
                         or max(mcfg.bottleneck.bottleneck_dim // 2, 8)),
         schedule=args.pipeline_schedule,
         wire_codec=args.wire_codec,
+        virtual_stages=args.pipeline_virtual_stages,
     )
     assert args.batch_size % (spec.n_microbatches * data_shards) == 0, \
         (args.batch_size, spec.n_microbatches, data_shards)

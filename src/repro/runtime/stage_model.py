@@ -44,16 +44,46 @@ class SwarmModelSpec:
     n_stages: int
     compress: bool = True
     bottleneck_dim: int = 16
+    # virtual stages per device (interleaved pipeline schedules): the model
+    # splits into n_stages * n_virtual chunks, chunk c living on device
+    # c % n_stages as its (c // n_stages)-th slice.  The store-path swarm
+    # runs stage-granular (n_virtual == 1); >1 describes the on-mesh
+    # partition repro.core.pipeline executes, exposed here so both sides
+    # agree on which layers a (stage, v) pair owns.
+    n_virtual: int = 1
+
+    @property
+    def n_chunks(self) -> int:
+        return self.n_stages * self.n_virtual
 
     @property
     def layers_per_stage(self) -> int:
         assert self.cfg.n_layers % self.n_stages == 0
         return self.cfg.n_layers // self.n_stages
 
-    def role(self, stage: int) -> str:
-        if stage == 0:
+    @property
+    def layers_per_chunk(self) -> int:
+        assert self.cfg.n_layers % self.n_chunks == 0
+        return self.cfg.n_layers // self.n_chunks
+
+    def chunk_index(self, stage: int, v: int = 0) -> int:
+        """Global chunk id of device ``stage``'s ``v``-th virtual slice —
+        the interleaved layout (chunk c = v * P + stage), so consecutive
+        chunks live on consecutive devices."""
+        assert 0 <= stage < self.n_stages and 0 <= v < self.n_virtual
+        return v * self.n_stages + stage
+
+    def chunk_layers(self, stage: int, v: int = 0) -> range:
+        """Global layer indices the (stage, v) chunk owns."""
+        c = self.chunk_index(stage, v)
+        return range(c * self.layers_per_chunk,
+                     (c + 1) * self.layers_per_chunk)
+
+    def role(self, stage: int, v: int = 0) -> str:
+        c = self.chunk_index(stage, v)
+        if c == 0:
             return "first"
-        return "last" if stage == self.n_stages - 1 else "mid"
+        return "last" if c == self.n_chunks - 1 else "mid"
 
 
 def init_stage_params(key, spec: SwarmModelSpec, stage: int) -> dict:

@@ -18,7 +18,7 @@ from conftest import SRC, run_py
 from repro.analysis import (
     ALL_RULES, ActorRuntimeRule, KeyLiteralRule, ModuleSource,
     NoPickleEvalRule, ProtocolConformanceRule, ScenarioConformanceRule,
-    SerdeCoverageRule, SpawnSafetyRule, run_rules,
+    ScheduleRegistryRule, SerdeCoverageRule, SpawnSafetyRule, run_rules,
 )
 from repro.analysis.__main__ import main as lint_main
 
@@ -453,6 +453,66 @@ def test_cli_fails_on_reintroduced_key_literal(tmp_path):
 
 
 # ---------------------------------------------------------------------------
+# schedule-registry
+# ---------------------------------------------------------------------------
+
+_PIPELINE_STUB = '''
+    SCHEDULES = ("gpipe", "1f1b", "interleaved", "zerobubble")
+'''
+
+
+def test_schedule_registry_flags_unknown_literals():
+    found = lint({
+        "src/repro/core/pipeline.py": _PIPELINE_STUB,
+        "src/repro/launch/rogue.py": '''
+            def pick(spec, cfg):
+                a = Spec(schedule="zb-h1")
+                if spec.schedule == "1f1b ":
+                    pass
+                cfg.pipeline_schedule = "megatron"
+        ''',
+    }, [ScheduleRegistryRule])
+    assert [f.line for f in found] == [3, 4, 6]
+    assert all(f.rule == "schedule-registry" for f in found)
+
+
+def test_schedule_registry_passes_registry_members_and_mint_module():
+    found = lint({
+        "src/repro/core/pipeline.py": _PIPELINE_STUB + '''
+    def compile_timetable(schedule):
+        if schedule == "not-a-schedule-but-allowed-here":
+            pass
+''',
+        "src/repro/api/config.py": '''
+            class SwarmConfig:
+                pipeline_schedule: str = "gpipe"
+            def mint(cfg):
+                ok = cfg.pipeline_schedule in ("gpipe", "1f1b")
+                return Spec(schedule=cfg.pipeline_schedule,
+                            n_stages=4)
+        ''',
+    }, [ScheduleRegistryRule])
+    assert found == []
+
+
+def test_schedule_registry_inert_without_pipeline_module():
+    found = lint({"src/repro/api/other.py": '''
+        x = Spec(schedule="whatever")
+    '''}, [ScheduleRegistryRule])
+    assert found == []
+
+
+def test_schedule_registry_suppression():
+    found = lint({
+        "src/repro/core/pipeline.py": _PIPELINE_STUB,
+        "src/m.py": '''
+            S = Spec(schedule="legacy")  # swarmlint: disable=schedule-registry
+        ''',
+    }, [ScheduleRegistryRule])
+    assert found == []
+
+
+# ---------------------------------------------------------------------------
 # TraceWatch (retrace sanitizer)
 # ---------------------------------------------------------------------------
 
@@ -494,8 +554,10 @@ def test_tracewatch_unregisters_on_exit():
 
 @pytest.mark.slow
 def test_pipeline_steady_state_is_retrace_free():
-    """Both schedules: after one warmup step, further steps must hit the
-    jit cache — the invariant behind the 1F1B lockstep fix (ISSUE 6)."""
+    """All four compiled schedules: after one warmup step, further steps
+    must hit the jit cache — the invariant behind the 1F1B lockstep fix
+    (ISSUE 6), extended to interleaved/zerobubble by ISSUE 9.  The
+    interleaved row runs 8 layers so they split into 4 x 2 chunks."""
     out = run_py("""
         import dataclasses
         import jax, jax.numpy as jnp, numpy as np
@@ -503,20 +565,22 @@ def test_pipeline_steady_state_is_retrace_free():
         from repro.core.pipeline import (PipelineSpec, init_pipeline_params,
                                          pipeline_loss_and_grads)
         from repro.analysis.retrace import TraceWatch
-        cfg = dataclasses.replace(smoke_variant(get('llama3.2-1b')).model,
-                                  n_layers=4)
+        base = smoke_variant(get('llama3.2-1b')).model
         mesh = jax.make_mesh((1, 4), ('data', 'model'))
         B, S, M = 8, 16, 8
         r = np.random.RandomState(0)
-        toks = r.randint(0, cfg.vocab_size, (B, S))
+        toks = r.randint(0, base.vocab_size, (B, S))
         batch = {"tokens": jnp.asarray(toks, jnp.int32),
                  "labels": jnp.asarray(np.roll(toks, -1, 1), jnp.int32)}
-        for sched in ("gpipe", "1f1b"):
+        for sched, V in [("gpipe", 1), ("1f1b", 1),
+                         ("zerobubble", 1), ("interleaved", 2)]:
+            cfg = dataclasses.replace(base, n_layers=4 * V)
             spec = PipelineSpec(4, M, compress=True, bottleneck_dim=16,
-                                schedule=sched, wire_codec="int8")
+                                schedule=sched, wire_codec="int8",
+                                virtual_stages=V)
             params = init_pipeline_params(jax.random.key(0), cfg, spec)
-            step = jax.jit(lambda p, b: pipeline_loss_and_grads(
-                p, b, cfg, spec, mesh))
+            step = jax.jit(lambda p, b, c=cfg, s=spec:
+                           pipeline_loss_and_grads(p, b, c, s, mesh))
             with mesh, TraceWatch() as watch:
                 with watch.region("warmup"):
                     jax.block_until_ready(step(params, batch))
@@ -526,7 +590,7 @@ def test_pipeline_steady_state_is_retrace_free():
                 watch.assert_no_trace("steady")
             print(f"RES {sched} {watch.traces('steady')}")
     """, devices=4)
-    assert out.count("RES") == 2
+    assert out.count("RES") == 4
     for line in out.splitlines():
         if line.startswith("RES"):
             assert line.split()[2] == "0", line

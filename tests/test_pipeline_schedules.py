@@ -136,13 +136,191 @@ def test_1f1b_stash_smaller_at_2x_microbatches():
 
 
 def test_pipeline_spec_validation():
-    from repro.core.pipeline import PipelineSpec
-    with pytest.raises(AssertionError):
-        PipelineSpec(2, 4, schedule="interleaved")
+    from repro.core.pipeline import PipelineSpec, ScheduleError
+    with pytest.raises(ScheduleError):
+        PipelineSpec(2, 4, schedule="zb-h1")          # not in the registry
+    with pytest.raises(ScheduleError):
+        PipelineSpec(2, 4, schedule="interleaved")    # needs virtual_stages>1
+    with pytest.raises(ScheduleError):
+        PipelineSpec(2, 4, schedule="1f1b", virtual_stages=2)
+    with pytest.raises(ScheduleError):
+        # interleaved microbatches must split into groups of n_stages
+        PipelineSpec(2, 5, schedule="interleaved", virtual_stages=2)
     with pytest.raises(AssertionError):
         PipelineSpec(2, 4, wire_codec="fp4")
     with pytest.raises(AssertionError):
         PipelineSpec(2, 4, compress=False, wire_codec="int8")
+    # the valid corner constructs (and caches its compiled timetable)
+    spec = PipelineSpec(2, 4, schedule="interleaved", virtual_stages=2)
+    assert spec.n_chunks == 4
+    assert spec.timetable().n_slots >= 2 * (2 * 4 + 2 - 1)
+
+
+# ---------------------------------------------------------------------------
+# schedule compiler: timetable validity, bubble targets, stash accounting
+# ---------------------------------------------------------------------------
+
+try:        # the hypothesis property test skips alone, not the module
+    from hypothesis import given, settings, strategies as st
+except ImportError:                                   # pragma: no cover
+    given = None
+
+
+def _assert_timetable_valid(tt):
+    """The compiled-timetable contract, re-derived independently of the
+    compiler's own _check pass: per-unit ordering F < B (< W), one-slot
+    hop transit, matched sends, and ring occupancy within capacity."""
+    from repro.core.pipeline import ROLE_B, ROLE_F, ROLE_W
+    C, M, P = tt.n_chunks, tt.n_micro, tt.n_stages
+    f, b, w = tt.f_slot, tt.b_slot, tt.w_slot
+    has_w = (w >= 0).any()
+    for c in range(C):
+        d = c % P
+        for m in range(M):
+            assert 0 <= f[c, m] < b[c, m] < tt.n_slots
+            if has_w:
+                assert b[c, m] < w[c, m] < tt.n_slots
+            # one-slot transit: a send is consumable the *next* slot
+            if c > 0:
+                assert f[c, m] >= f[c - 1, m] + 1
+                # ...and the matching receive is recorded for the ring
+                assert tt.z_arrive[d, f[c - 1, m] + 1] >= 0
+            if c < C - 1:
+                assert b[c, m] >= b[c + 1, m] + 1
+                assert tt.g_arrive[d, b[c + 1, m] + 1] >= 0
+            else:
+                assert b[c, m] >= f[c, m] + 1
+    # every work unit occupies exactly one (device, slot) cell
+    assert (tt.role == ROLE_F).sum() == C * M
+    assert (tt.role == ROLE_B).sum() == C * M
+    assert (tt.role == ROLE_W).sum() == (C * M if has_w else 0)
+    # ring stash never exceeds its declared capacity (interval counting)
+    for d in range(P):
+        events = []
+        for c in range(d if d else P, C, P):   # chunks on d with c > 0
+            for m in range(M):
+                last = w[c, m] if has_w else b[c, m]
+                events += [(f[c - 1, m] + 1, 1), (last + 1, -1)]
+        cur = peak = 0
+        for _, delta in sorted(events):
+            cur += delta
+            peak = max(peak, cur)
+        assert peak <= tt.z_ring, (d, peak, tt.z_ring)
+
+
+_GRID = [("gpipe", 2, 2, 1), ("gpipe", 3, 6, 1), ("gpipe", 4, 9, 1),
+         ("1f1b", 2, 4, 1), ("1f1b", 2, 7, 1), ("1f1b", 3, 6, 1),
+         ("1f1b", 4, 4, 1), ("1f1b", 4, 8, 1),
+         ("zerobubble", 2, 4, 1), ("zerobubble", 3, 6, 1),
+         ("zerobubble", 4, 8, 1), ("zerobubble", 4, 16, 1),
+         ("interleaved", 2, 2, 2), ("interleaved", 2, 4, 3),
+         ("interleaved", 3, 6, 2), ("interleaved", 4, 8, 2),
+         ("interleaved", 4, 8, 4)]
+
+
+@pytest.mark.parametrize("schedule,P,M,V", _GRID)
+def test_compiled_timetable_is_valid(schedule, P, M, V):
+    from repro.core.pipeline import compile_timetable
+    _assert_timetable_valid(compile_timetable(schedule, P, M, V))
+
+
+@pytest.mark.skipif(given is None, reason="property test needs hypothesis")
+@settings(max_examples=40, deadline=None) if given else (lambda f: f)
+@given(st.data()) if given else (lambda f: f)
+def test_compiled_timetable_property(data):
+    from repro.core.pipeline import SCHEDULES, compile_timetable
+    schedule = data.draw(st.sampled_from(SCHEDULES))
+    P = data.draw(st.integers(2, 5))
+    V = data.draw(st.integers(2, 4)) if schedule == "interleaved" else 1
+    if schedule == "interleaved":
+        M = P * data.draw(st.integers(1, 3))
+    else:
+        M = data.draw(st.integers(1, 12))
+    _assert_timetable_valid(compile_timetable(schedule, P, M, V))
+
+
+def test_bubble_fraction_matches_closed_form():
+    """gpipe/1f1b keep the (P-1)/(M+P-1) closed form, and schedule_stats
+    now reports the timetable-*measured* idle fraction — both must agree."""
+    from repro.core.pipeline import PipelineSpec, compile_timetable, \
+        schedule_stats
+    cfg = _mcfg()
+    for schedule in ("gpipe", "1f1b"):
+        for P, M in [(2, 4), (4, 8), (4, 4)]:
+            tt = compile_timetable(schedule, P, M)
+            closed = (P - 1) / (M + P - 1)
+            assert abs(tt.bubble_fraction() - closed) < 1e-12
+            if M >= P and cfg.n_layers % P == 0:
+                spec = PipelineSpec(P, M, bottleneck_dim=16,
+                                    schedule=schedule)
+                stats = schedule_stats(cfg, spec, 8, 32)
+                assert stats["bubble_fraction"] == \
+                    pytest.approx(tt.bubble_fraction())
+
+
+def test_new_schedules_shrink_the_bubble():
+    """The acceptance targets at P=4/M=8: interleaved V=2 <= 0.158,
+    zerobubble <= 0.14, both strictly below 1F1B's 0.2727."""
+    from repro.core.pipeline import compile_timetable
+    base = compile_timetable("1f1b", 4, 8).bubble_fraction()
+    assert base == pytest.approx(3 / 11)
+    inter = compile_timetable("interleaved", 4, 8, 2).bubble_fraction()
+    zb = compile_timetable("zerobubble", 4, 8).bubble_fraction()
+    assert inter <= 0.158 and inter < base
+    # interleaved hits the (P-1)/(V*M+P-1) closed form exactly
+    assert inter == pytest.approx(3 / 19)
+    assert zb <= 0.14 and zb < base
+
+
+def test_int8_stash_not_larger_than_bf16():
+    """Regression pin for the BENCH_pipeline.json stash doubling: the
+    explicit-schedule rings hold the int8 codes+scales pair, so the int8
+    stash must come in *under* the bf16 stash, never above it."""
+    from repro.core.pipeline import PipelineSpec, schedule_stats
+    cfg = _mcfg()
+    for schedule, V in [("1f1b", 1), ("zerobubble", 1), ("interleaved", 2)]:
+        kw = dict(n_microbatches=8, bottleneck_dim=16, schedule=schedule,
+                  virtual_stages=V)
+        if V > 1:
+            import dataclasses
+            mcfg = dataclasses.replace(cfg, n_layers=8)
+        else:
+            mcfg = cfg
+        s8 = schedule_stats(mcfg, PipelineSpec(
+            4, wire_codec="int8", **kw), 8, 32)
+        sb = schedule_stats(mcfg, PipelineSpec(
+            4, wire_dtype=jnp.bfloat16, **kw), 8, 32)
+        assert s8["stash_codes"] == sb["stash_codes"], schedule
+        assert s8["stash_bytes"] <= sb["stash_bytes"], \
+            (schedule, s8["stash_bytes"], sb["stash_bytes"])
+
+
+def test_stage_model_virtual_chunk_partition():
+    """The runtime-side (stage, v) -> chunk -> layers partition agrees
+    with the pipeline engine's layout: chunk c = v * P + stage, layers
+    covered exactly once in chunk order, and V == 1 degenerates to the
+    seed's stage-granular mapping (role/layers_per_stage unchanged)."""
+    from repro.runtime.stage_model import SwarmModelSpec
+    cfg = _mcfg()   # 4 layers
+    flat = SwarmModelSpec(cfg, 4)
+    assert flat.n_chunks == 4 and flat.layers_per_chunk == 1
+    assert [flat.role(s) for s in range(4)] == \
+        ["first", "mid", "mid", "last"]
+    assert list(flat.chunk_layers(2)) == [2]
+
+    import dataclasses
+    deep = SwarmModelSpec(dataclasses.replace(cfg, n_layers=8), 2,
+                          n_virtual=2)
+    assert deep.n_chunks == 4 and deep.layers_per_chunk == 2
+    # interleaved layout: consecutive chunks on consecutive devices
+    order = [(v * 2 + s, deep.chunk_index(s, v))
+             for v in range(2) for s in range(2)]
+    assert all(c == want for want, c in order)
+    covered = [l for c in range(4)
+               for l in deep.chunk_layers(c % 2, c // 2)]
+    assert covered == list(range(8))
+    assert deep.role(0, 0) == "first" and deep.role(1, 1) == "last"
+    assert deep.role(0, 1) == "mid" and deep.role(1, 0) == "mid"
 
 
 def test_swarm_config_mints_pipeline_spec():
@@ -154,6 +332,14 @@ def test_swarm_config_mints_pipeline_spec():
     assert (spec.n_stages, spec.schedule, spec.wire_codec) == (4, "1f1b",
                                                                "int8")
     assert spec.bottleneck_dim == 16
+    # virtual stages ride through to the spec (and to its timetable)
+    import dataclasses
+    swv = dataclasses.replace(sw, pipeline_schedule="interleaved",
+                              pipeline_virtual_stages=2)
+    assert swv.pipeline_spec().n_chunks == 8
+    # schedule names are validated against the compiler registry
+    with pytest.raises(AssertionError):
+        dataclasses.replace(sw, pipeline_schedule="zb-h1")
 
 
 # ---------------------------------------------------------------------------
@@ -240,6 +426,81 @@ def test_1f1b_matches_gpipe_loss_and_grads():
         assert float(dloss) < 5e-6, (tag, dloss)
         assert float(dgrad) < 5e-5, (tag, dgrad)
     assert out.count("RES") == 3, out
+
+
+@pytest.mark.slow
+def test_new_schedules_match_gpipe_loss_and_grads():
+    """zerobubble (same mesh) and interleaved (P=2 x V=2 over a 2-device
+    subset mesh, against the *same* 4-chunk model gpipe runs as 4 stages)
+    reproduce the GPipe golden loss and gradients per wire codec.  The
+    interleaved comparison relies on init_pipeline_params folding RNG by
+    global chunk index, so chunk c's params are identical whether laid out
+    as gpipe stage c or interleaved slice [c % P, c // P]."""
+    out = run_py("""
+        import dataclasses
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import Mesh
+        from repro.configs import get, smoke_variant
+        from repro.core.pipeline import (PipelineSpec, init_pipeline_params,
+                                         pipeline_loss_and_grads)
+        cfg = dataclasses.replace(smoke_variant(get('llama3.2-1b')).model,
+                                  n_layers=4)
+        B, S, M = 8, 16, 4
+        r = np.random.RandomState(0)
+        toks = r.randint(0, cfg.vocab_size, (B, S))
+        batch = {"tokens": jnp.asarray(toks, jnp.int32),
+                 "labels": jnp.asarray(np.roll(toks, -1, 1), jnp.int32)}
+
+        def leaves(g):
+            return {jax.tree_util.keystr(k): np.asarray(v, np.float32)
+                    for k, v in jax.tree_util.tree_leaves_with_path(g)}
+
+        def worst_gap(fg, fo):
+            worst = 0.0
+            for k, vg in fg.items():
+                vo = fo[k]
+                if vo.shape != vg.shape:   # (P, V, ...) -> chunk order
+                    vo = vo.transpose((1, 0) + tuple(range(2, vo.ndim))
+                                      ).reshape(vg.shape)
+                d = float(np.max(np.abs(vg - vo)))
+                worst = max(worst, d / (float(np.max(np.abs(vg))) + 1e-8))
+            return worst
+
+        for tag, wd, codec in [("f32", jnp.float32, "none"),
+                               ("bf16", jnp.bfloat16, "none"),
+                               ("int8", jnp.bfloat16, "int8")]:
+            kw = dict(compress=True, bottleneck_dim=16, wire_dtype=wd,
+                      wire_codec=codec)
+            golden = PipelineSpec(4, M, **kw)
+            mesh4 = jax.make_mesh((1, 4), ('data', 'model'))
+            pg = init_pipeline_params(jax.random.key(0), cfg, golden)
+            with mesh4:
+                lg, gg = jax.jit(lambda p, b: pipeline_loss_and_grads(
+                    p, b, cfg, golden, mesh4))(pg, batch)
+                zb = dataclasses.replace(golden, schedule="zerobubble")
+                lz, gz = jax.jit(lambda p, b: pipeline_loss_and_grads(
+                    p, b, cfg, zb, mesh4))(pg, batch)
+            il = PipelineSpec(2, M, schedule="interleaved",
+                              virtual_stages=2, **kw)
+            mesh2 = Mesh(np.array(jax.devices()[:2]).reshape(1, 2),
+                         ('data', 'model'))
+            pi = init_pipeline_params(jax.random.key(0), cfg, il)
+            with mesh2:
+                li, gi = jax.jit(lambda p, b: pipeline_loss_and_grads(
+                    p, b, cfg, il, mesh2))(pi, batch)
+            fg = leaves(gg)
+            print(f"RES {tag} zerobubble {abs(float(lg)-float(lz)):.3e} "
+                  f"{worst_gap(fg, leaves(gz)):.3e}")
+            print(f"RES {tag} interleaved {abs(float(lg)-float(li)):.3e} "
+                  f"{worst_gap(fg, leaves(gi)):.3e}")
+    """)
+    for line in out.splitlines():
+        if not line.startswith("RES"):
+            continue
+        _, tag, sched, dloss, dgrad = line.split()
+        assert float(dloss) < 5e-6, (tag, sched, dloss)
+        assert float(dgrad) < 5e-5, (tag, sched, dgrad)
+    assert out.count("RES") == 6, out
 
 
 @pytest.mark.slow
