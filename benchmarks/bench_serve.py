@@ -1,0 +1,150 @@
+"""Serve-plane throughput/latency matrix -> ``BENCH_serve.json``.
+
+Runs the continuous-batching ``ServeDriver`` (docs/SERVE.md) over a
+2-stage swarm at increasing lane concurrency, on the in-process store
+AND through a real socket ``StoreServer``, and records one row per
+(transport, lanes) cell: decode throughput (tok/s) and per-request
+completion-latency percentiles.  Every run is parity-checked against
+the sequential ``swarm_generate`` oracle before its numbers are
+recorded — a row from a diverging stream would be meaningless.
+
+``validate_artifact`` is the schema gate ``benchmarks/run.py --quick``
+enforces; ``BENCH_QUICK=1`` runs a reduced matrix against a scratch
+artifact.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs import get, smoke_variant
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+ARTIFACT = os.path.join(ROOT, "BENCH_serve.json")
+QUICK_ARTIFACT = os.path.join(tempfile.gettempdir(),
+                              "BENCH_serve.quick.json")
+
+SCHEMA_KEYS = {"schema", "rows", "derived"}
+ROW_KEYS = {"transport", "lanes", "requests", "tokens", "tok_per_s",
+            "p50_ms", "p99_ms", "parity_ok", "wall_seconds"}
+
+N_STAGES = 2
+PROMPT_LEN = 8
+
+
+def artifact_path() -> str:
+    return QUICK_ARTIFACT if os.environ.get("BENCH_QUICK", "0") == "1" \
+        else ARTIFACT
+
+
+def _quick() -> bool:
+    return os.environ.get("BENCH_QUICK", "0") == "1"
+
+
+def _spec():
+    from repro.runtime import stage_model as sm
+
+    mcfg = dataclasses.replace(smoke_variant(get("llama3.2-1b")).model,
+                               n_layers=N_STAGES)
+    return sm.SwarmModelSpec(mcfg, N_STAGES)
+
+
+def _requests(spec, n, max_new):
+    from repro.api.phases import ServeRequest
+
+    rng = np.random.default_rng(7)
+    return [ServeRequest(req=i,
+                         prompt=rng.integers(3, spec.cfg.vocab_size,
+                                             PROMPT_LEN, dtype=np.int32),
+                         max_new=max_new) for i in range(n)]
+
+
+def run_matrix() -> list[dict]:
+    from repro.launch.serve import serve_swarm, swarm_generate
+
+    lanes_grid = (1, 2) if _quick() else (1, 2, 4)
+    max_new = 4 if _quick() else 16
+    spec = _spec()
+    rows = []
+    for transport in ("inprocess", "socket"):
+        for lanes in lanes_grid:
+            n_req = max(2 * lanes, 3) if _quick() else 3 * lanes
+            reqs = _requests(spec, n_req, max_new)
+            t0 = time.perf_counter()
+            records = serve_swarm(spec, reqs, n_lanes=lanes,
+                                  max_len=PROMPT_LEN + max_new,
+                                  transport=transport)
+            wall = time.perf_counter() - t0
+            oracle = swarm_generate(spec, 0, reqs)
+            parity = all(records[r.req].tokens == oracle[r.req]
+                         for r in reqs)
+            n_tok = sum(len(rec.tokens) for rec in records.values())
+            totals = [rec.total for rec in records.values()]
+            row = {
+                "transport": transport,
+                "lanes": lanes,
+                "requests": n_req,
+                "tokens": n_tok,
+                "tok_per_s": round(n_tok / wall, 2),
+                "p50_ms": round(float(np.percentile(totals, 50)) * 1e3, 2),
+                "p99_ms": round(float(np.percentile(totals, 99)) * 1e3, 2),
+                "parity_ok": parity,
+                "wall_seconds": round(wall, 2),
+            }
+            rows.append(row)
+            emit(f"serve/{transport}/l{lanes}", wall * 1e6 / max(n_tok, 1),
+                 f"tok_per_s={row['tok_per_s']};p50_ms={row['p50_ms']};"
+                 f"p99_ms={row['p99_ms']};parity={parity}")
+    return rows
+
+
+def write_artifact(rows: list[dict]) -> str:
+    art = {
+        "schema": "bench_serve/v1",
+        "rows": rows,
+        "derived": {
+            "all_parity_ok": all(r["parity_ok"] for r in rows),
+            "best_tok_per_s": max(r["tok_per_s"] for r in rows),
+            "transports": sorted({r["transport"] for r in rows}),
+        },
+    }
+    path = artifact_path()
+    with open(path, "w") as f:
+        json.dump(art, f, indent=1, sort_keys=True)
+    validate_artifact(path)
+    return path
+
+
+def validate_artifact(path: str | None = None) -> dict:
+    path = path or artifact_path()
+    with open(path) as f:
+        art = json.load(f)
+    assert art["schema"] == "bench_serve/v1", art["schema"]
+    assert set(art) == SCHEMA_KEYS, set(art) ^ SCHEMA_KEYS
+    assert art["rows"], "no serve rows"
+    for row in art["rows"]:
+        assert set(row) == ROW_KEYS, set(row) ^ ROW_KEYS
+        assert row["parity_ok"] is True, \
+            f"{row['transport']}/l{row['lanes']} diverged from the oracle"
+        assert row["tok_per_s"] > 0 and row["tokens"] > 0, row
+        assert 0 <= row["p50_ms"] <= row["p99_ms"], row
+    # the headline claim: both store paths serve the oracle's stream
+    assert set(art["derived"]["transports"]) == {"inprocess", "socket"}, \
+        art["derived"]
+    assert art["derived"]["all_parity_ok"], art["derived"]
+    return art
+
+
+def run() -> None:
+    rows = run_matrix()
+    write_artifact(rows)
+
+
+if __name__ == "__main__":
+    run()

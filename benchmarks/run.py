@@ -16,6 +16,8 @@ PRs): ``bench_pipeline`` writes ``BENCH_pipeline.json`` and
   §Roofline bench_roofline        — dry-run roofline table
   chaos  bench_chaos              — fault-injection scenario matrix ->
                                     BENCH_chaos.json (docs/CHAOS.md)
+  serve  bench_serve              — decode tok/s + latency vs lanes ->
+                                    BENCH_serve.json (docs/SERVE.md)
 
 Usage:
   python -m benchmarks.run [module-substring]
@@ -48,6 +50,7 @@ MODULES = [
     "benchmarks.bench_pipeline",
     "benchmarks.bench_roofline",
     "benchmarks.bench_chaos",
+    "benchmarks.bench_serve",
 ]
 
 
@@ -69,7 +72,7 @@ def main() -> None:
             only = None
         os.environ["BENCH_QUICK"] = "1"
         modules = ["benchmarks.bench_pipeline", "benchmarks.bench_butterfly",
-                   "benchmarks.bench_chaos"]
+                   "benchmarks.bench_chaos", "benchmarks.bench_serve"]
     failures = 0
     for mod_name in modules:
         if only and only not in mod_name:
@@ -100,6 +103,13 @@ def main() -> None:
         print(f"# BENCH_chaos.json schema OK "
               f"({len(art['scenarios'])} scenarios, "
               f"all_converged={art['derived']['all_converged']})",
+              flush=True)
+        from benchmarks.bench_serve import (
+            validate_artifact as validate_serve)
+        art = validate_serve()
+        print(f"# BENCH_serve.json schema OK "
+              f"({len(art['rows'])} rows, "
+              f"best_tok_per_s={art['derived']['best_tok_per_s']})",
               flush=True)
     if failures:
         raise SystemExit(f"{failures} benchmark modules failed")

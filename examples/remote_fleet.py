@@ -1,0 +1,105 @@
+"""Remote fleets: train AND serve actor processes against one external store.
+
+Every other example lets the runtime spin up its own store.  Here the
+store is a separate OS process started first — the same topology as
+pointing ``--store-address`` at an already-running
+
+    python -m repro.runtime.store_server --port 8799
+
+on another machine — and two successive actor fleets attach to it:
+
+  1. a training swarm (``Swarm.create(..., runtime="actors",
+     store_address=...)``), checked against the in-process oracle's
+     loss trajectory at the same seed;
+  2. a serve fleet (``serve_swarm(..., transport="actors",
+     store_address=...)``), checked token-for-token against the
+     sequential ``swarm_generate`` oracle.
+
+Neither fleet owns the store's lifecycle: shutdown leaves it running,
+which is exactly what lets fleets come and go against a long-lived
+store.  Exits non-zero on any mismatch.
+
+    PYTHONPATH=src python examples/remote_fleet.py
+"""
+import dataclasses
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def train_against(store_address, mcfg):
+    from repro.api import Swarm, SwarmConfig
+
+    cfg = SwarmConfig(seed=0, n_stages=2, miners_per_stage=1, inner_steps=2,
+                      b_min=1, batch_size=2, seq_len=16, validators=1)
+    swarm = Swarm.create(mcfg, cfg, runtime="actors",
+                         store_address=store_address)
+    try:
+        swarm.start()
+        stats = swarm.run(2)
+    finally:
+        swarm.shutdown()
+
+    local = Swarm.create(mcfg, cfg)
+    local_stats = local.run(2)
+    remote_loss = [s.mean_loss for s in stats]
+    local_loss = [s.mean_loss for s in local_stats]
+    assert remote_loss == local_loss, \
+        f"remote-store trajectory diverged: {remote_loss} != {local_loss}"
+    return remote_loss[-1]
+
+
+def serve_against(store_address, mcfg):
+    import numpy as np
+
+    from repro.api.phases import ServeRequest
+    from repro.launch.serve import serve_swarm, swarm_generate
+    from repro.runtime import stage_model as sm
+
+    spec = sm.SwarmModelSpec(mcfg, 2)
+    rng = np.random.default_rng(1)
+    reqs = [ServeRequest(req=i,
+                         prompt=rng.integers(3, mcfg.vocab_size, 6,
+                                             dtype=np.int32),
+                         max_new=4) for i in range(3)]
+    records = serve_swarm(spec, reqs, n_lanes=2, max_len=10,
+                          transport="actors", store_address=store_address)
+    oracle = swarm_generate(spec, 0, reqs)
+    for r in reqs:
+        assert records[r.req].tokens == oracle[r.req], \
+            f"req {r.req}: {records[r.req].tokens} != {oracle[r.req]}"
+    return sum(len(rec.tokens) for rec in records.values())
+
+
+def main():
+    from repro.configs import get, smoke_variant
+    from repro.runtime.store_server import spawn_store_server
+
+    mcfg = dataclasses.replace(smoke_variant(get("llama3.2-1b")).model,
+                               n_layers=2)
+
+    proc, address = spawn_store_server()
+    print(f"external store listening on {address[0]}:{address[1]} "
+          f"(pid {proc.pid})")
+    try:
+        t0 = time.monotonic()
+        loss = train_against(address, mcfg)
+        t1 = time.monotonic()
+        print(f"  train fleet: loss={loss:.4f} (== in-process oracle) "
+              f"in {t1 - t0:.1f}s")
+        n_tok = serve_against(address, mcfg)
+        t2 = time.monotonic()
+        print(f"  serve fleet: {n_tok} tokens (== sequential oracle) "
+              f"in {t2 - t1:.1f}s")
+        assert proc.is_alive(), "fleet shutdown must not stop the store"
+    finally:
+        proc.terminate()
+        proc.join()
+
+    print("\nremote fleet OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -27,10 +27,13 @@
 # training run
 # (launch/train.py --strategy pipeline), an interleaved virtual-stage run
 # (--pipeline-schedule interleaved --pipeline-virtual-stages 2, exercising
-# the schedule compiler's V>1 chunk path), and `benchmarks/run.py --quick`
-# (reduced pipeline + butterfly + chaos-matrix benches that
+# the schedule compiler's V>1 chunk path), the serve shard
+# (launch/serve.py --swarm over the socket store: pipelined
+# continuous-batching decode, token parity vs the sequential oracle —
+# docs/SERVE.md), and `benchmarks/run.py --quick`
+# (reduced pipeline + butterfly + chaos-matrix + serve benches that
 # hard-validate the BENCH_pipeline.json / BENCH_butterfly.json /
-# BENCH_chaos.json schemas).
+# BENCH_chaos.json / BENCH_serve.json schemas).
 # This is the documented check to run before every commit; the full suite
 # is `python -m pytest -q`.
 set -euo pipefail
@@ -96,6 +99,13 @@ python -m repro.launch.train --arch llama3.2-1b --smoke \
     --pipeline-virtual-stages 2 --n-layers 4 --wire-codec int8 \
     --pipeline-microbatches 4 --steps 6 --batch-size 4 --seq-len 16 \
     --log-every 3
+
+echo
+echo "== smoke: serve plane (pipelined decode vs sequential oracle) =="
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+python -m repro.launch.serve --arch llama3.2-1b --smoke --swarm \
+    --stages 2 --lanes 2 --requests 3 --prompt-len 8 --max-new 6 \
+    --transport socket
 
 echo
 echo "== smoke: pipeline benchmark artifact schema (--quick) =="

@@ -24,10 +24,11 @@ from repro.analysis.framework import Finding, ModuleSource, Rule
 # this file necessarily spells the markers out — the one sanctioned use
 # swarmlint: disable-file=key-literal
 
-# the three store namespaces, plus the v2 shard segment (an f-string like
-# f"...shard{k}..." renders as "shard{}" in static text, so "shard{" also
-# catches the interpolated form)
-KEY_SHAPES = ("activations/", "weights/", "scores/", "control/", "shard{")
+# the store namespaces (including the v5 serve plane), plus the v2 shard
+# segment (an f-string like f"...shard{k}..." renders as "shard{}" in
+# static text, so "shard{" also catches the interpolated form)
+KEY_SHAPES = ("activations/", "weights/", "scores/", "control/", "serve/",
+              "shard{")
 
 # the single sanctioned minting site (repo-relative suffix match, so the
 # rule works from any scan root)

@@ -59,6 +59,20 @@ key; actors poll for the next revision index while awaiting work:
 The pattern cannot collide with v3: the base plan key is anchored
 (``plan$``) and revisions add a ``/r{R}`` segment.
 
+Version 5 — serve plane (inference as a pipeline workload, docs/SERVE.md).
+A fresh ``serve/`` namespace: nothing here can collide with the train-era
+patterns, and serve traffic GCs by round prefix without touching training
+artifacts.  The driver publishes the session plan once, then one lane plan
+per decode round; stages store-and-forward boundary codes per
+(round, lane); tokens append under their request:
+
+  serve/plan                        serve session spec (stages, lanes, codec)
+  serve/round{N}/plan               round N's lane plan (admission/retire)
+  serve/round{N}/l{L}/s{S}          stage S's boundary output for lane L
+  serve/req{R}                      request R's prompt envelope
+  serve/req{R}/tok{T}               token T emitted for request R
+  serve/req{R}/done                 completion marker (latency stats)
+
 Versioning: a ``KeySchema`` is constructed at a pinned ``version``; bumping
 the layout means adding a new version branch here (and a migration note in
 docs/API.md) — never editing v1 in place, because validator replay and the
@@ -73,13 +87,14 @@ import dataclasses
 import re
 
 SCHEMA_VERSION = 1
-SUPPORTED_VERSIONS = (1, 2, 3, 4)
+SUPPORTED_VERSIONS = (1, 2, 3, 4, 5)
 
 # namespaces (the first path segment; StateStore accounts bytes per namespace)
 NS_ACTIVATIONS = "activations"
 NS_WEIGHTS = "weights"
 NS_SCORES = "scores"
 NS_CONTROL = "control"
+NS_SERVE = "serve"
 
 _V1_PATTERNS = (
     ("tokens", re.compile(r"^activations/ep(?P<epoch>\d+)/t(?P<tick>\d+)/tokens$")),
@@ -126,6 +141,18 @@ _V3_PATTERNS = (
 _V4_PATTERNS = (
     ("plan_rev", re.compile(
         r"^control/ep(?P<epoch>\d+)/plan/r(?P<rev>\d+)$")),
+)
+
+# v5 additions: the serve plane (fresh ``serve/`` namespace; docs/SERVE.md)
+_V5_PATTERNS = (
+    ("serve_plan", re.compile(r"^serve/plan$")),
+    ("serve_round_plan", re.compile(r"^serve/round(?P<round>\d+)/plan$")),
+    ("serve_code", re.compile(
+        r"^serve/round(?P<round>\d+)/l(?P<lane>\d+)/s(?P<stage>\d+)$")),
+    ("serve_token", re.compile(
+        r"^serve/req(?P<req>\d+)/tok(?P<index>\d+)$")),
+    ("serve_done", re.compile(r"^serve/req(?P<req>\d+)/done$")),
+    ("serve_request", re.compile(r"^serve/req(?P<req>\d+)$")),
 )
 
 
@@ -234,6 +261,49 @@ class KeySchema:
         assert rev >= 1, "plan revisions start at 1 (r0 is the base plan)"
         return f"control/ep{epoch}/plan/r{rev}"
 
+    # -- serve plane (version 5, inference workload — docs/SERVE.md) -----
+
+    def _require_v5(self, kind: str) -> None:
+        if self.version < 5:
+            raise ValueError(
+                f"{kind} keys need KeySchema version >= 5 "
+                f"(this schema is v{self.version}); serve fleets construct "
+                f"their transport with KeySchema(version=5)")
+
+    def serve_plan(self) -> str:
+        """The serve session spec (stage count, lane count, wire codec) —
+        published once so serve actors can derive everything else."""
+        self._require_v5("serve_plan")
+        return "serve/plan"
+
+    def serve_round_plan(self, round_: int) -> str:
+        """Round ``round_``'s lane plan: which request occupies each lane
+        and whether its slot is a prefill or a decode step."""
+        self._require_v5("serve_round_plan")
+        return f"serve/round{round_}/plan"
+
+    def serve_code(self, round_: int, lane: int, stage: int) -> str:
+        """Stage ``stage``'s boundary output for ``lane`` in one round —
+        a wire code mid-chain, last-token logits on the final stage."""
+        self._require_v5("serve_code")
+        return f"serve/round{round_}/l{lane}/s{stage}"
+
+    def serve_request(self, req: int) -> str:
+        """Request ``req``'s prompt envelope (tokens + sampling params)."""
+        self._require_v5("serve_request")
+        return f"serve/req{req}"
+
+    def serve_token(self, req: int, index: int) -> str:
+        """Token ``index`` emitted for request ``req`` (0 = first sampled
+        token, i.e. the prefill's continuation)."""
+        self._require_v5("serve_token")
+        return f"serve/req{req}/tok{index}"
+
+    def serve_done(self, req: int) -> str:
+        """Completion marker for request ``req`` (latency stats payload)."""
+        self._require_v5("serve_done")
+        return f"serve/req{req}/done"
+
     # -- score plane -----------------------------------------------------
 
     def score(self, epoch: int, validator_uid: int, miner_uid: int) -> str:
@@ -263,6 +333,18 @@ class KeySchema:
         self._require_v3("control_prefix")
         return f"control/ep{epoch}"
 
+    def serve_round_prefix(self, round_: int) -> str:
+        """All boundary codes + the lane plan of one decode round — the
+        serve driver GCs rounds as lanes drain them."""
+        self._require_v5("serve_round_prefix")
+        return f"serve/round{round_}"
+
+    def serve_request_prefix(self, req: int) -> str:
+        """Everything a finished request left behind (envelope, tokens,
+        done marker)."""
+        self._require_v5("serve_request_prefix")
+        return f"serve/req{req}"
+
     # -- parsing ---------------------------------------------------------
 
     def parse(self, key: str) -> ParsedKey:
@@ -279,6 +361,8 @@ class KeySchema:
             patterns = _V3_PATTERNS + patterns
         if self.version >= 4:
             patterns = _V4_PATTERNS + patterns
+        if self.version >= 5:
+            patterns = _V5_PATTERNS + patterns
         for kind, pat in patterns:
             m = pat.match(key)
             if m:

@@ -28,6 +28,15 @@ independent processes polling the store; runtime/actor.py):
                    replay starts here)
   HeartbeatMsg     actor liveness/progress; rides the actor's TCP health
                    endpoint (and optionally the store, under control/hb/)
+
+KeySchema v5 adds the serve plane (inference as a pipeline workload;
+docs/SERVE.md):
+  ServePlanMsg     the serve session spec (stages, lanes, wire codec)
+  ServeRoundPlanMsg  one decode round's lane plan (admission/retire)
+  ServeCodeMsg     a stage's boundary output for one (round, lane)
+  ServeRequestMsg  a request's prompt envelope
+  ServeTokenMsg    one emitted token of a request
+  ServeDoneMsg     request completion marker (latency stats payload)
 """
 from __future__ import annotations
 
@@ -216,13 +225,83 @@ class HeartbeatMsg:
         return schema.heartbeat(self.actor)
 
 
+@dataclasses.dataclass(frozen=True)
+class ServePlanMsg:
+    """The serve session spec (KeySchema v5): published once per session
+    so serve actors can derive stage programs, lane caches and every
+    later key from one store read."""
+
+    def key(self, schema: KeySchema) -> str:
+        return schema.serve_plan()
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeRoundPlanMsg:
+    """One decode round's lane plan (KeySchema v5): which request
+    occupies each lane and whether its slot is a prefill (admission) or
+    a decode step — the driver's continuous-batching decisions, made
+    between rounds so stage actors never recompile."""
+    round: int
+
+    def key(self, schema: KeySchema) -> str:
+        return schema.serve_round_plan(self.round)
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeCodeMsg:
+    """Stage ``stage``'s boundary output for ``lane`` in round ``round``
+    — a bottleneck wire code mid-chain (optionally the physical int8
+    pair), last-token logits on the final stage."""
+    round: int
+    lane: int
+    stage: int
+
+    def key(self, schema: KeySchema) -> str:
+        return schema.serve_code(self.round, self.lane, self.stage)
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeRequestMsg:
+    """Request ``req``'s prompt envelope (tokens + sampling params ride
+    the payload)."""
+    req: int
+
+    def key(self, schema: KeySchema) -> str:
+        return schema.serve_request(self.req)
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeTokenMsg:
+    """Token ``index`` emitted for request ``req`` (index 0 is the first
+    sampled continuation of the prompt)."""
+    req: int
+    index: int
+
+    def key(self, schema: KeySchema) -> str:
+        return schema.serve_token(self.req, self.index)
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeDoneMsg:
+    """Completion marker for request ``req``; the payload carries the
+    per-request latency record."""
+    req: int
+
+    def key(self, schema: KeySchema) -> str:
+        return schema.serve_done(self.req)
+
+
 Message = Union[ActivationMsg, GradientMsg, WeightUploadMsg, ShardUploadMsg,
                 ShardReducedMsg, AnchorMsg, ScoreMsg, LabelsMsg,
-                EpochPlanMsg, TickLossMsg, SnapshotMsg, HeartbeatMsg]
+                EpochPlanMsg, TickLossMsg, SnapshotMsg, HeartbeatMsg,
+                ServePlanMsg, ServeRoundPlanMsg, ServeCodeMsg,
+                ServeRequestMsg, ServeTokenMsg, ServeDoneMsg]
 
 MESSAGE_TYPES = (ActivationMsg, GradientMsg, WeightUploadMsg, ShardUploadMsg,
                  ShardReducedMsg, AnchorMsg, ScoreMsg, LabelsMsg,
-                 EpochPlanMsg, TickLossMsg, SnapshotMsg, HeartbeatMsg)
+                 EpochPlanMsg, TickLossMsg, SnapshotMsg, HeartbeatMsg,
+                 ServePlanMsg, ServeRoundPlanMsg, ServeCodeMsg,
+                 ServeRequestMsg, ServeTokenMsg, ServeDoneMsg)
 
 
 def message_for_key(key: str, schema: KeySchema) -> Message:
@@ -256,4 +335,16 @@ def message_for_key(key: str, schema: KeySchema) -> Message:
         return SnapshotMsg(f["epoch"], f["uid"])
     if parsed.kind == "heartbeat":
         return HeartbeatMsg(f["actor"])
+    if parsed.kind == "serve_plan":
+        return ServePlanMsg()
+    if parsed.kind == "serve_round_plan":
+        return ServeRoundPlanMsg(f["round"])
+    if parsed.kind == "serve_code":
+        return ServeCodeMsg(f["round"], f["lane"], f["stage"])
+    if parsed.kind == "serve_request":
+        return ServeRequestMsg(f["req"])
+    if parsed.kind == "serve_token":
+        return ServeTokenMsg(f["req"], f["index"])
+    if parsed.kind == "serve_done":
+        return ServeDoneMsg(f["req"])
     raise ValueError(f"unmapped key kind: {parsed.kind}")

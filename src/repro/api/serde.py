@@ -280,6 +280,14 @@ _register(_messages.EpochPlanMsg)
 _register(_messages.TickLossMsg)
 _register(_messages.SnapshotMsg)
 _register(_messages.HeartbeatMsg)
+# KeySchema v5: the serve plane (session/round plans, boundary codes,
+# request envelopes, emitted tokens, completion markers — docs/SERVE.md)
+_register(_messages.ServePlanMsg)
+_register(_messages.ServeRoundPlanMsg)
+_register(_messages.ServeCodeMsg)
+_register(_messages.ServeRequestMsg)
+_register(_messages.ServeTokenMsg)
+_register(_messages.ServeDoneMsg)
 
 
 def registered_message_names() -> tuple:

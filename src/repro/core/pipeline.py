@@ -96,7 +96,7 @@ from repro.models.layers import logits as logits_fn
 from repro.common import shard_map_unchecked as _shard_map
 
 
-SCHEDULES = ("gpipe", "1f1b", "interleaved", "zerobubble")
+SCHEDULES = ("gpipe", "1f1b", "interleaved", "zerobubble", "decode")
 WIRE_CODECS = ("none", "int8")
 
 # Timetable roles: every (stage, slot) cell does exactly one of these.
@@ -268,6 +268,15 @@ def _slot_maps(schedule: str, Pn: int, M: int, V: int):
                 f[(s, m)] = s + m
                 b[(s, m)] = Kf + (Pn - 1 - s) + m
         K = 2 * Kf
+    elif schedule == "decode":
+        # Forward-only token round: micro-batch slots are request lanes,
+        # each lane advances one token per round.  Lane m enters stage s
+        # at slot s + m; there is no backward/weight pass, so the round
+        # closes after the last lane drains the last stage.
+        for s in range(Pn):
+            for m in range(M):
+                f[(s, m)] = s + m
+        K = M + Pn - 1
     elif schedule in ("1f1b", "zerobubble"):
         for s in range(Pn):
             for m in range(M):
@@ -318,15 +327,23 @@ def _check_timetable(tt: "Timetable"):
     and ring lifetimes within the declared capacities."""
     Pn, V, M, K = tt.n_stages, tt.n_virtual, tt.n_micro, tt.n_slots
     C = Pn * V
+    # forward-only timetables (the decode schedule) have no B/W cells:
+    # skip the backward-ordering/transit checks and expect zero B/W roles
+    fwd_only = bool((tt.b_slot < 0).all())
     for c in range(C):
         d = c % Pn
         for m in range(M):
             fs, bs = int(tt.f_slot[c, m]), int(tt.b_slot[c, m])
-            if not 0 <= fs < bs < K:
+            if fwd_only:
+                if not 0 <= fs < K:
+                    raise ScheduleError(
+                        f"F slot out of range: chunk {c} micro {m}")
+            elif not 0 <= fs < bs < K:
                 raise ScheduleError(f"F/B order broken: chunk {c} micro {m}")
             if c > 0 and fs < int(tt.f_slot[c - 1, m]) + 1:
                 raise ScheduleError(f"F transit broken: chunk {c} micro {m}")
-            if c < C - 1 and bs < int(tt.b_slot[c + 1, m]) + 1:
+            if not fwd_only and c < C - 1 \
+                    and bs < int(tt.b_slot[c + 1, m]) + 1:
                 raise ScheduleError(f"B transit broken: chunk {c} micro {m}")
             ws = int(tt.w_slot[c, m])
             if ws >= 0 and not bs < ws < K:
@@ -337,13 +354,14 @@ def _check_timetable(tt: "Timetable"):
                 if int(tt.z_arrive[d, int(tt.f_slot[c - 1, m]) + 1]) < 0:
                     raise ScheduleError(
                         f"unmatched F send: chunk {c - 1} micro {m}")
-            if c < C - 1:
+            if not fwd_only and c < C - 1:
                 if int(tt.g_arrive[d, int(tt.b_slot[c + 1, m]) + 1]) < 0:
                     raise ScheduleError(
                         f"unmatched B send: chunk {c + 1} micro {m}")
     counts = [(tt.role == r).sum() for r in (ROLE_F, ROLE_B, ROLE_W)]
+    expect_b = 0 if fwd_only else C * M
     expect_w = C * M if (tt.w_slot >= 0).any() else 0
-    if counts[0] != C * M or counts[1] != C * M or counts[2] != expect_w:
+    if counts[0] != C * M or counts[1] != expect_b or counts[2] != expect_w:
         raise ScheduleError(f"role counts off: {counts}")
     if (tt.z_arrive >= tt.z_ring).any() or (tt.z_src >= tt.z_ring).any():
         raise ScheduleError("z ring index out of capacity")
@@ -397,7 +415,11 @@ def compile_timetable(schedule: str, n_stages: int, n_micro: int,
     # (W if the schedule splits backward, else B); a cotangent lives
     # arrival -> its consumer (B, and W for zerobubble)
     def last_use(c, m):
-        return w[(c, m)] if w else b[(c, m)]
+        if w:
+            return w[(c, m)]
+        if b:
+            return b[(c, m)]
+        return f[(c, m)]       # forward-only: consumed at its own F slot
 
     z_assign: dict = {}
     g_assign: dict = {}
@@ -408,7 +430,7 @@ def compile_timetable(schedule: str, n_stages: int, n_micro: int,
                      if c % Pn == d and c > 0}
         g_entries = {(c, m): (b[(c + 1, m)] + 1, last_use(c, m))
                      for c in range(C) for m in range(M)
-                     if c % Pn == d and c < C - 1}
+                     if c % Pn == d and c < C - 1} if b else {}
         za, zc = _greedy_ring(z_entries)
         ga, gc = _greedy_ring(g_entries)
         z_assign.update(za)
@@ -423,7 +445,8 @@ def compile_timetable(schedule: str, n_stages: int, n_micro: int,
         d = c % Pn
         z_arrive[d, f[(c - 1, m)] + 1] = ring_i
         z_src[d, f[(c, m)]] = ring_i
-        z_src[d, b[(c, m)]] = ring_i
+        if b:
+            z_src[d, b[(c, m)]] = ring_i
         if w:
             z_src[d, w[(c, m)]] = ring_i
     for (c, m), ring_i in g_assign.items():

@@ -55,6 +55,13 @@ def flash_attention(q, k, v, *, causal=True, q_offset=0, kv_len=None,
         return fa.flash_attention(
             q, k, v, causal=causal, q_offset=q_offset,
             softmax_scale=softmax_scale, interpret=_interpret())
+    if _use_pallas() and kv_len is not None and causal:
+        # cached decode/prefill: dynamic valid-prefix length, tiny q block —
+        # the kv-streaming kernel (inference-only; no vjp, see its module)
+        from repro.kernels import decode_attention as da
+        return da.decode_attention(
+            q, k, v, q_offset=q_offset, kv_len=kv_len,
+            softmax_scale=softmax_scale, interpret=_interpret())
     # §Perf finding (EXPERIMENTS.md): expressing the flash schedule as jnp
     # scans INCREASES HLO-level traffic (block tensors + carries still round
     # -trip HBM in the compiled graph; only a real kernel boundary keeps

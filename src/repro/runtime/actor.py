@@ -79,7 +79,7 @@ from repro.api.messages import (
     TickLossMsg,
     WeightUploadMsg,
 )
-from repro.api.phases import EventDriver
+from repro.api.phases import EventDriver, StageServer
 from repro.api.swarm import Swarm
 from repro.api.transport import SocketTransport
 from repro.common import cosine_similarity
@@ -210,7 +210,7 @@ class ActorSpec:
     ``snapshot_dir`` turns on the crash-resume ``DiskSnapshotCache``;
     ``chaos`` (a ``runtime.chaos.FaultSchedule``) wraps the child's
     transport; ``store_failover`` lists warm-standby store addresses."""
-    kind: str                 # "miner" | "validator"
+    kind: str                 # "miner" | "validator" | "server"
     uid: int
     stage: int                # -1 for validators
     model_cfg: ModelConfig
@@ -233,6 +233,7 @@ class ActorProcess:
     ``stop`` op on the health endpoint) ends the loop cleanly."""
 
     health_poll = 0.2         # accept() timeout: stop-flag check cadence
+    schema_version = 4        # key plane the actor speaks (serve uses v5)
 
     def __init__(self, spec: ActorSpec):
         self.spec = spec
@@ -251,7 +252,8 @@ class ActorProcess:
     def setup(self) -> None:
         S = self.spec.config
         self.transport = SocketTransport(
-            self.spec.store_address, schema=KeySchema(version=4),
+            self.spec.store_address,
+            schema=KeySchema(version=self.schema_version),
             failover=tuple(self.spec.store_failover or ()))
         if self.spec.chaos is not None:
             self.transport = wrap_transport(self.transport,
@@ -361,34 +363,39 @@ class ActorProcess:
         if ready_queue is not None:
             ready_queue.put((self.actor, srv.getsockname()[:2]))
         try:
-            while not self._stop.is_set():
-                self.state = "awaiting-plan"
-                plan_key = self.transport.schema.plan(self.epoch)
-                while True:
-                    try:
-                        self.queue.await_key(plan_key)
-                        break
-                    except TimeoutError:
-                        # idle between epochs is not a failure — but a
-                        # resumed actor may be awaiting a plan the swarm
-                        # GC'd: fast-forward to the newest visible one
-                        newest = self._newest_plan_epoch()
-                        if newest is not None and newest > self.epoch:
-                            self.epoch = newest
-                            plan_key = self.transport.schema.plan(
-                                self.epoch)
-                        continue
-                plan = self.transport.get(plan_key, actor=self.actor)
-                if plan.get("stop"):
-                    break
-                self.state = "working"
-                self.process_epoch(plan)
-                self.epoch += 1
+            self._main_loop()
         except ActorStopped:
             pass
         finally:
             self.state = "stopped"
             self.shutdown()
+
+    def _main_loop(self) -> None:
+        """Plan-driven work loop; ``ServeActor`` overrides this with the
+        round-plan variant (same health/ready/stop machinery in run())."""
+        while not self._stop.is_set():
+            self.state = "awaiting-plan"
+            plan_key = self.transport.schema.plan(self.epoch)
+            while True:
+                try:
+                    self.queue.await_key(plan_key)
+                    break
+                except TimeoutError:
+                    # idle between epochs is not a failure — but a
+                    # resumed actor may be awaiting a plan the swarm
+                    # GC'd: fast-forward to the newest visible one
+                    newest = self._newest_plan_epoch()
+                    if newest is not None and newest > self.epoch:
+                        self.epoch = newest
+                        plan_key = self.transport.schema.plan(
+                            self.epoch)
+                    continue
+            plan = self.transport.get(plan_key, actor=self.actor)
+            if plan.get("stop"):
+                break
+            self.state = "working"
+            self.process_epoch(plan)
+            self.epoch += 1
 
 
 class MinerActor(ActorProcess):
@@ -807,10 +814,76 @@ class ValidatorActor(ActorProcess):
             actor=self.actor)
 
 
+class ServeActor(ActorProcess):
+    """One decode-pipeline stage as a store-driven process (kind
+    ``"server"``): the serve-plane sibling of ``MinerActor``.
+
+    The loop speaks KeySchema v5: await the session plan (``serve/plan``
+    — lane count, max length, wire codec, weight seed), build the
+    ``StageServer`` with deterministically re-derived stage params, then
+    process round plans (``serve/round{N}/plan``) in order until one
+    carries ``stop``.  All compute is deterministic and sampling lives in
+    the driver, so an actor fleet serves tokens bit-identical to the
+    in-process pipeline and the sequential oracle."""
+
+    schema_version = 5
+
+    def __init__(self, spec: ActorSpec):
+        super().__init__(spec)
+        self.server: Optional[StageServer] = None
+        self.round = 0
+
+    def process_epoch(self, plan: dict) -> None:
+        """One round plan: run this stage's timetable cells.  For a fixed
+        stage the decode timetable orders slots by ascending lane
+        (``f[(s, m)] = s + m``), which is the order entries arrive in."""
+        schema = self.transport.schema
+        for entry in plan["entries"]:
+            self.server.process_slot(self.transport, schema,
+                                     self.round, entry)
+            self.items_done += 1
+
+    def _main_loop(self) -> None:
+        schema = self.transport.schema
+        self.state = "awaiting-plan"
+        while not self._stop.is_set():
+            try:
+                self.queue.await_key(schema.serve_plan())
+                break
+            except TimeoutError:
+                continue          # no session yet — idle, not a failure
+        if self._stop.is_set():
+            return
+        sess = self.transport.get(schema.serve_plan(), actor=self.actor)
+        self.server = StageServer(
+            self.model_spec, self.spec.stage,
+            sm.serve_stage_params(self.model_spec, int(sess["seed"]),
+                                  self.spec.stage),
+            n_lanes=int(sess["n_lanes"]), max_len=int(sess["max_len"]),
+            wire_codec=str(sess["wire_codec"]))
+        while not self._stop.is_set():
+            self.state = "awaiting-plan"
+            plan_key = schema.serve_round_plan(self.round)
+            try:
+                self.queue.await_key(plan_key)
+            except TimeoutError:
+                continue          # idle between rounds is not a failure
+            plan = self.transport.get(plan_key, actor=self.actor)
+            if plan.get("stop"):
+                break
+            self.state = "working"
+            self.process_epoch(plan)
+            self.round += 1
+            self.epoch = self.round   # heartbeat visibility
+
+
+_ACTOR_KINDS = {"miner": MinerActor, "validator": ValidatorActor,
+                "server": ServeActor}
+
+
 def _child_main(spec: ActorSpec, ready_queue: Any) -> None:
     """Spawn entry point (module-level: the child pickles a reference)."""
-    cls = MinerActor if spec.kind == "miner" else ValidatorActor
-    cls(spec).run(ready_queue)
+    _ACTOR_KINDS[spec.kind](spec).run(ready_queue)
 
 
 class ActorSupervisor:

@@ -12,6 +12,14 @@ Roles:
 Backward passes recompute the stage forward under ``jax.vjp`` from the
 stored input — faithful to miners keeping activations locally while only
 boundary activations transit the store.
+
+``StageProgram`` packages the same layer slice as a *workload-agnostic*
+program: the train plane (``forward``/``backward``/``loss_and_grads``) and
+a serve plane (``prefill``/``decode_step``) that threads stage-local
+KV-cache state through the identical slice, with the bottleneck boundary
+codec (and optional int8 wire codec) applied uniformly at stage
+entry/exit for both workloads.  Serving is a second program on the same
+stage graph, not a parallel implementation (docs/SERVE.md).
 """
 from __future__ import annotations
 
@@ -25,6 +33,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core import bottleneck as bn
+from repro.kernels import ops
 from repro.models import blocks as blk
 from repro.models.layers import (
     embed,
@@ -36,6 +45,7 @@ from repro.models.layers import (
 )
 
 WIRE_DTYPE = jnp.bfloat16
+SERVE_WIRE_CODECS = ("none", "int8")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -86,7 +96,12 @@ class SwarmModelSpec:
         return "last" if c == self.n_chunks - 1 else "mid"
 
 
-def init_stage_params(key, spec: SwarmModelSpec, stage: int) -> dict:
+def init_stage_params(key, spec: SwarmModelSpec, stage: int,
+                      role: str | None = None) -> dict:
+    """Stage parameters gated by boundary role.  ``role`` defaults to the
+    pipeline role (``spec.role(stage)``); the serve plane passes "solo"
+    for a one-stage program, which owns both boundary heads (embedding
+    entry + logits exit) and no mid-chain codec."""
     cfg = spec.cfg
     ks = jax.random.split(key, 4)
     kind = blk.period_kinds(cfg)[0]
@@ -94,18 +109,18 @@ def init_stage_params(key, spec: SwarmModelSpec, stage: int) -> dict:
               for l in range(spec.layers_per_stage)]
     p: dict = {"blocks": jax.tree.map(lambda *xs: jnp.stack(xs), *layers)}
     d, db = cfg.d_model, spec.bottleneck_dim
-    role = spec.role(stage)
-    if role == "first":
+    role = role if role is not None else spec.role(stage)
+    if role in ("first", "solo"):
         p["embeds"] = {"embed": init_embeddings(ks[1], cfg)["embed"]}
-    if role != "first" and spec.compress:
+    if role in ("mid", "last") and spec.compress:
         from repro.models.layers import dense_init
         p["w_up"] = dense_init(ks[2], db, d, scale=1.0 / np.sqrt(db))
         p["alpha_dec"] = jnp.asarray(0.5, jnp.float32)
-    if role != "last" and spec.compress:
+    if role in ("first", "mid") and spec.compress:
         from repro.models.layers import dense_init
         p["enc_norm"] = norm_init(d)
         p["w_down"] = dense_init(ks[3], d, db)
-    if role == "last":
+    if role in ("last", "solo"):
         p["final_norm"] = norm_init(d)
         p["unembed"] = init_embeddings(
             jax.random.fold_in(ks[1], 7), cfg)["unembed"]
@@ -126,23 +141,46 @@ def _blocks_apply(p_blocks, x, cfg: ModelConfig):
     return x
 
 
-@partial(jax.jit, static_argnames=("spec", "role"))
-def stage_forward(params: dict, x_in, spec: SwarmModelSpec, role: str):
-    """x_in: tokens (first) or wire code z (mid/last).  Returns the stage
+def _blocks_apply_cached(p_blocks, x, cfg: ModelConfig, cache):
+    """Cached variant: threads one stacked per-layer block state (the
+    stage-local KV cache) through the slice.  Positions are absolute —
+    offset by each layer's cache length (all layers advance in lockstep,
+    so the per-layer scalar is the request's decoded length)."""
+    kind = blk.period_kinds(cfg)[0]
+    B, S = x.shape[0], x.shape[1]
 
-    output (wire code, or logits for the last stage)."""
+    def body(h, xs):
+        lp, st = xs
+        pos = jnp.broadcast_to(
+            st.length + jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+        ctx = blk.BlockCtx(cfg=cfg, ma=None, positions=pos)
+        h, st2, _ = blk.apply_block(kind, lp, h, ctx, st)
+        return h, st2
+
+    x, cache = jax.lax.scan(body, x, (p_blocks, cache))
+    return x, cache
+
+
+def _stage_entry(params: dict, x_in, spec: SwarmModelSpec, role: str):
+    """Boundary decode at stage entry: token embedding on the first
+    stage, bottleneck decode (w_up, alpha) elsewhere.  Shared by the
+    train and serve planes so the codec math cannot drift."""
     cfg = spec.cfg
-    if role == "first":
-        x = embed({"embed": params["embeds"]["embed"]}, x_in, cfg, None)
-    else:
-        if spec.compress:
-            x = (x_in.astype(jnp.float32) @ params["w_up"].astype(jnp.float32)
-                 ).astype(jnp.bfloat16)
-            x = params["alpha_dec"].astype(jnp.bfloat16) * x
-        else:
-            x = x_in.astype(jnp.bfloat16)
-    x = _blocks_apply(params["blocks"], x, cfg)
-    if role == "last":
+    if role in ("first", "solo"):
+        return embed({"embed": params["embeds"]["embed"]}, x_in, cfg, None)
+    if spec.compress:
+        x = (x_in.astype(jnp.float32) @ params["w_up"].astype(jnp.float32)
+             ).astype(jnp.bfloat16)
+        return params["alpha_dec"].astype(jnp.bfloat16) * x
+    return x_in.astype(jnp.bfloat16)
+
+
+def _stage_exit(params: dict, x, spec: SwarmModelSpec, role: str):
+    """Boundary encode at stage exit: logits on the last stage,
+    bottleneck encode (enc_norm, w_down) elsewhere.  Shared by both
+    workload planes."""
+    cfg = spec.cfg
+    if role in ("last", "solo"):
         x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
         return logits_fn({"embed": params["unembed"]}, x, cfg, None)
     if spec.compress:
@@ -150,6 +188,42 @@ def stage_forward(params: dict, x_in, spec: SwarmModelSpec, role: str):
         return (xn.astype(jnp.float32) @ params["w_down"].astype(jnp.float32)
                 ).astype(WIRE_DTYPE)
     return x.astype(WIRE_DTYPE)
+
+
+@partial(jax.jit, static_argnames=("spec", "role"))
+def stage_forward(params: dict, x_in, spec: SwarmModelSpec, role: str):
+    """x_in: tokens (first) or wire code z (mid/last).  Returns the stage
+
+    output (wire code, or logits for the last stage)."""
+    x = _stage_entry(params, x_in, spec, role)
+    x = _blocks_apply(params["blocks"], x, spec.cfg)
+    return _stage_exit(params, x, spec, role)
+
+
+@partial(jax.jit, static_argnames=("spec", "role"))
+def stage_decode_step(params: dict, x_in, cache, spec: SwarmModelSpec,
+                      role: str):
+    """Serve-plane stage step: the same layer slice and boundary codecs
+    as ``stage_forward``, threading the stage-local KV cache.  ``x_in``
+    is tokens (first stage) or a wire code, with S >= 1 — the one entry
+    point serves both prefill (whole prompt) and decode (one token).
+    Returns (stage output, updated cache)."""
+    x = _stage_entry(params, x_in, spec, role)
+    x, cache = _blocks_apply_cached(params["blocks"], x, spec.cfg, cache)
+    return _stage_exit(params, x, spec, role), cache
+
+
+def init_stage_cache(spec: SwarmModelSpec, stage: int, batch: int,
+                     max_len: int, dtype=WIRE_DTYPE):
+    """Stage-local KV cache: stacked per-layer block state for this
+    stage's slice, shaped like the stacked params ``lax.scan`` consumes."""
+    cfg = spec.cfg
+    kind = blk.period_kinds(cfg)[0]
+    assert kind.startswith("attn"), (
+        f"serve plane needs KV-cache block states; got block kind {kind!r}")
+    states = [blk.init_block_state(kind, cfg, batch, max_len, dtype)
+              for _ in range(spec.layers_per_stage)]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *states)
 
 
 @partial(jax.jit, static_argnames=("spec",))
@@ -180,3 +254,113 @@ def stage_backward(params: dict, x_in, g_out, spec: SwarmModelSpec, role: str):
     g_params, g_x = vjp(g_out.astype(WIRE_DTYPE) if spec.compress
                         else g_out.astype(WIRE_DTYPE))
     return g_params, g_x
+
+
+# ---------------------------------------------------------------------------
+# StageProgram: the workload-agnostic face of one stage
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class StageProgram:
+    """One stage's layer slice as a workload-agnostic program.
+
+    Named entry points over the same parameters and boundary codecs:
+
+      train plane: ``forward`` / ``backward`` / ``loss_and_grads``
+      serve plane: ``init_cache`` / ``prefill`` / ``decode_step``
+
+    The serve entries thread stage-local KV-cache state (one stacked
+    per-layer block state) through the identical slice; ``encode_wire``
+    / ``decode_wire`` apply the optional int8 wire codec to boundary
+    codes so every consumer (pipelined driver, sequential oracle, actor
+    fleet) ships bit-identical activations.  The contract is documented
+    in docs/SERVE.md.
+    """
+    spec: SwarmModelSpec
+    stage: int
+    wire_codec: str = "none"      # "none" | "int8" (SERVE_WIRE_CODECS)
+
+    def __post_init__(self):
+        assert self.wire_codec in SERVE_WIRE_CODECS, self.wire_codec
+        assert 0 <= self.stage < self.spec.n_stages, self.stage
+
+    @property
+    def role(self) -> str:
+        # a one-stage program is the whole model: embedding entry AND
+        # logits exit, with no wire codec on either side
+        if self.spec.n_chunks == 1:
+            return "solo"
+        return self.spec.role(self.stage)
+
+    # ---- train plane ----
+    def forward(self, params: dict, x_in):
+        return stage_forward(params, x_in, self.spec, self.role)
+
+    def backward(self, params: dict, x_in, g_out):
+        return stage_backward(params, x_in, g_out, self.spec, self.role)
+
+    def loss_and_grads(self, params: dict, z_in, labels):
+        return last_stage_loss_and_grads(params, z_in, labels, self.spec)
+
+    # ---- serve plane ----
+    def init_cache(self, batch: int, max_len: int, dtype=WIRE_DTYPE):
+        return init_stage_cache(self.spec, self.stage, batch, max_len, dtype)
+
+    def prefill(self, params: dict, x_in, cache):
+        """Run the whole prompt through the slice into a fresh cache."""
+        return stage_decode_step(params, x_in, cache, self.spec, self.role)
+
+    def decode_step(self, params: dict, x_in, cache):
+        """Advance one token (S=1) through the slice."""
+        return stage_decode_step(params, x_in, cache, self.spec, self.role)
+
+    # ---- boundary wire codec (stage exit -> transport -> next entry) ----
+    def encode_wire(self, code) -> dict:
+        """Wire payload for this stage's output.  Mid-chain bottleneck
+        codes optionally ship as the physical int8 (codes, scales) pair;
+        last-stage logits always ship uncompressed."""
+        if self.role in ("last", "solo") or self.wire_codec != "int8":
+            return {"code": np.asarray(code)}
+        q, s = ops.wire_encode(code)
+        return {"q": np.asarray(q), "s": np.asarray(s)}
+
+    @staticmethod
+    def decode_wire(payload: dict):
+        """Inverse of ``encode_wire`` — int8 pairs dequantize to exact
+        f32 products (q * scale), uncompressed codes pass through."""
+        if "code" in payload:
+            return jnp.asarray(payload["code"])
+        return ops.wire_decode(jnp.asarray(payload["q"]),
+                               jnp.asarray(payload["s"]))
+
+
+def sample_token(logits, *, temperature: float, key):
+    """One sampling decision shared by every serve path: greedy argmax at
+    temperature 0, categorical otherwise.  ``logits`` is (B, vocab);
+    returns (B,) int32."""
+    logits = jnp.asarray(logits, jnp.float32)
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(
+        key, logits / jnp.float32(temperature), axis=-1).astype(jnp.int32)
+
+
+def request_key(seed: int, req_id: int, index: int):
+    """Deterministic per-(request, token) sampling key — identical for
+    the pipelined driver and the sequential oracle at the same seed."""
+    k = jax.random.fold_in(jax.random.PRNGKey(seed), req_id)
+    return jax.random.fold_in(k, index)
+
+
+def serve_stage_params(spec: SwarmModelSpec, seed: int, stage: int) -> dict:
+    """Stage weights for serving, derived from ``(seed, stage)`` with the
+    same fold-in convention the train swarm uses for stage anchors — so
+    the sequential oracle, in-process ``StageServer``s and remote
+    ``ServeActor`` fleets all hold identical params without weights ever
+    crossing a process boundary.  A one-stage swarm serves the "solo"
+    role (both boundary heads) rather than the pipeline's "first"."""
+    role = "solo" if spec.n_chunks == 1 else spec.role(stage)
+    return init_stage_params(
+        jax.random.fold_in(jax.random.key(seed), stage), spec, stage,
+        role=role)

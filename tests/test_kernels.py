@@ -9,6 +9,7 @@ from numpy.testing import assert_allclose
 
 from repro.kernels import (
     bottleneck_fused as bf,
+    decode_attention as da,
     flash_attention as fa,
     quant_stream as qs,
     ref,
@@ -117,6 +118,44 @@ def test_flash_attention_blocked_vs_small_blocks():
     small = fa._flash_call(q.transpose(0, 2, 1, 3), q.transpose(0, 2, 1, 3),
                            q.transpose(0, 2, 1, 3), causal=True, q_offset=0,
                            scale=0.125, interpret=True, bq=64, bkv=32)
+    assert_allclose(np.asarray(big), np.asarray(small), rtol=2e-5, atol=2e-5)
+
+
+DA_CASES = [
+    # (B, Sq, S_max, kv_len, H, KH, D): q rows sit at [kv_len - Sq, kv_len)
+    (1, 1, 64, 9, 4, 4, 32),                   # single-token decode
+    (2, 1, 128, 65, 4, 2, 64),                 # GQA decode, 2 lanes
+    (1, 16, 144, 16, 4, 2, 32),                # prefill into an empty cache
+    (1, 8, 200, 108, 8, 1, 64),                # MQA, non-multiple of block
+]
+
+
+@pytest.mark.parametrize("case", DA_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention_sweep(case, dtype):
+    B, Sq, Smax, L, H, KH, D = case
+    q = jnp.asarray(RNG.randn(B, Sq, H, D), dtype)
+    k = jnp.asarray(RNG.randn(B, Smax, KH, D), dtype)
+    v = jnp.asarray(RNG.randn(B, Smax, KH, D), dtype)
+    lens = jnp.full((B,), L, jnp.int32)
+    off = L - Sq                           # absolute position of q row 0
+    got = da.decode_attention(q, k, v, q_offset=off, kv_len=lens,
+                              interpret=True, bkv=64)
+    want = ref.attention(q, k, v, causal=True, q_offset=off, kv_len=lens)
+    assert_allclose(np.asarray(got, np.float32), np.asarray(want, np.float32),
+                    **_tol(dtype))
+
+
+def test_decode_attention_block_invariance():
+    """Online softmax: result independent of the kv block partitioning,
+    including blocks that fall entirely past the valid prefix."""
+    q = jnp.asarray(RNG.randn(1, 1, 4, 32), jnp.float32)
+    k = jnp.asarray(RNG.randn(1, 256, 4, 32), jnp.float32)
+    lens = jnp.asarray([33], jnp.int32)
+    big = da.decode_attention(q, k, k, q_offset=32, kv_len=lens,
+                              interpret=True, bkv=256)
+    small = da.decode_attention(q, k, k, q_offset=32, kv_len=lens,
+                                interpret=True, bkv=32)
     assert_allclose(np.asarray(big), np.asarray(small), rtol=2e-5, atol=2e-5)
 
 

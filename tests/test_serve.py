@@ -1,0 +1,245 @@
+"""Serve plane: decode timetable, v5 serve keys, StageProgram KV-cache
+semantics, and the headline parity contract — the pipelined continuous-
+batching ``ServeDriver`` emits tokens bit-identical to the sequential
+``swarm_generate`` oracle at the same seed, on every transport.
+
+Cheap tests run the driver in-process; one socket test pushes every
+payload through a real ``StoreServer``; one slow-marked test spawns a
+``ServeActor`` fleet.  The mid-flight admission regression pins the
+continuous-batching invariant: admitting a request into a free lane
+never changes tokens already streaming on other lanes.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api.keys import KeySchema
+from repro.api.phases import ServeDriver, ServeRequest, StageServer
+from repro.api.transport import InProcessTransport, SocketTransport
+from repro.configs import get, smoke_variant
+from repro.core.pipeline import ROLE_B, ROLE_F, ROLE_W, compile_timetable
+from repro.launch.serve import build_servers, serve_swarm, swarm_generate
+from repro.runtime import stage_model as sm
+from repro.runtime.store_server import StoreServer
+
+
+def _mcfg(n_layers):
+    return dataclasses.replace(smoke_variant(get("llama3.2-1b")).model,
+                               n_layers=n_layers)
+
+
+def _spec(n_stages):
+    return sm.SwarmModelSpec(_mcfg(n_layers=n_stages), n_stages)
+
+
+def _prompts(spec, n, length, seed=1):
+    return jax.random.randint(jax.random.key(seed), (n, length), 3,
+                              spec.cfg.vocab_size, jnp.int32)
+
+
+def _requests(spec, n, length, max_new=4, temperature=0.0):
+    toks = _prompts(spec, n, length)
+    return [ServeRequest(req=i, prompt=np.asarray(toks[i]), max_new=max_new,
+                         temperature=temperature) for i in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# decode timetable
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("P", [1, 2, 4])
+@pytest.mark.parametrize("M", [1, 3, 8])
+def test_decode_timetable_shape(P, M):
+    tt = compile_timetable("decode", P, M)
+    assert tt.n_slots == M + P - 1
+    # forward-only: every cell is idle or F, lane m hits stage s at s + m
+    roles = set(np.unique(tt.role).tolist())
+    assert ROLE_B not in roles and ROLE_W not in roles
+    for s in range(P):
+        for m in range(M):
+            t = s + m
+            assert int(tt.role[s, t]) == ROLE_F
+            assert int(tt.micro[s, t]) == m
+
+
+def test_decode_timetable_ring_capacity_one():
+    """Arrival slot == consumption slot: the decode schedule needs exactly
+    one in-flight boundary payload per link, independent of lane count."""
+    for M in (1, 4, 16):
+        tt = compile_timetable("decode", 4, M)
+        assert tt.z_ring == 1
+
+
+def test_decode_bubble_fraction():
+    tt = compile_timetable("decode", 4, 8)
+    # (P-1)/(M+P-1) idle fraction per round
+    assert abs(tt.bubble_fraction() - 3 / 11) < 1e-9
+
+
+# ---------------------------------------------------------------------------
+# v5 serve keys
+# ---------------------------------------------------------------------------
+
+
+def test_serve_keys_roundtrip():
+    ks = KeySchema(version=5)
+    for key, kind, fields in [
+        (ks.serve_plan(), "serve_plan", {}),
+        (ks.serve_round_plan(7), "serve_round_plan", {"round": 7}),
+        (ks.serve_code(3, 1, 2), "serve_code",
+         {"round": 3, "lane": 1, "stage": 2}),
+        (ks.serve_request(9), "serve_request", {"req": 9}),
+        (ks.serve_token(9, 4), "serve_token", {"req": 9, "index": 4}),
+        (ks.serve_done(9), "serve_done", {"req": 9}),
+    ]:
+        parsed = ks.parse(key)
+        assert parsed.kind == kind and parsed.fields == fields
+    assert ks.serve_code(3, 1, 2).startswith(ks.serve_round_prefix(3))
+
+
+def test_serve_keys_require_v5():
+    with pytest.raises(ValueError):
+        KeySchema(version=4).serve_plan()
+
+
+# ---------------------------------------------------------------------------
+# StageProgram serve plane
+# ---------------------------------------------------------------------------
+
+
+def test_stage_program_incremental_decode_matches_full_forward():
+    """Prefill + token-at-a-time decode through the KV cache reproduces
+    the no-cache forward on the same token stream (last-position logits)."""
+    spec = _spec(1)
+    prog = sm.StageProgram(spec, 0)
+    params = sm.serve_stage_params(spec, 0, 0)
+    toks = np.asarray(_prompts(spec, 1, 6))
+
+    cache = prog.init_cache(1, 6)
+    out = None
+    for t in range(toks.shape[1]):
+        out, cache = prog.decode_step(params, jnp.asarray(toks[:, t:t + 1]),
+                                      cache)
+    full = sm.stage_forward(params, jnp.asarray(toks), spec, "solo")
+    np.testing.assert_allclose(np.asarray(out[0, -1], np.float32),
+                               np.asarray(full[0, -1], np.float32),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_stage_server_lane_isolation():
+    """Resetting / advancing one lane's cache leaves other lanes' caches
+    bit-identical — the invariant admission safety rests on."""
+    spec = _spec(1)
+    srv = StageServer(spec, 0, sm.serve_stage_params(spec, 0, 0),
+                      n_lanes=3, max_len=8)
+    toks = jnp.asarray(_prompts(spec, 1, 4))
+    _, srv.caches[1] = srv.program.decode_step(srv.params, toks,
+                                               srv.caches[1])
+    before = jax.tree.map(np.asarray, (srv.caches[0], srv.caches[2]))
+    srv.reset_lane(1)
+    _, srv.caches[1] = srv.program.decode_step(srv.params, toks,
+                                               srv.caches[1])
+    after = jax.tree.map(np.asarray, (srv.caches[0], srv.caches[2]))
+    jax.tree.map(np.testing.assert_array_equal, before, after)
+
+
+# ---------------------------------------------------------------------------
+# greedy parity: pipelined driver == sequential oracle
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("P", [1, 2, 4])
+def test_greedy_parity_inprocess(P):
+    spec = _spec(P)
+    reqs = _requests(spec, 3, 5, max_new=4)
+    records = serve_swarm(spec, reqs, n_lanes=2, max_len=9)
+    oracle = swarm_generate(spec, 0, reqs)
+    for r in reqs:
+        assert records[r.req].tokens == oracle[r.req]
+
+
+def test_parity_survives_temperature_sampling():
+    """Sampling keys fold (seed, req, index) only — stochastic decode is
+    reproducible and pipeline-order independent too."""
+    spec = _spec(2)
+    reqs = _requests(spec, 2, 5, max_new=4, temperature=0.8)
+    records = serve_swarm(spec, reqs, n_lanes=2, max_len=9)
+    oracle = swarm_generate(spec, 0, reqs)
+    for r in reqs:
+        assert records[r.req].tokens == oracle[r.req]
+
+
+def test_greedy_parity_int8_wire():
+    spec = _spec(2)
+    reqs = _requests(spec, 2, 5, max_new=3)
+    records = serve_swarm(spec, reqs, n_lanes=2, max_len=8,
+                          wire_codec="int8")
+    oracle = swarm_generate(spec, 0, reqs, wire_codec="int8")
+    for r in reqs:
+        assert records[r.req].tokens == oracle[r.req]
+
+
+def test_greedy_parity_socket():
+    """Every boundary code, round plan and token crosses a real socket
+    store; the stream still bit-matches the oracle."""
+    spec = _spec(2)
+    reqs = _requests(spec, 3, 5, max_new=3)
+    records = serve_swarm(spec, reqs, n_lanes=2, max_len=8,
+                          transport="socket")
+    oracle = swarm_generate(spec, 0, reqs)
+    for r in reqs:
+        assert records[r.req].tokens == oracle[r.req]
+
+
+def test_mid_flight_admission_does_not_perturb_running_lanes():
+    """Continuous batching: r2 arrives while r0/r1 are mid-decode and is
+    admitted into the first freed lane.  r0/r1's tokens must be identical
+    to a session where r2 never existed, and r2 still matches the oracle."""
+    spec = _spec(2)
+    base = _requests(spec, 3, 5, max_new=5)
+    staggered = [dataclasses.replace(base[0]),
+                 dataclasses.replace(base[1], max_new=2),
+                 dataclasses.replace(base[2], arrival_round=1)]
+    with_late = serve_swarm(spec, staggered, n_lanes=2, max_len=10)
+    without = serve_swarm(spec, staggered[:2], n_lanes=2, max_len=10)
+    for r in staggered[:2]:
+        assert with_late[r.req].tokens == without[r.req].tokens
+    oracle = swarm_generate(spec, 0, staggered)
+    for r in staggered:
+        assert with_late[r.req].tokens == oracle[r.req]
+
+
+def test_driver_round_accounting_and_latency_records():
+    spec = _spec(1)
+    reqs = _requests(spec, 2, 4, max_new=3)
+    tp = InProcessTransport(schema=KeySchema(version=5))
+    driver = ServeDriver(spec, tp, n_lanes=2, max_len=7,
+                         servers=build_servers(spec, 0, n_lanes=2,
+                                               max_len=7))
+    records = driver.run(reqs)
+    # both lanes run all 3 tokens concurrently: exactly 3 rounds
+    assert driver.rounds_run == 3
+    for rec in records.values():
+        assert len(rec.tokens) == 3
+        assert rec.ttft is not None and rec.total is not None
+        assert 0 <= rec.ttft <= rec.total
+    # round-scoped keys are GC'd; the per-request artifacts remain
+    assert not [k for k in tp.keys("serve/round")]
+    assert tp.exists(tp.schema.serve_done(0))
+
+
+@pytest.mark.slow
+def test_greedy_parity_actor_fleet():
+    """One spawned ServeActor process per stage, driven only by store
+    plans — the fleet serves the oracle's exact token stream."""
+    spec = _spec(2)
+    reqs = _requests(spec, 2, 5, max_new=3)
+    records = serve_swarm(spec, reqs, n_lanes=2, max_len=8,
+                          transport="actors", timeout=300.0)
+    oracle = swarm_generate(spec, 0, reqs)
+    for r in reqs:
+        assert records[r.req].tokens == oracle[r.req]
